@@ -1,0 +1,170 @@
+"""Analytic FLOP / HBM-byte model per (architecture x shape x mode).
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts each
+``lax.scan`` (while-loop) body ONCE, so for scan-over-layers models it
+undercounts by ~n_layers x (verified by calibration in
+tests/test_roofline.py).  The roofline therefore uses this analytic model —
+derived from the exact einsum shapes in repro.models — as the primary
+FLOP/byte source, with the HLO numbers recorded alongside for the parts
+they do capture.  Collective bytes come from the trip-count-aware HLO walk
+in repro.launch.dryrun.parse_collectives.
+
+All counts are GLOBAL (whole step, all chips); the roofline divides by the
+chip count.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.model import ModelConfig
+
+__all__ = ["forward_flops_per_token", "step_flops", "step_bytes"]
+
+
+def _attn_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
+    """One attention layer, one token, context length ``ctx``."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn_kind == "mla":
+        rq, rkv, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_rope_dim
+        proj = (
+            2 * d * rq
+            + 2 * rq * H * (hd + rd)
+            + 2 * d * (rkv + rd)
+            + 2 * rkv * H * 2 * hd
+            + 2 * H * hd * d
+        )
+        scores = 2 * H * (hd + rd) * ctx + 2 * H * hd * ctx
+    else:
+        proj = 2 * d * H * hd + 2 * 2 * d * KV * hd + 2 * H * hd * d
+        scores = 2 * 2 * H * hd * ctx
+    return proj + scores
+
+
+def _mlp_flops_per_token(cfg: ModelConfig, kind: str, ff: int = 0) -> float:
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    dense = 3 * 2 * d * ff
+    if kind == "dense":
+        return dense
+    if kind == "none":
+        return 0.0
+    # moe
+    routed = cfg.experts_per_token * 3 * 2 * d * cfg.d_ff
+    shared = cfg.n_shared_experts * 3 * 2 * d * cfg.d_ff
+    router = 2 * d * cfg.n_experts
+    residual = dense if cfg.moe_dense_residual else 0.0
+    return routed + shared + router + residual
+
+
+def _ssm_flops_per_token(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    P, N, Q = cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    proj = 2 * d * (2 * di + 2 * N + nh) + 2 * di * d
+    conv = 2 * cfg.ssm_conv * (di + 2 * N)
+    # SSD: intra-chunk quadratic (amortized per token) + state update + read
+    ssd = 2 * Q * N + 2 * Q * nh * P + 2 * 2 * nh * P * N
+    return proj + conv + ssd
+
+
+def forward_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
+    """Global forward FLOPs for one token with visible context ``ctx``."""
+    total = 0.0
+    # prefix layers (deepseek-v3 dense prefix)
+    for _ in range(cfg.first_dense_layers):
+        total += _attn_flops_per_token(cfg, ctx)
+        total += _mlp_flops_per_token(cfg, "dense", cfg.first_dense_ff)
+    for pos in range(cfg.period):
+        mixer, mlp = cfg.mixer_pattern[pos], cfg.mlp_pattern[pos]
+        per = 0.0
+        if mixer == "attn":
+            per += _attn_flops_per_token(cfg, ctx)
+        elif mixer == "cross":
+            per += _attn_flops_per_token(cfg, cfg.n_vision_tokens)
+        else:
+            per += _ssm_flops_per_token(cfg)
+        per += _mlp_flops_per_token(cfg, mlp)
+        total += per * cfg.n_periods
+    total += 2 * cfg.d_model * cfg.vocab  # unembed
+    if cfg.input_kind == "frames":
+        total += 2 * cfg.frame_dim * cfg.d_model
+    if cfg.mtp_depth:
+        total += (
+            _attn_flops_per_token(cfg, ctx)
+            + _mlp_flops_per_token(cfg, "dense")
+            + 2 * 2 * cfg.d_model * cfg.d_model  # mtp proj
+            + 2 * cfg.d_model * cfg.vocab
+        )
+    return total
+
+
+def step_flops(cfg: ModelConfig, *, seq: int, batch: int, mode: str,
+               sarah_double: bool = True, remat: bool = True) -> Dict[str, float]:
+    """Global FLOPs for one step of the given mode."""
+    if mode == "train":
+        ctx = seq / 2  # causal average context
+        if cfg.sliding_window:
+            ctx = min(ctx, cfg.sliding_window)
+        fwd = forward_flops_per_token(cfg, int(ctx)) * seq * batch
+        # grad eval = fwd + bwd(2x) + remat re-forward (1x)
+        grad_mult = 4.0 if remat else 3.0
+        mult = grad_mult * (2.0 if sarah_double else 1.0)
+        return {"forward": fwd, "total": mult * fwd}
+    if mode == "prefill":
+        ctx = seq / 2
+        fwd = forward_flops_per_token(cfg, int(ctx)) * seq * batch
+        return {"forward": fwd, "total": fwd}
+    # decode: one token against a cache of length seq
+    ctx = seq if not cfg.sliding_window else min(seq, cfg.sliding_window)
+    fwd = forward_flops_per_token(cfg, int(ctx)) * batch
+    return {"forward": fwd, "total": fwd}
+
+
+def _param_bytes(cfg: ModelConfig) -> float:
+    from repro.models.model import param_count
+
+    return param_count(cfg) * (2 if cfg.dtype == "bfloat16" else 4)
+
+
+def _cache_bytes(cfg: ModelConfig, seq: int, batch: int) -> float:
+    L = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    per_layer = 0.0
+    n_attn = cfg.first_dense_layers + sum(
+        1 for m in cfg.mixer_pattern if m == "attn"
+    ) * cfg.n_periods
+    n_ssm = sum(1 for m in cfg.mixer_pattern if m == "ssm") * cfg.n_periods
+    if cfg.attn_kind == "mla":
+        attn_bytes = n_attn * L * (cfg.kv_lora_rank + cfg.qk_rope_dim) * dt
+    else:
+        attn_bytes = n_attn * L * 2 * cfg.n_kv_heads * cfg.head_dim * dt
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim if cfg.ssm_state else 0
+    ssm_bytes = n_ssm * (nh * cfg.ssm_head_dim * cfg.ssm_state * 4)
+    return batch * (attn_bytes + ssm_bytes)
+
+
+def step_bytes(cfg: ModelConfig, *, seq: int, batch: int, mode: str) -> Dict[str, float]:
+    """Global HBM traffic estimate for one step (documented approximation):
+
+      train:   8x params (2 grad evals x [fwd read + bwd read + write]) +
+               3x gradient streams (message build / clip / aggregate) +
+               activations (c*B*S*d*L bytes, c~16 incl. recompute)
+      prefill: params + activations (c~8, no bwd)
+      decode:  params + full cache read + cache write (1 token)
+    """
+    pb = _param_bytes(cfg)
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    L = cfg.n_layers
+    act = batch * seq * cfg.d_model * L * dt
+    if mode == "train":
+        total = 8 * pb + 3 * pb + 16 * act
+        return {"params": pb, "activations": 16 * act, "total": total}
+    if mode == "prefill":
+        total = pb + 8 * act
+        return {"params": pb, "activations": 8 * act, "total": total}
+    cache = _cache_bytes(cfg, seq, batch)
+    act1 = batch * 1 * cfg.d_model * L * dt
+    total = pb + cache + act1
+    return {"params": pb, "cache": cache, "total": total}

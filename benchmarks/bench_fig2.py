@@ -1,0 +1,70 @@
+"""Benchmark for Figure 2 / Appendix F.2: the heuristic (eq. 10) on a
+heterogeneous MLP split — 2 aggregation rules (CM, RFA) x 4 attacks
+(BF, LF, ALIE, SHB) x {clip, noclip}.
+
+Reports final training loss per cell; the paper's claim is that clipping
+performs on par or better in every cell, and that no unclipped aggregator
+survives SHB.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import ClippedPPConfig, ClippedPPMomentum, mlp_problem
+
+STEPS = 500
+ATTACKS = ["bf", "lf", "alie", "shb"]
+AGGS = ["cm", "rfa"]
+
+
+def run(quick: bool = False):
+    steps = 80 if quick else STEPS
+    rows = []
+    for agg in AGGS:
+        for attack in ATTACKS:
+            prob = mlp_problem(
+                jax.random.PRNGKey(5), n_clients=20, n_good=15, m=128,
+                in_dim=32, hidden=16, heterogeneous=True,
+                label_flip_byz=(attack == "lf"),
+            )
+            # LF is data-level: byzantine clients train on flipped labels
+            # and otherwise follow the protocol (no message-level payload)
+            msg_attack = "none" if attack == "lf" else attack
+            for clip in (True, False):
+                cfg = ClippedPPConfig(
+                    gamma=0.15, C=4, attack=msg_attack, use_clipping=clip,
+                    aggregator=agg, bucket_s=2,
+                )
+                alg = ClippedPPMomentum(prob, cfg)
+                t0 = time.time()
+                _, m = jax.jit(lambda s: alg.run(steps, s))(alg.init())
+                wall = time.time() - t0
+                name = f"fig2_{agg}_{attack}_{'clip' if clip else 'noclip'}"
+                rows.append(
+                    (name, wall / steps * 1e6, f"loss={float(m['loss'][-1]):.4f}")
+                )
+
+    # The SHB separation requires byzantine-majority rounds to actually
+    # occur: with 5/20 byz and C=4 they hit only ~3% of rounds, so at CPU
+    # step counts clip and noclip look on-par (the paper's MNIST runs are
+    # far longer).  This cell raises the majority-round rate to ~18%
+    # (7 good + 3 byz, C=3) — the regime the attack targets — where the
+    # unclipped method visibly diverges and the clipped one keeps learning.
+    prob = mlp_problem(
+        jax.random.PRNGKey(5), n_clients=10, n_good=7, m=128,
+        in_dim=32, hidden=16, heterogeneous=True,
+    )
+    for clip in (True, False):
+        cfg = ClippedPPConfig(
+            gamma=0.15, C=3, attack="shb", use_clipping=clip,
+            aggregator="cm", bucket_s=2,
+        )
+        alg = ClippedPPMomentum(prob, cfg)
+        t0 = time.time()
+        _, m = jax.jit(lambda s: alg.run(steps, s))(alg.init())
+        wall = time.time() - t0
+        name = f"fig2_shb_majority_{'clip' if clip else 'noclip'}"
+        rows.append((name, wall / steps * 1e6, f"loss={float(m['loss'][-1]):.4f}"))
+    return rows

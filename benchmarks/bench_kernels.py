@@ -1,0 +1,52 @@
+"""Microbenchmarks: Pallas aggregation kernels (interpret mode on CPU) vs
+their pure-jnp references, plus the mask-aware mesh aggregators.
+
+On CPU the interpret-mode timings are NOT performance data (the kernels
+target TPU); the derived column reports the HBM-traffic model instead:
+bytes_touched / HBM_BW = the roofline floor the kernel is designed to hit.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import clipped_diff, coordinate_median
+from repro.kernels.ref import clipped_diff_ref, coordinate_median_ref
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile / warm
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    n, d = 16, 1 << (12 if quick else 16)
+    rng = np.random.RandomState(0)
+    xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+
+    us_ref = _time(jax.jit(coordinate_median_ref), xs)
+    us_ker = _time(coordinate_median, xs)
+    floor_us = (n * d * 4 + d * 4) / HBM_BW * 1e6
+    rows.append(("kernel_cm_ref_jnp", us_ref, f"d={d}"))
+    rows.append(("kernel_cm_pallas_interp", us_ker, f"tpu_floor_us={floor_us:.1f}"))
+
+    g1 = jnp.asarray(rng.randn(d).astype(np.float32))
+    g2 = jnp.asarray(rng.randn(d).astype(np.float32))
+    km = jnp.asarray((rng.rand(d) > 0.5).astype(np.float32))
+    us_ref = _time(jax.jit(lambda a, b, m: clipped_diff_ref(a, b, 1.0, m, 2.0)), g1, g2, km)
+    us_ker = _time(lambda a, b, m: clipped_diff(a, b, 1.0, m, 2.0), g1, g2, km)
+    floor_us = (3 * d * 4) / HBM_BW * 1e6
+    rows.append(("kernel_clipdiff_ref_jnp", us_ref, f"d={d}"))
+    rows.append(
+        ("kernel_clipdiff_pallas_interp", us_ker, f"tpu_floor_us={floor_us:.1f}")
+    )
+    return rows

@@ -1,0 +1,113 @@
+"""Fill EXPERIMENTS.md's generated tables from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report
+
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers with
+freshly generated markdown (idempotent: regenerates between marker pairs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import analyse_artifact
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _rows(pattern: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join("experiments/dryrun", pattern))):
+        rows.append(analyse_artifact(path))
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])
+                             if r["shape"] in ORDER else 9))
+    return rows
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mode | mesh | shard | params | per-chip HLO flops | "
+        "coll bytes/chip | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    seen_skips = []
+    for r in _rows("*_pod.json"):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | {r['mesh']} | "
+            f"{r['shard_mode']} | {r['params']/1e9:.1f}B | "
+            f"{r['hlo_flops_per_chip']:.2e} | "
+            f"{r['coll_bytes_per_chip']:.2e} | {r['compile_s']} |"
+        )
+    # multi-pod line summary
+    mp = _rows("*_multipod.json")
+    if mp:
+        ok = sum(1 for r in mp if not r.get("skipped"))
+        lines.append("")
+        lines.append(
+            f"Multi-pod (2x16x16 = 512 chips): **{ok} pairs lowered+compiled** "
+            "(artifacts `*_multipod.json`; giants use worker:=pod + FSDP over "
+            "data, see the memory-wall note)."
+        )
+    # skips
+    lines.append("")
+    lines.append("Skips: hubert-xlarge x {decode_32k, long_500k} — encoder-only"
+                 " architecture has no decode step (DESIGN.md §5).")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | "
+        "useful FLOP ratio | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    suggestions = {
+        ("train", "collective"): "replace per-layer TP all-reduces (zero3 / "
+        "larger per-chip batch); cut SARAH+remat re-gathers",
+        ("prefill", "collective"): "sequence-sharded attention; MoE a2a "
+        "locality (experts x tokens co-placement)",
+        ("decode", "collective"): "keep cache resident (replicated q, "
+        "L-sharded partial softmax); MLA absorbed decode",
+        ("train", "compute"): "already compute-bound: raise MFU via larger "
+        "microbatch / fused kernels",
+        ("decode", "memory"): "batched requests to amortize weight reads; "
+        "quantized cache",
+        ("prefill", "compute"): "good: compute-bound prefill",
+        ("prefill", "memory"): "fuse attention IO (flash kernel)",
+        ("train", "memory"): "reduce remat traffic; fuse optimizer update",
+        ("decode", "compute"): "good: compute-bound decode (rare)",
+    }
+    for r in _rows("*_pod.json"):
+        hint = suggestions.get((r["mode"], r["dominant"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_flop_ratio']:.2f} | {hint} |"
+        )
+    return "\n".join(lines)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{content}\n{end}"
+    if begin in text and end in text:
+        return re.sub(
+            re.escape(begin) + r".*?" + re.escape(end), block, text, flags=re.S
+        )
+    return text.replace(begin, block)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = replace_block(text, "DRYRUN_TABLE", dryrun_table())
+    text = replace_block(text, "ROOFLINE_TABLE", roofline_table())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

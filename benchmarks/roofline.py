@@ -1,0 +1,173 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports the
+PER-PARTITION program, so flops/bytes are per chip already; the formulas
+divide by chips only when the artifact marks its counts as global
+(``counts_are_global``; the CPU-backend artifacts we produce are per-chip).
+Collective bytes come from parsing the optimized HLO (see
+repro.launch.dryrun.parse_collectives for the per-op byte conventions).
+
+MODEL_FLOPS uses 6*N*D (train; x2 for the SARAH double backward), 2*N*D
+(prefill/decode) with N = active parameters.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_SHAPE_TOKENS = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# active params (MoE: shared + top-k routed + attention/embed) as a fraction
+# computed from configs at run time; fallback ratios if configs unavailable.
+
+
+def active_params(arch: str) -> Optional[int]:
+    try:
+        from repro.configs import get_config
+        from repro.models.model import param_count
+
+        cfg = get_config(arch)
+        total = param_count(cfg)
+        if cfg.n_experts:
+            # approximate: experts hold w_gate/w_up/w_down of (d_model, d_ff)
+            expert = 3 * cfg.d_model * cfg.d_ff
+            n_moe_layers = (
+                sum(1 for m in cfg.mlp_pattern if m == "moe") * cfg.n_periods
+            )
+            routed_total = cfg.n_experts * expert * n_moe_layers
+            routed_active = cfg.experts_per_token * expert * n_moe_layers
+            return int(total - routed_total + routed_active)
+        return int(total)
+    except Exception:
+        return None
+
+
+def model_flops(arch: str, shape: str, mode: str, params: int) -> float:
+    seq, batch, _ = _SHAPE_TOKENS[shape]
+    n_act = active_params(arch) or params
+    if mode == "train":
+        tokens = seq * batch
+        return 2 * 6.0 * n_act * tokens  # x2: SARAH gradients at x+ and x
+    if mode == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * batch
+
+
+def _analytic_counts(arch: str, shape: str, mode: str) -> Optional[Dict]:
+    """Global analytic FLOPs/bytes from benchmarks.analytic (primary source —
+    HLO cost_analysis undercounts scan bodies; see module docstring)."""
+    try:
+        from benchmarks.analytic import step_flops, step_bytes
+        from repro.configs import get_config
+        from repro.configs.shapes import SHAPES, decode_variant
+
+        cfg = get_config(arch)
+        sh = SHAPES[shape]
+        if mode == "decode":
+            cfg = decode_variant(cfg, sh)
+        fl = step_flops(cfg, seq=sh.seq_len, batch=sh.global_batch, mode=mode)
+        by = step_bytes(cfg, seq=sh.seq_len, batch=sh.global_batch, mode=mode)
+        return {"flops": fl["total"], "bytes": by["total"]}
+    except Exception:
+        return None
+
+
+def analyse_artifact(path: str) -> Dict:
+    with open(path) as f:
+        art = json.load(f)
+    if art.get("skipped"):
+        return {**art, "skipped": art["skipped"]}
+    chips = art["n_chips"]
+    hlo_flops_chip = art["cost"].get("flops", 0.0)
+    hlo_bytes_chip = art["cost"].get("bytes accessed", 0.0)
+    coll_bytes = art["collectives"]["total_bytes"]  # per chip (trip-aware)
+
+    analytic = None if art.get("smoke") else _analytic_counts(
+        art["arch"], art["shape"], art["mode"]
+    )
+    if analytic:
+        per_chip_flops = analytic["flops"] / chips
+        per_chip_bytes = analytic["bytes"] / chips
+        src = "analytic"
+    else:
+        per_chip_flops = hlo_flops_chip
+        per_chip_bytes = hlo_bytes_chip
+        src = "hlo"
+
+    t_compute = per_chip_flops / PEAK_FLOPS
+    t_memory = per_chip_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(art["arch"], art["shape"], art["mode"], art.get("params", 0))
+    total_flops = per_chip_flops * chips
+    return {
+        **art,
+        "flop_source": src,
+        "per_chip_flops": per_chip_flops,
+        "per_chip_bytes": per_chip_bytes,
+        "hlo_flops_per_chip": hlo_flops_chip,
+        "hlo_bytes_per_chip": hlo_bytes_chip,
+        "coll_bytes_per_chip": coll_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flop_ratio": (mf / total_flops) if total_flops else 0.0,
+    }
+
+
+def table(art_dir: str = "experiments/dryrun", pattern: str = "*_pod.json") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, pattern))):
+        rows.append(analyse_artifact(path))
+    return rows
+
+
+def format_row(r: Dict) -> str:
+    if r.get("skipped"):
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP: {r['skipped']} |"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+        f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+        f"**{r['dominant']}** | useful={r['useful_flop_ratio']:.2f} |"
+    )
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--pattern", default="*_pod.json")
+    args = ap.parse_args()
+    rows = table(args.dir, args.pattern)
+    print("| arch | shape | compute ms | memory ms | collective ms | dominant | notes |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(format_row(r))
+
+
+if __name__ == "__main__":
+    main()

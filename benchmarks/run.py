@@ -1,0 +1,67 @@
+"""Benchmark orchestrator.  One benchmark per paper table/figure plus kernel
+microbenches and the roofline summary.  Prints ``name,us_per_call,derived``
+CSV rows.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI-sized)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig1,fig2,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import bench_ablation, bench_fig1, bench_fig2, bench_kernels
+
+    suites = {
+        "fig1": bench_fig1.run,
+        "fig2": bench_fig2.run,
+        "kernels": bench_kernels.run,
+        "ablation": bench_ablation.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites) | {"roofline"}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            for row_name, us, derived in fn(quick=args.quick):
+                print(f"{row_name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+
+    if "roofline" in only:
+        try:
+            from benchmarks.roofline import table
+
+            rows = table("experiments/dryrun", "*_pod.json")
+            for r in rows:
+                if r.get("skipped"):
+                    print(f"roofline_{r['arch']}_{r['shape']},0.0,SKIP")
+                    continue
+                print(
+                    f"roofline_{r['arch']}_{r['shape']},"
+                    f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.1f},"
+                    f"dominant={r['dominant']};useful={r['useful_flop_ratio']:.2f}"
+                )
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: Byzantine-robust federated logistic regression in ~40 lines.
+
+Reproduces the paper's headline result (Fig. 1 left): under the shift-back
+attack with 20% client sampling and 5/20 byzantine clients, Byz-VR-MARINA-PP
+converges linearly to the optimum — remove the clipping and it diverges.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import ByzVRMarinaPP, MarinaPPConfig, logistic_problem
+
+
+def main():
+    problem = logistic_problem(
+        jax.random.PRNGKey(0),
+        n_clients=20,
+        n_good=15,  # clients 15..19 are byzantine
+        m=300,
+        dim=40,
+        homogeneous=True,  # the paper's Fig.-1 setting (zeta = 0)
+    )
+
+    for use_clipping in (True, False):
+        cfg = MarinaPPConfig(
+            gamma=0.5,
+            p=0.2,             # full-grad rounds with prob 0.2
+            C=4,               # sample 20% of clients per round
+            C_hat=20,
+            batch=32,
+            clip_alpha=1.0,    # lambda_k = ||x^k - x^{k-1}||
+            use_clipping=use_clipping,
+            aggregator="cm",   # coordinate median ...
+            bucket_s=2,        # ... with bucketing (s=2)
+            attack="shb",      # shift-back (the paper's new attack)
+        )
+        algo = ByzVRMarinaPP(problem, cfg)
+        state, metrics = jax.jit(lambda s: algo.run(300, s))(algo.init())
+        tag = "with clipping   " if use_clipping else "without clipping"
+        losses = [float(metrics["loss"][i]) for i in (0, 99, 199, 299)]
+        print(f"{tag}: loss @ steps [0,100,200,300] = "
+              + ", ".join(f"{l:.4f}" for l in losses))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serve a small model with batched requests: prefill a prompt batch, then
+decode tokens incrementally through the KV cache — the same serve_step the
+decode_32k / long_500k dry-runs lower.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch minitron_8b --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import make_serve_step
+from repro.models import apply_prefill, init_cache, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+
+    B, P = args.batch, args.prompt_len
+    total = P + args.tokens
+    prompt = jax.random.randint(key, (B, P), 0, cfg.vocab)
+
+    serve_step = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, B, total)
+
+    # prefill by streaming the prompt through decode (cache-building) steps
+    tok = prompt[:, :1]
+    t0 = time.time()
+    for t in range(P):
+        batch = {"tokens": prompt[:, t : t + 1]}
+        if cfg.input_kind == "tokens+vision":
+            batch["vision"] = jnp.zeros(
+                (B, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype
+            )
+        nxt, logits, cache = serve_step(params, batch, cache, t)
+    generated = []
+    tok = nxt[:, None]
+    for t in range(P, total):
+        batch = {"tokens": tok}
+        if cfg.input_kind == "tokens+vision":
+            batch["vision"] = jnp.zeros(
+                (B, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype
+            )
+        nxt, logits, cache = serve_step(params, batch, cache, t)
+        tok = nxt[:, None]
+        generated.append(nxt)
+    wall = time.time() - t0
+    gen = jnp.stack(generated, axis=1)
+    print(f"arch={cfg.name} batch={B} generated {gen.shape[1]} tokens/seq "
+          f"in {wall:.2f}s ({wall/ (total) * 1e3:.1f} ms/token incl. compile)")
+    print("first sequence:", gen[0][:16].tolist())
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: Byz-VR-MARINA-PP as a production JAX framework.
+
+Paper: "Byzantine Robustness and Partial Participation Can Be Achieved at
+Once: Just Clip Gradient Differences" (NeurIPS 2024).
+
+Subpackages:
+  core        the paper's algorithm family (simulation engine + theory)
+  models      the 10 assigned architectures
+  kernels     Pallas TPU kernels for the aggregation hot-spot
+  configs     architecture configs + input shapes
+  sharding    logical-axis constraints + partition rules
+  launch      mesh / distributed trainer / serving / dry-run
+  data, optim, checkpoint   substrates
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Checkpointing substrate."""
+from .checkpoint import latest_step, restore, save  # noqa: F401

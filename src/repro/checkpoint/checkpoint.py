@@ -1,0 +1,80 @@
+"""Pytree checkpointing on top of ``np.savez`` (no external deps).
+
+Layout:  <dir>/step_<k>.npz   with flattened path-keyed arrays plus a json
+treedef manifest.  Restore requires a template pytree (the usual JAX
+pattern) so dtypes/structures round-trip exactly — including bf16, which is
+stored as uint16 bit patterns (npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+_SEP = "%%"
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            meta[k] = "bfloat16"
+            arr = arr.view(np.uint16)
+        arrays[k] = arr
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    with open(os.path.join(ckpt_dir, f"step_{step}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(ckpt_dir: str, step: int, template: Any) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with open(os.path.join(ckpt_dir, f"step_{step}.json")) as f:
+        meta = json.load(f)
+    data = np.load(path)
+    flat_template = _flatten_with_paths(template)
+    out = {}
+    for k, tmpl in flat_template.items():
+        arr = data[k]
+        if meta.get(k) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out[k] = jnp.asarray(arr).astype(tmpl.dtype).reshape(tmpl.shape)
+    # rebuild in template order
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = [out[_SEP.join(str(p) for p in path)] for path, _ in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves
+    )
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,3 @@
+"""Architecture configs (assigned pool) + input shapes + paper problems."""
+from .registry import ARCHS, get_config, get_smoke_config, list_archs  # noqa: F401
+from .shapes import SHAPES, input_specs, shape_for  # noqa: F401

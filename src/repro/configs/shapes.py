@@ -1,0 +1,108 @@
+"""Assigned input shapes and ShapeDtypeStruct fabrication for dry-runs.
+
+  train_4k     seq_len=4,096    global_batch=256   (training)
+  prefill_32k  seq_len=32,768   global_batch=32    (inference-prefill)
+  decode_32k   seq_len=32,768   global_batch=128   (inference-decode: ONE new
+                                                    token, cache of seq_len)
+  long_500k    seq_len=524,288  global_batch=1     (long-context decode; needs
+                                                    sub-quadratic attention)
+
+``input_specs(cfg, shape)`` returns abstract (ShapeDtypeStruct) stand-ins for
+every model input — weak-type-correct, shardable, no device allocation.
+``mode_for(cfg, shape)`` tells the launcher whether the pair lowers
+train_step / prefill / decode, or must be skipped (encoder-only decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_cache
+
+__all__ = ["Shape", "SHAPES", "shape_for", "input_specs", "mode_for", "decode_variant"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# sliding window applied to attention layers for the long-context decode
+LONG_CONTEXT_WINDOW = 8192
+
+
+def shape_for(name: str) -> Shape:
+    if name not in SHAPES:
+        raise ValueError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def mode_for(cfg: ModelConfig, shape: Shape) -> Optional[str]:
+    """'train' | 'prefill' | 'decode' | None (skip, with reason in DESIGN.md)."""
+    if shape.kind == "decode" and not cfg.causal:
+        return None  # encoder-only (hubert): no decode step
+    return shape.kind
+
+
+def decode_variant(cfg: ModelConfig, shape: Shape) -> ModelConfig:
+    """Config actually lowered for a decode shape.  For long_500k, dense/MoE
+    attention switches to the sliding-window variant (sub-quadratic + bounded
+    cache); SSM-only archs are already O(1)/token."""
+    if shape.name == "long_500k" and "attn" in cfg.mixer_pattern:
+        return cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> Dict:
+    """Abstract inputs for the given (arch, shape) pair.
+
+    train/prefill: the full batch dict.
+    decode: {"batch": one-token batch, "cache": cache pytree,
+             "cache_index": scalar} — cache length = seq_len (or the sliding
+    window for long-context variants, matching init_cache semantics).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_kind == "frames":
+            batch = {
+                "frames": _sds((B, S, cfg.frame_dim), cfg.jdtype),
+                "targets": _sds((B, S), jnp.int32),
+                "mask": _sds((B, S), jnp.bool_),
+            }
+        elif cfg.input_kind == "tokens+vision":
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "vision": _sds((B, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+        return batch
+
+    # decode
+    dcfg = decode_variant(cfg, shape)
+    batch = {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.input_kind == "tokens+vision":
+        batch["vision"] = _sds((B, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype)
+    cache = jax.eval_shape(lambda: init_cache(dcfg, B, S))
+    return {
+        "batch": batch,
+        "cache": cache,
+        "cache_index": _sds((), jnp.int32),
+    }

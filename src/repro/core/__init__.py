@@ -1,0 +1,26 @@
+"""Core library: the paper's contribution (Byz-VR-MARINA-PP and friends)."""
+from .aggregators import (  # noqa: F401
+    Aggregator,
+    bucketing,
+    centered_clip,
+    coordinate_median,
+    geometric_median,
+    krum,
+    make_aggregator,
+    mean,
+    trimmed_mean,
+)
+from .attacks import ATTACKS, Attack, AttackContext, make_attack  # noqa: F401
+from .clipping import (  # noqa: F401
+    clip,
+    clip_tree,
+    marina_radius,
+    theorem41_alpha,
+    theorem42_alpha,
+)
+from .compressors import Compressor, make_compressor  # noqa: F401
+from .estimators import p_choice, page_update, page_update_tree  # noqa: F401
+from .heuristic import ClippedPPConfig, ClippedPPMomentum, ClippedPPState  # noqa: F401
+from .marina_pp import ByzVRMarinaPP, MarinaPPConfig, MarinaPPState  # noqa: F401
+from .problems import FedProblem, logistic_problem, mlp_problem  # noqa: F401
+from .theory import MarinaTheory, cohort_probabilities, stepsize  # noqa: F401

@@ -1,0 +1,335 @@
+"""(delta, c)-robust aggregation rules (Definition 2.1) and Bucketing.
+
+All aggregators operate on a stacked matrix ``xs`` of shape (n, d) — one row
+per worker — and return the aggregated vector of shape (d,).  Every rule
+also supports an optional boolean ``mask`` of shape (n,) selecting the
+*sampled* cohort S_k (partial participation under SPMD static shapes: all
+workers compute, only sampled rows aggregate).  ``mask=None`` means all rows.
+
+The registry records for each rule:
+
+  - whether it satisfies Def 2.1 on its own or only composed with Bucketing
+    (Karimireddy et al., 2022), and
+  - the bounded-output constant F_A of Assumption 2.3
+    (Krum/GM: 1; CM: sqrt(d); mean: 1), used by theory.py for stepsizes.
+
+Aggregations are pure-jnp so the same code runs inside vmap / shard_map /
+pjit; the Pallas kernels in repro.kernels implement the hot (n,d)->d paths
+with explicit VMEM tiling and are verified against these references.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Aggregator",
+    "mean",
+    "coordinate_median",
+    "trimmed_mean",
+    "geometric_median",
+    "krum",
+    "multi_krum",
+    "centered_clip",
+    "bucketing",
+    "make_aggregator",
+]
+
+_BIG = jnp.float32(3.4e37)  # +inf stand-in that survives arithmetic
+
+
+def _full_mask(xs, mask):
+    if mask is None:
+        return jnp.ones((xs.shape[0],), dtype=bool)
+    return mask.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# basic rules
+# ---------------------------------------------------------------------------
+
+def _mean(xs, mask=None, key=None):
+    m = _full_mask(xs, mask).astype(xs.dtype)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.sum(xs * m[:, None], axis=0) / denom
+
+
+def _masked_sorted(xs, mask):
+    """Sort each column ascending with un-sampled rows pushed to +inf.
+
+    Returns (sorted values (n,d), count of sampled rows)."""
+    m = _full_mask(xs, mask)
+    vals = jnp.where(m[:, None], xs.astype(jnp.float32), _BIG)
+    return jnp.sort(vals, axis=0), jnp.sum(m)
+
+
+def _coordinate_median(xs, mask=None, key=None):
+    """Coordinate-wise median over the sampled rows (numpy semantics: the
+    average of the two middle order statistics for even counts)."""
+    s, cnt = _masked_sorted(xs, mask)
+    lo = (cnt - 1) // 2
+    hi = cnt // 2
+    v_lo = jnp.take_along_axis(s, jnp.full((1, s.shape[1]), lo), axis=0)[0]
+    v_hi = jnp.take_along_axis(s, jnp.full((1, s.shape[1]), hi), axis=0)[0]
+    return (0.5 * (v_lo + v_hi)).astype(xs.dtype)
+
+
+def _trimmed_mean(xs, mask=None, key=None, *, trim_ratio: float = 0.1):
+    """Coordinate-wise trimmed mean: drop ceil(trim_ratio*cnt) smallest and
+    largest entries per coordinate, average the rest.  Satisfies Def 2.1
+    (Allouah et al., 2023) when trim_ratio >= delta."""
+    s, cnt = _masked_sorted(xs, mask)
+    n = s.shape[0]
+    t = jnp.ceil(trim_ratio * cnt).astype(jnp.int32)
+    t = jnp.minimum(t, (cnt - 1) // 2)
+    idx = jnp.arange(n)[:, None]
+    keep = (idx >= t) & (idx < cnt - t)
+    denom = jnp.maximum(cnt - 2 * t, 1)
+    sv = jnp.where(keep, s, 0.0)
+    return (jnp.sum(sv, axis=0) / denom).astype(xs.dtype)
+
+
+def _geometric_median(xs, mask=None, key=None, *, iters: int = 8, eps: float = 1e-8):
+    """Geometric median via smoothed Weiszfeld fixed-point iterations
+    (Pillutla et al., 2022 — "RFA").  F_A = 1 (stays in the convex hull)."""
+    m = _full_mask(xs, mask).astype(jnp.float32)
+    x32 = xs.astype(jnp.float32)
+    z0 = jnp.sum(x32 * m[:, None], axis=0) / jnp.maximum(jnp.sum(m), 1.0)
+
+    def body(_, z):
+        dist = jnp.sqrt(jnp.sum((x32 - z[None]) ** 2, axis=1) + eps)
+        w = m / dist
+        return jnp.sum(x32 * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), eps)
+
+    z = jax.lax.fori_loop(0, iters, body, z0)
+    return z.astype(xs.dtype)
+
+
+def _krum(xs, mask=None, key=None, *, byz_bound: Optional[int] = None):
+    """Krum (Blanchard et al., 2017): return the row minimizing the summed
+    squared distance to its n-B-2 nearest sampled neighbours.  F_A = 1."""
+    m = _full_mask(xs, mask)
+    n = xs.shape[0]
+    cnt = jnp.sum(m)
+    b = jnp.asarray(
+        byz_bound if byz_bound is not None else 0, jnp.int32
+    )
+    x32 = xs.astype(jnp.float32)
+    sq = jnp.sum(x32 * x32, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x32 @ x32.T)
+    d2 = jnp.maximum(d2, 0.0)
+    pair_ok = m[:, None] & m[None, :] & ~jnp.eye(n, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, _BIG)
+    d2_sorted = jnp.sort(d2, axis=1)
+    csum = jnp.cumsum(jnp.where(d2_sorted >= _BIG, 0.0, d2_sorted), axis=1)
+    # number of neighbours scored: cnt - b - 2, at least 1
+    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
+    scores = csum[:, k_nb - 1]
+    scores = jnp.where(m, scores, _BIG)
+    winner = jnp.argmin(scores)
+    return xs[winner]
+
+
+def _multi_krum(xs, mask=None, key=None, *, byz_bound: Optional[int] = None,
+                m_select: int = 0):
+    """Multi-Krum (Damaskinos et al., 2019): average the m rows with the
+    best Krum scores.  m defaults to cnt - B - 2."""
+    m0 = _full_mask(xs, mask)
+    n = xs.shape[0]
+    cnt = jnp.sum(m0)
+    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
+    x32 = xs.astype(jnp.float32)
+    sq = jnp.sum(x32 * x32, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x32 @ x32.T)
+    d2 = jnp.maximum(d2, 0.0)
+    pair_ok = m0[:, None] & m0[None, :] & ~jnp.eye(n, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, _BIG)
+    d2_sorted = jnp.sort(d2, axis=1)
+    csum = jnp.cumsum(jnp.where(d2_sorted >= _BIG, 0.0, d2_sorted), axis=1)
+    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
+    scores = jnp.where(m0, csum[:, k_nb - 1], _BIG)
+    m_sel = jnp.clip(
+        jnp.asarray(m_select, jnp.int32) if m_select else cnt - b - 2, 1, n
+    )
+    order = jnp.argsort(scores)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    sel = (rank < m_sel) & m0
+    w = sel.astype(jnp.float32)
+    return (
+        jnp.sum(x32 * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+    ).astype(xs.dtype)
+
+
+def _centered_clip(
+    xs, mask=None, key=None, *, tau: float = 10.0, iters: int = 5
+):
+    """CenteredClip (Karimireddy et al., 2021):
+       v <- v + mean_i clip_tau(x_i - v), iterated.  F_A depends on tau; with
+       v0 = masked mean it stays within tau*iters of the hull => bounded."""
+    m = _full_mask(xs, mask).astype(jnp.float32)
+    x32 = xs.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    v0 = jnp.sum(x32 * m[:, None], axis=0) / denom
+
+    def body(_, v):
+        diff = x32 - v[None]
+        nrm = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-30)
+        scale = jnp.minimum(1.0, tau / nrm)
+        upd = jnp.sum(diff * (scale * m)[:, None], axis=0) / denom
+        return v + upd
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return v.astype(xs.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing (Algorithm 2, Karimireddy et al., 2022)
+# ---------------------------------------------------------------------------
+
+def _bucketing(xs, mask=None, key=None, *, s: int = 2, inner=None):
+    """Randomly permute rows, average buckets of size ``s``, apply ``inner``.
+
+    With a mask, bucket means are taken over sampled members only and empty
+    buckets are masked out of the inner aggregation — this preserves the
+    ARAgg property over the sampled cohort.
+    """
+    if inner is None:
+        inner = _coordinate_median
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = xs.shape[0]
+    m = _full_mask(xs, mask)
+    perm = jax.random.permutation(key, n)
+    # Move sampled rows to the front so buckets are dense in the sampled set:
+    # sort by (not sampled, random) — stable argsort on the permuted order.
+    order = jnp.argsort(jnp.where(m[perm], 0, 1), stable=True)
+    idx = perm[order]
+    xp = xs[idx]
+    mp = m[idx]
+    n_buckets = -(-n // s)
+    pad = n_buckets * s - n
+    xp = jnp.pad(xp, ((0, pad), (0, 0)))
+    mp = jnp.pad(mp, ((0, pad),))
+    xb = xp.reshape(n_buckets, s, -1)
+    mb = mp.reshape(n_buckets, s).astype(xs.dtype)
+    cntb = jnp.sum(mb, axis=1)
+    means = jnp.sum(xb * mb[:, :, None], axis=1) / jnp.maximum(cntb, 1.0)[:, None]
+    bucket_mask = cntb > 0
+    return inner(means, mask=bucket_mask)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """A named aggregation rule with its theory constants.
+
+    ``f_a(d)``: the Assumption-2.3 bound ||A(x_1..x_n)|| <= F_A max||x_i||.
+    ``is_aragg``: satisfies Def 2.1 agnostically (possibly via bucketing).
+    """
+
+    name: str
+    fn: Callable
+    f_a: Callable[[int], float]
+    is_aragg: bool
+    c_const: float  # the c in (delta, c)-RAgg (literature values)
+
+    def __call__(self, xs, mask=None, key=None):
+        return self.fn(xs, mask=mask, key=key)
+
+
+def mean() -> Aggregator:
+    return Aggregator("mean", _mean, lambda d: 1.0, False, 0.0)
+
+
+def coordinate_median() -> Aggregator:
+    return Aggregator(
+        "cm", _coordinate_median, lambda d: math.sqrt(d), False, 1.0
+    )
+
+
+def trimmed_mean(trim_ratio: float = 0.1) -> Aggregator:
+    return Aggregator(
+        f"tm{trim_ratio}",
+        partial(_trimmed_mean, trim_ratio=trim_ratio),
+        lambda d: math.sqrt(d),
+        True,
+        1.0,
+    )
+
+
+def geometric_median(iters: int = 8) -> Aggregator:
+    return Aggregator(
+        "rfa", partial(_geometric_median, iters=iters), lambda d: 1.0, False, 1.0
+    )
+
+
+def krum(byz_bound: Optional[int] = None) -> Aggregator:
+    return Aggregator(
+        "krum", partial(_krum, byz_bound=byz_bound), lambda d: 1.0, False, 1.0
+    )
+
+
+def multi_krum(byz_bound: Optional[int] = None, m_select: int = 0) -> Aggregator:
+    return Aggregator(
+        "multikrum",
+        partial(_multi_krum, byz_bound=byz_bound, m_select=m_select),
+        lambda d: 1.0,  # average of input rows stays in the hull
+        False,
+        1.0,
+    )
+
+
+def centered_clip(tau: float = 10.0, iters: int = 5) -> Aggregator:
+    return Aggregator(
+        "cclip",
+        partial(_centered_clip, tau=tau, iters=iters),
+        lambda d: 1.0 + 0.0 * d,  # v0 in hull, each iter moves <= tau
+        True,
+        1.0,
+    )
+
+
+def bucketing(inner: Aggregator, s: int = 2) -> Aggregator:
+    """Bucketing o inner — upgrades CM/GM/Krum to (delta,c)-ARAgg."""
+    return Aggregator(
+        f"bucket{s}_{inner.name}",
+        partial(_bucketing, s=s, inner=inner.fn),
+        inner.f_a,  # bucket means stay in the hull
+        True,
+        inner.c_const if inner.c_const > 0 else 1.0,
+    )
+
+
+_FACTORY = {
+    "mean": lambda **kw: mean(),
+    "cm": lambda **kw: coordinate_median(),
+    "trimmed_mean": lambda **kw: trimmed_mean(float(kw.get("trim_ratio", 0.1))),
+    "rfa": lambda **kw: geometric_median(int(kw.get("iters", 8))),
+    "geometric_median": lambda **kw: geometric_median(int(kw.get("iters", 8))),
+    "krum": lambda **kw: krum(kw.get("byz_bound")),
+    "multi_krum": lambda **kw: multi_krum(
+        kw.get("byz_bound"), int(kw.get("m_select", 0))
+    ),
+    "centered_clip": lambda **kw: centered_clip(
+        float(kw.get("tau", 10.0)), int(kw.get("iters", 5))
+    ),
+}
+
+
+def make_aggregator(name: str, bucket_s: int = 0, **kwargs) -> Aggregator:
+    """Build an aggregator by name, optionally composed with Bucketing
+    (``bucket_s >= 2``)."""
+    if name not in _FACTORY:
+        raise ValueError(f"unknown aggregator {name!r}; have {sorted(_FACTORY)}")
+    agg = _FACTORY[name](**kwargs)
+    if bucket_s and bucket_s >= 2:
+        agg = bucketing(agg, s=bucket_s)
+    return agg

@@ -1,0 +1,127 @@
+"""Byzantine attacks (Section 5 / Appendix F).
+
+An attack produces, for each Byzantine worker, the vector it transmits in
+place of the honest message.  The attack sees everything a colluding
+adversary could see: the honest messages of the *sampled good* workers this
+round, the current/previous iterates, the server state g^k, and whether the
+byzantines form a majority of the sampled cohort (needed by shift-back).
+
+Interface:  attack(ctx) -> (n, d) array of byzantine payloads (rows for good
+workers are ignored by the caller).  ``AttackContext`` carries:
+
+  honest:    (n, d)  the message each worker WOULD send if honest
+  good_mask: (n,)    True for good workers
+  sampled:   (n,)    True for workers sampled this round
+  x_now/x_prev/x0:  flattened iterates (d,)
+  g_prev:    (d,)    server estimate g^k
+  byz_majority: ()   bool — byzantines > half of the sampled cohort
+  key:       PRNG key
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AttackContext", "Attack", "make_attack", "ATTACKS"]
+
+
+@dataclasses.dataclass
+class AttackContext:
+    honest: jnp.ndarray
+    good_mask: jnp.ndarray
+    sampled: jnp.ndarray
+    x_now: jnp.ndarray
+    x_prev: jnp.ndarray
+    x0: jnp.ndarray
+    g_prev: jnp.ndarray
+    byz_majority: jnp.ndarray
+    key: jax.Array
+
+
+def _good_sampled_stats(ctx: AttackContext):
+    """Mean/std of the sampled good workers' honest messages."""
+    w = (ctx.good_mask & ctx.sampled).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(ctx.honest * w[:, None], axis=0) / denom
+    var = jnp.sum(((ctx.honest - mu[None]) ** 2) * w[:, None], axis=0) / denom
+    return mu, jnp.sqrt(var + 1e-12)
+
+
+def bit_flip(ctx: AttackContext) -> jnp.ndarray:
+    """BF: send the negation of the honest message (sign-flipped grads)."""
+    return -ctx.honest
+
+
+def label_flip_proxy(ctx: AttackContext) -> jnp.ndarray:
+    """LF is a *data-level* attack (train on flipped labels).  The simulation
+    engine implements it in the data pipeline; this message-level proxy
+    (negated, rescaled honest message) is used when no data hook exists."""
+    return -0.5 * ctx.honest
+
+
+def a_little_is_enough(ctx: AttackContext, z_max: float = 1.5) -> jnp.ndarray:
+    """ALIE (Baruch et al., 2019): mu - z_max * sigma of the good cohort —
+    small, statistically-plausible shifts that evade distance-based defenses."""
+    mu, sigma = _good_sampled_stats(ctx)
+    payload = mu - z_max * sigma
+    return jnp.broadcast_to(payload[None], ctx.honest.shape)
+
+
+def inner_product_manipulation(ctx: AttackContext, eps: float = 1.1) -> jnp.ndarray:
+    """IPM (Xie et al., 2020): -eps * mean of the good messages."""
+    mu, _ = _good_sampled_stats(ctx)
+    return jnp.broadcast_to((-eps * mu)[None], ctx.honest.shape)
+
+
+def shift_back(ctx: AttackContext) -> jnp.ndarray:
+    """SHB (this paper): if byzantines form a sampled majority, send
+    (x^0 - x^k) scaled to undo the whole trajectory; otherwise behave
+    honestly.  For difference-type messages the payload shifts g so that the
+    next step moves towards x^0: target update direction (x^0 - x^k)."""
+    payload = ctx.x0 - ctx.x_now
+    rows = jnp.broadcast_to(payload[None], ctx.honest.shape)
+    return jnp.where(ctx.byz_majority, rows, ctx.honest)
+
+
+def sign_flip(ctx: AttackContext) -> jnp.ndarray:
+    return -ctx.honest
+
+
+def random_gauss(ctx: AttackContext, scale: float = 10.0) -> jnp.ndarray:
+    noise = jax.random.normal(ctx.key, ctx.honest.shape, jnp.float32)
+    return (scale * noise).astype(ctx.honest.dtype)
+
+
+def no_attack(ctx: AttackContext) -> jnp.ndarray:
+    return ctx.honest
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    name: str
+    fn: Callable[[AttackContext], jnp.ndarray]
+    data_level: bool = False  # LF flips labels in the pipeline instead
+
+    def __call__(self, ctx: AttackContext) -> jnp.ndarray:
+        return self.fn(ctx)
+
+
+ATTACKS = {
+    "none": Attack("none", no_attack),
+    "bf": Attack("bf", bit_flip),
+    "lf": Attack("lf", label_flip_proxy, data_level=True),
+    "alie": Attack("alie", a_little_is_enough),
+    "ipm": Attack("ipm", inner_product_manipulation),
+    "shb": Attack("shb", shift_back),
+    "sf": Attack("sf", sign_flip),
+    "gauss": Attack("gauss", random_gauss),
+}
+
+
+def make_attack(name: str) -> Attack:
+    if name not in ATTACKS:
+        raise ValueError(f"unknown attack {name!r}; have {sorted(ATTACKS)}")
+    return ATTACKS[name]

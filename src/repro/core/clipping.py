@@ -1,0 +1,71 @@
+"""The clipping operator — the paper's central algorithmic ingredient.
+
+``clip_lambda(x) := min{1, lambda/||x||} * x`` (and clip(0) := 0), applied to
+*gradient differences* with the data-dependent radius
+
+    lambda_{k+1} = alpha * ||x^{k+1} - x^k||
+
+(Theorem 4.1: alpha = 2*L; Theorem 4.2 with bounded compressors:
+alpha = D_Q * L).  Clipping bounds the harm a Byzantine-majority round can do
+to the recursive variance-reduced estimator: the update stays within
+O(lambda) of g^k, and lambda -> 0 at the same rate as the honest variance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .tree_utils import tree_norm
+
+__all__ = [
+    "clip",
+    "clip_tree",
+    "clip_factor",
+    "marina_radius",
+    "theorem41_alpha",
+    "theorem42_alpha",
+]
+
+_EPS = 1e-30
+
+
+def clip_factor(norm, radius):
+    """min{1, radius/norm} with clip(0)=0 semantics (factor of 1 at 0)."""
+    return jnp.minimum(1.0, radius / jnp.maximum(norm, _EPS))
+
+
+def clip(x, radius):
+    """Clip a single vector/array by its global l2 norm."""
+    norm = jnp.linalg.norm(x.astype(jnp.float32).ravel())
+    return (x * clip_factor(norm, radius).astype(x.dtype)).astype(x.dtype)
+
+
+def clip_tree(tree, radius):
+    """Clip a whole pytree by its *global* l2 norm (the paper's vectors are
+    the full model gradient, so the norm is taken jointly)."""
+    norm = tree_norm(tree)
+    factor = clip_factor(norm, radius)
+    return jax.tree_util.tree_map(lambda l: (l * factor).astype(l.dtype), tree)
+
+
+def marina_radius(x_new, x_old, alpha):
+    """lambda_{k+1} = alpha * ||x^{k+1} - x^k||, for pytrees or arrays."""
+    if isinstance(x_new, jnp.ndarray) or hasattr(x_new, "shape"):
+        diff_norm = jnp.linalg.norm(
+            (x_new.astype(jnp.float32) - x_old.astype(jnp.float32)).ravel()
+        )
+    else:
+        diff_norm = tree_norm(
+            jax.tree_util.tree_map(lambda a, b: a - b, x_new, x_old)
+        )
+    return alpha * diff_norm
+
+
+def theorem41_alpha(smoothness_L):
+    """Clipping coefficient of Theorem 4.1: lambda = 2*L*||x+ - x||."""
+    return 2.0 * smoothness_L
+
+
+def theorem42_alpha(smoothness_L, compressor_bound_DQ):
+    """Clipping coefficient of Theorem 4.2: lambda = D_Q*L*||x+ - x||."""
+    return compressor_bound_DQ * smoothness_L

@@ -1,0 +1,151 @@
+"""Unbiased compression operators (Definition 2.2).
+
+Each compressor is a stochastic map Q with E[Q(x)] = x and
+E||Q(x) - x||^2 <= omega ||x||^2.  The registry records:
+
+  - ``omega``:   relative variance,
+  - ``zeta``:    expected density (non-zeros sent)  [sparsifiers only],
+  - ``dq``:      the bound of Assumption 2.4, ||Q(x)|| <= D_Q ||x||
+                 (None when unbounded).
+
+Implemented: identity, RandK random sparsification, 1-level l2-quantization
+(QSGD-style), natural-dithering-free sign-l2.  All are jit/vmap friendly and
+take explicit PRNG keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Compressor",
+    "identity",
+    "rand_k",
+    "l2_quantization",
+    "make_compressor",
+]
+
+_EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """An unbiased compressor with its theoretical constants."""
+
+    name: str
+    fn: Callable  # (key, x) -> Q(x), same shape as x
+    omega_fn: Callable[[int], float]  # d -> omega
+    zeta_fn: Callable[[int], float]  # d -> expected density
+    dq_fn: Optional[Callable[[int], float]]  # d -> D_Q (Assumption 2.4)
+
+    def __call__(self, key, x):
+        return self.fn(key, x)
+
+    def omega(self, d: int) -> float:
+        return float(self.omega_fn(d))
+
+    def zeta(self, d: int) -> float:
+        return float(self.zeta_fn(d))
+
+    def dq(self, d: int) -> Optional[float]:
+        return None if self.dq_fn is None else float(self.dq_fn(d))
+
+
+def identity() -> Compressor:
+    return Compressor(
+        name="identity",
+        fn=lambda key, x: x,
+        omega_fn=lambda d: 0.0,
+        zeta_fn=lambda d: d,
+        dq_fn=lambda d: 1.0,
+    )
+
+
+def rand_k(k: int) -> Compressor:
+    """RandK: keep k uniformly-random coordinates, scale by d/k.
+
+    omega = d/k - 1, zeta = k, D_Q = d/k  (Beznosikov et al., 2020).
+    """
+
+    def fn(key, x):
+        shape = x.shape
+        flat = x.ravel()
+        d = flat.shape[0]
+        kk = min(k, d)
+        # A uniformly random k-subset via random scores + top-k threshold.
+        scores = jax.random.uniform(key, (d,))
+        thresh = jax.lax.top_k(scores, kk)[0][-1]
+        mask = scores >= thresh
+        scale = jnp.asarray(d / kk, flat.dtype)
+        return (flat * mask.astype(flat.dtype) * scale).reshape(shape)
+
+    return Compressor(
+        name=f"rand{k}",
+        fn=fn,
+        omega_fn=lambda d: d / min(k, d) - 1.0,
+        zeta_fn=lambda d: float(min(k, d)),
+        dq_fn=lambda d: d / min(k, d),
+    )
+
+
+def rand_fraction(frac: float) -> Compressor:
+    """RandK with k = ceil(frac*d), resolved per input size."""
+
+    def fn(key, x):
+        d = x.size
+        k = max(1, int(jnp.ceil(frac * d)) if not isinstance(d, int) else int(-(-d * frac // 1)))
+        return rand_k(k).fn(key, x)
+
+    return Compressor(
+        name=f"randp{frac}",
+        fn=fn,
+        omega_fn=lambda d: 1.0 / frac - 1.0,
+        zeta_fn=lambda d: frac * d,
+        dq_fn=lambda d: 1.0 / frac,
+    )
+
+
+def l2_quantization() -> Compressor:
+    """1-level l2 quantization (Alistarh et al., 2017):
+
+      Q(x)_i = ||x|| * sign(x_i) * xi_i,  xi_i ~ Bernoulli(|x_i|/||x||).
+
+    omega = sqrt(d) - 1 (for dense x), zeta = sqrt(d), D_Q = sqrt(d).
+    """
+
+    def fn(key, x):
+        shape = x.shape
+        flat = x.ravel().astype(jnp.float32)
+        norm = jnp.linalg.norm(flat)
+        prob = jnp.abs(flat) / jnp.maximum(norm, _EPS)
+        xi = jax.random.bernoulli(key, jnp.clip(prob, 0.0, 1.0))
+        q = norm * jnp.sign(flat) * xi.astype(jnp.float32)
+        return q.reshape(shape).astype(x.dtype)
+
+    import math
+
+    return Compressor(
+        name="l2quant",
+        fn=fn,
+        omega_fn=lambda d: math.sqrt(d) - 1.0,
+        zeta_fn=lambda d: math.sqrt(d),
+        dq_fn=lambda d: math.sqrt(d),
+    )
+
+
+_REGISTRY = {
+    "identity": lambda **kw: identity(),
+    "none": lambda **kw: identity(),
+    "rand_k": lambda **kw: rand_k(int(kw.get("k", 1))),
+    "rand_fraction": lambda **kw: rand_fraction(float(kw.get("frac", 0.01))),
+    "l2_quantization": lambda **kw: l2_quantization(),
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,38 @@
+"""Recursive variance-reduction estimators (GeomSARAH / PAGE family).
+
+This module exposes the estimator logic of Algorithm 1's worker side as a
+standalone, reusable component: the distributed mesh trainer
+(repro.launch.train) uses it per worker on gradient *pytrees*, while the
+simulation engine in marina_pp.py inlines the flat-vector version.
+
+  page_update(c_k, g_prev, full_grad, diff)  ->  g_i^{k+1}
+     = full_grad                 if c_k
+     = g_prev + diff             otherwise
+
+with ``diff`` already compressed+clipped by the caller.  ``p_choice``
+implements the paper's recommended p = min{C/n, b/m, zeta_Q/d}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["page_update", "page_update_tree", "p_choice"]
+
+
+def page_update(c_k, g_prev, full_grad, diff):
+    """Flat-vector PAGE estimator switch."""
+    return jnp.where(c_k, full_grad, g_prev + diff)
+
+
+def page_update_tree(c_k, g_prev, full_grad, diff):
+    """Pytree PAGE estimator switch (c_k is a traced boolean scalar)."""
+    return jax.tree_util.tree_map(
+        lambda gp, fg, df: jnp.where(c_k, fg, gp + df), g_prev, full_grad, diff
+    )
+
+
+def p_choice(C: int, n: int, b: int, m: int, zeta_q: float, d: int) -> float:
+    """p = min{C/n, b/m, zeta_Q/d} — balances client, oracle and
+    communication cost per round (Section 4)."""
+    return float(min(C / n, b / m, zeta_q / d))

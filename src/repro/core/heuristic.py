@@ -1,0 +1,154 @@
+"""The heuristic extension (eq. 10): clipping adapts ANY robust method to
+partial participation.
+
+Scheme:   x^{k+1} = x^k - gamma g^k,
+          g^k = g^{k-1} + Agg({clip_{lambda_k}(g_i^k - g^{k-1})}_{i in S_k}),
+          lambda_k = lambda_mult * ||x^k - x^{k-1}||.
+
+We instantiate it with the paper's choice of base method for neural nets:
+Byzantine-robust momentum SGD (Karimireddy et al., 2021) — each worker keeps
+a local momentum m_i^k = beta m_i^{k-1} + (1-beta) grad_i(x^k) and sends
+g_i^k = m_i^k.  ``use_clipping=False`` + full participation recovers plain
+robust momentum-SGD (the Fig.2 "no clip" baselines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .aggregators import make_aggregator
+from .attacks import AttackContext, make_attack
+from .clipping import clip
+from .problems import FedProblem
+
+__all__ = ["ClippedPPConfig", "ClippedPPState", "ClippedPPMomentum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClippedPPConfig:
+    gamma: float
+    beta: float = 0.9  # client momentum
+    C: int = 4  # sampled cohort per round
+    batch: int = 32
+    lambda_mult: float = 1.0
+    use_clipping: bool = True
+    aggregator: str = "cm"
+    bucket_s: int = 2
+    attack: str = "none"
+    seed: int = 0
+
+
+class ClippedPPState(NamedTuple):
+    x: jnp.ndarray  # (d,)
+    x_prev: jnp.ndarray
+    g: jnp.ndarray  # server estimate g^{k-1}
+    momenta: jnp.ndarray  # (n, d) worker momenta
+    x0: jnp.ndarray
+    key: jax.Array
+    step: jnp.ndarray
+
+
+class ClippedPPMomentum:
+    """Clipped partial-participation wrapper around robust momentum-SGD."""
+
+    def __init__(self, problem: FedProblem, cfg: ClippedPPConfig):
+        self.problem = problem
+        self.cfg = cfg
+        self.agg = make_aggregator(cfg.aggregator, bucket_s=cfg.bucket_s)
+        self.attack = make_attack(cfg.attack)
+
+    def init(self, x0: Optional[jnp.ndarray] = None) -> ClippedPPState:
+        x = self.problem.x0 if x0 is None else x0
+        n = self.problem.n_clients
+        grads = self.problem.all_full_grads(x)
+        g0 = self.agg(grads, key=jax.random.PRNGKey(self.cfg.seed))
+        return ClippedPPState(
+            x=x,
+            x_prev=x,
+            g=g0,
+            momenta=grads,
+            x0=x,
+            key=jax.random.PRNGKey(self.cfg.seed + 1),
+            step=jnp.int32(0),
+        )
+
+    def _cohort(self, key):
+        n = self.problem.n_clients
+        perm = jax.random.permutation(key, n)
+        rank = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+        return rank < self.cfg.C
+
+    def step(self, state: ClippedPPState) -> ClippedPPState:
+        cfg, prob = self.cfg, self.problem
+        n = prob.n_clients
+        good = jnp.arange(n) < prob.n_good
+        key, k_cohort, k_b, k_att, k_agg = jax.random.split(state.key, 5)
+        sampled = self._cohort(k_cohort)
+
+        # workers: stochastic grads at x^k, momentum update
+        bkeys = jax.random.split(k_b, n)
+
+        def worker_grad(k, i):
+            idx = jax.random.randint(k, (cfg.batch,), 0, prob.m)
+            return jax.grad(prob._batch_loss)(
+                state.x, prob.features[i][idx], prob.labels[i][idx]
+            )
+
+        grads = jax.vmap(worker_grad)(bkeys, jnp.arange(n))
+        momenta = cfg.beta * state.momenta + (1.0 - cfg.beta) * grads
+        # only sampled workers refresh momentum (the rest are offline)
+        momenta = jnp.where(sampled[:, None], momenta, state.momenta)
+
+        lam = cfg.lambda_mult * jnp.linalg.norm(state.x - state.x_prev)
+        # warmup: before the first move, x == x_prev => lambda = 0 would zero
+        # all messages; use +inf radius on step 0 (c.f. Fig.1 setup).
+        lam = jnp.where(state.step == 0, jnp.float32(3.4e37), lam)
+        lam = jnp.where(cfg.use_clipping, lam, jnp.float32(3.4e37))
+
+        ctx = AttackContext(
+            honest=momenta,
+            good_mask=good,
+            sampled=sampled,
+            x_now=state.x,
+            x_prev=state.x_prev,
+            x0=state.x0,
+            g_prev=state.g,
+            byz_majority=jnp.sum((~good & sampled).astype(jnp.int32))
+            > jnp.sum((good & sampled).astype(jnp.int32)),
+            key=k_att,
+        )
+        payload = self.attack(ctx)
+        msgs = jnp.where(good[:, None], momenta, payload)
+
+        # eq. (10): aggregate clipped differences to the previous estimate
+        diffs = msgs - state.g[None]
+        clipped = jax.vmap(lambda v: clip(v, lam))(diffs)
+        g_new = state.g + self.agg(clipped, mask=sampled, key=k_agg)
+
+        x_new = state.x - cfg.gamma * g_new
+        return ClippedPPState(
+            x=x_new,
+            x_prev=state.x,
+            g=g_new,
+            momenta=momenta,
+            x0=state.x0,
+            key=key,
+            step=state.step + 1,
+        )
+
+    def run(self, steps: int, state: Optional[ClippedPPState] = None):
+        if state is None:
+            state = self.init()
+
+        def scan_body(st, _):
+            st2 = self.step(st)
+            return st2, (
+                self.problem.loss(st2.x),
+                jnp.linalg.norm(self.problem.grad(st2.x)),
+            )
+
+        state, (losses, gnorms) = jax.lax.scan(scan_body, state, None, length=steps)
+        return state, {"loss": losses, "grad_norm": gnorms}

@@ -1,0 +1,205 @@
+"""Byz-VR-MARINA-PP — Algorithm 1, as a jittable simulation engine.
+
+The engine runs the exact server/client protocol over a ``FedProblem``:
+
+  k:  c_k ~ Be(p);  cohort S_k of size C (c_k=0) or C_hat (c_k=1)
+      x^{k+1} = x^k - gamma g^k;    lambda_{k+1} = alpha ||x^{k+1} - x^k||
+      good i in S_k send  grad f_i(x^{k+1})                (c_k = 1)
+                     or   Q(Dhat_i(x^{k+1}, x^k))           (c_k = 0)
+      byzantines send attack payloads
+      g^{k+1} = ARAgg({g_i})                                (c_k = 1)
+              = g^k + ARAgg({clip_lambda(messages)})        (c_k = 0)
+
+Clipping of the difference branch happens AT THE SERVER (Section 3:
+byzantines can ignore clipping, so the server re-clips every received
+message).  Partial participation is exact: only the sampled rows enter the
+mask-aware aggregation.
+
+Setting ``C = C_hat = n`` and ``use_clipping=False`` recovers
+Byz-VR-MARINA (Gorbunov et al., 2023); additionally setting delta-free
+aggregation to ``mean`` and no attack recovers plain VR-MARINA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .aggregators import Aggregator, make_aggregator
+from .attacks import Attack, AttackContext, make_attack
+from .clipping import clip, marina_radius
+from .compressors import Compressor, make_compressor
+from .problems import FedProblem
+
+__all__ = ["MarinaPPConfig", "MarinaPPState", "ByzVRMarinaPP"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MarinaPPConfig:
+    gamma: float  # stepsize
+    p: float  # Bernoulli full-sync probability
+    C: int  # small cohort size
+    C_hat: int  # large cohort size (full-grad rounds)
+    batch: int = 32  # minibatch size b for Dhat
+    clip_alpha: float = 1.0  # lambda_{k+1} = clip_alpha * ||x+ - x||
+    use_clipping: bool = True
+    aggregator: str = "cm"
+    bucket_s: int = 2
+    compressor: str = "identity"
+    compressor_kwargs: tuple = ()
+    attack: str = "none"
+    seed: int = 0
+
+
+class MarinaPPState(NamedTuple):
+    x: jnp.ndarray  # current iterate x^k (d,)
+    g: jnp.ndarray  # server estimate g^k (d,)
+    x0: jnp.ndarray  # initial point (for SHB and logging)
+    key: jax.Array
+    step: jnp.ndarray  # int32
+
+
+class ByzVRMarinaPP:
+    """Server-side driver.  ``init`` then repeatedly ``step`` (jittable)."""
+
+    def __init__(self, problem: FedProblem, cfg: MarinaPPConfig):
+        self.problem = problem
+        self.cfg = cfg
+        self.agg: Aggregator = make_aggregator(cfg.aggregator, bucket_s=cfg.bucket_s)
+        self.compressor: Compressor = make_compressor(
+            cfg.compressor, **dict(cfg.compressor_kwargs)
+        )
+        self.attack: Attack = make_attack(cfg.attack)
+        if not (1 <= cfg.C <= cfg.C_hat <= problem.n_clients):
+            raise ValueError("need 1 <= C <= C_hat <= n")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_theory(cls, problem: FedProblem, *, C: int, C_hat: int,
+                    p: float, delta: float, theorem: str = "4.1",
+                    aggregator: str = "cm", bucket_s: int = 2,
+                    attack: str = "none", batch: int = 32,
+                    compressor: str = "identity", compressor_kwargs=()):
+        """Instantiate with the stepsize/clip level prescribed by Theorem
+        4.1/4.2 (repro.core.theory) using the problem's smoothness bound."""
+        from .theory import MarinaTheory
+
+        L = problem.smoothness()
+        comp = make_compressor(compressor, **dict(compressor_kwargs))
+        th = MarinaTheory(
+            n=problem.n_clients, G=problem.n_good, C=C, C_hat=C_hat,
+            delta=delta, p=p, L=L, omega=comp.omega(problem.dim),
+            d_q=comp.dq(problem.dim) or 1.0,
+        )
+        cfg = MarinaPPConfig(
+            gamma=th.gamma(theorem), p=p, C=C, C_hat=C_hat, batch=batch,
+            clip_alpha=th.clip_alpha(theorem), use_clipping=True,
+            aggregator=aggregator, bucket_s=bucket_s,
+            compressor=compressor, compressor_kwargs=tuple(compressor_kwargs),
+            attack=attack,
+        )
+        return cls(problem, cfg)
+
+    def init(self, x0: Optional[jnp.ndarray] = None) -> MarinaPPState:
+        x = self.problem.x0 if x0 is None else x0
+        # g^0: aggregate of initial full gradients over ALL clients (honest
+        # init, standard for VR methods; byz rows included via aggregation).
+        g0 = self.agg(
+            self.problem.all_full_grads(x), key=jax.random.PRNGKey(self.cfg.seed)
+        )
+        return MarinaPPState(
+            x=x,
+            g=g0,
+            x0=x,
+            key=jax.random.PRNGKey(self.cfg.seed + 1),
+            step=jnp.int32(0),
+        )
+
+    # ------------------------------------------------------------------
+    def _sample_cohort(self, key, c_k):
+        """Uniform cohort: first C (or C_hat) entries of a permutation."""
+        n = self.problem.n_clients
+        perm = jax.random.permutation(key, n)
+        size = jnp.where(c_k, self.cfg.C_hat, self.cfg.C)
+        rank = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+        return rank < size  # (n,) sampled mask
+
+    def _attack_ctx(self, honest, sampled, x_new, x_old, g_prev, x0, key):
+        n = self.problem.n_clients
+        good = jnp.arange(n) < self.problem.n_good
+        n_good_s = jnp.sum((good & sampled).astype(jnp.int32))
+        n_byz_s = jnp.sum((~good & sampled).astype(jnp.int32))
+        return AttackContext(
+            honest=honest,
+            good_mask=good,
+            sampled=sampled,
+            x_now=x_new,
+            x_prev=x_old,
+            x0=x0,
+            g_prev=g_prev,
+            byz_majority=n_byz_s > n_good_s,
+            key=key,
+        )
+
+    # ------------------------------------------------------------------
+    def step(self, state: MarinaPPState) -> MarinaPPState:
+        cfg = self.cfg
+        prob = self.problem
+        n = prob.n_clients
+        good = jnp.arange(n) < prob.n_good
+
+        key, k_bern, k_cohort, k_q, k_att, k_agg = jax.random.split(state.key, 6)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+        sampled = self._sample_cohort(k_cohort, c_k)
+
+        x_new = state.x - cfg.gamma * state.g
+        lam = marina_radius(x_new, state.x, cfg.clip_alpha)
+        lam = jnp.where(cfg.use_clipping, lam, jnp.float32(3.4e37))
+
+        def full_branch(_):
+            grads = prob.all_full_grads(x_new)  # (n, d)
+            ctx = self._attack_ctx(
+                grads, sampled, x_new, state.x, state.g, state.x0, k_att
+            )
+            payload = self.attack(ctx)
+            msgs = jnp.where(good[:, None], grads, payload)
+            return self.agg(msgs, mask=sampled, key=k_agg)
+
+        def diff_branch(_):
+            diffs = prob.all_minibatch_diffs(k_q, x_new, state.x, cfg.batch)
+            qkeys = jax.random.split(k_q, n)
+            qdiffs = jax.vmap(self.compressor)(qkeys, diffs)
+            ctx = self._attack_ctx(
+                qdiffs, sampled, x_new, state.x, state.g, state.x0, k_att
+            )
+            payload = self.attack(ctx)
+            msgs = jnp.where(good[:, None], qdiffs, payload)
+            clipped = jax.vmap(lambda v: clip(v, lam))(msgs)  # server-side clip
+            return state.g + self.agg(clipped, mask=sampled, key=k_agg)
+
+        g_new = jax.lax.cond(c_k, full_branch, diff_branch, operand=None)
+        return MarinaPPState(
+            x=x_new, g=g_new, x0=state.x0, key=key, step=state.step + 1
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int, state: Optional[MarinaPPState] = None, log_every: int = 0):
+        """Run ``steps`` iterations with ``lax.scan``; returns (state, metrics)
+        where metrics = dict(loss, grad_norm) sampled every iteration."""
+        if state is None:
+            state = self.init()
+
+        def scan_body(st, _):
+            st2 = self.step(st)
+            metrics = (
+                self.problem.loss(st2.x),
+                jnp.linalg.norm(self.problem.grad(st2.x)),
+            )
+            return st2, metrics
+
+        state, (losses, gnorms) = jax.lax.scan(
+            scan_body, state, None, length=steps
+        )
+        return state, {"loss": losses, "grad_norm": gnorms}

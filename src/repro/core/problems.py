@@ -1,0 +1,212 @@
+"""Federated finite-sum problems (eq. 1) for the simulation engine.
+
+A ``FedProblem`` bundles the stacked per-client datasets and jit-friendly
+oracles over a FLAT parameter vector:
+
+  full_grad(x, i)            = grad f_i(x)                      (d,)
+  minibatch_diff(key,x+,x,i) = Dhat_i(x+, x)  unbiased, batch b (d,)
+  loss(x)                    = f(x) over the good clients only
+
+Clients 0..G-1 are good, G..n-1 byzantine.  Byzantine clients still carry
+datasets (label-flip trains on corrupted labels — a data-level attack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .tree_utils import tree_ravel
+
+__all__ = ["FedProblem", "logistic_problem", "mlp_problem"]
+
+
+@dataclasses.dataclass
+class FedProblem:
+    name: str
+    dim: int
+    n_clients: int
+    n_good: int
+    m: int  # samples per client
+    loss_sample: Callable  # (x_vec, feature, label) -> scalar
+    features: jnp.ndarray  # (n, m, ...)
+    labels: jnp.ndarray  # (n, m)
+    x0: jnp.ndarray  # (d,)
+    l2: float = 0.0
+
+    # ---- oracles ---------------------------------------------------------
+    def _client_loss(self, x, i):
+        per = jax.vmap(self.loss_sample, in_axes=(None, 0, 0))(
+            x, self.features[i], self.labels[i]
+        )
+        return jnp.mean(per) + 0.5 * self.l2 * jnp.sum(x * x)
+
+    def _batch_loss(self, x, feats, labs):
+        per = jax.vmap(self.loss_sample, in_axes=(None, 0, 0))(x, feats, labs)
+        return jnp.mean(per) + 0.5 * self.l2 * jnp.sum(x * x)
+
+    def full_grad(self, x, i):
+        return jax.grad(self._client_loss)(x, i)
+
+    def all_full_grads(self, x):
+        """(n, d) full local gradients — one row per client."""
+        return jax.vmap(lambda i: self.full_grad(x, i))(
+            jnp.arange(self.n_clients)
+        )
+
+    def minibatch_diff(self, key, x_new, x_old, i, batch: int):
+        """Dhat_i(x_new, x_old) with a shared minibatch (SARAH/PAGE-style:
+        the SAME samples evaluated at both points)."""
+        idx = jax.random.randint(key, (batch,), 0, self.m)
+        feats = self.features[i][idx]
+        labs = self.labels[i][idx]
+        g_new = jax.grad(self._batch_loss)(x_new, feats, labs)
+        g_old = jax.grad(self._batch_loss)(x_old, feats, labs)
+        return g_new - g_old
+
+    def all_minibatch_diffs(self, key, x_new, x_old, batch: int):
+        keys = jax.random.split(key, self.n_clients)
+        return jax.vmap(
+            lambda k, i: self.minibatch_diff(k, x_new, x_old, i, batch)
+        )(keys, jnp.arange(self.n_clients))
+
+    def loss(self, x):
+        """Global objective f(x) — average over the GOOD clients (eq. 1)."""
+        ls = jax.vmap(lambda i: self._client_loss(x, i))(
+            jnp.arange(self.n_good)
+        )
+        return jnp.mean(ls)
+
+    def grad(self, x):
+        return jax.grad(self.loss)(x)
+
+    # smoothness constant (upper bound) for logistic regression
+    def smoothness(self) -> float:
+        feats = self.features.reshape(-1, self.features.shape[-1])
+        row_sq = jnp.sum(feats * feats, axis=-1)
+        return float(0.25 * jnp.max(row_sq) + self.l2)
+
+
+# ---------------------------------------------------------------------------
+# concrete problems
+# ---------------------------------------------------------------------------
+
+def _logistic_loss(x, a, y):
+    z = jnp.dot(a, x)
+    # numerically-stable BCE with logits
+    return jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def logistic_problem(
+    key,
+    *,
+    n_clients: int = 20,
+    n_good: int = 15,
+    m: int = 500,
+    dim: int = 50,
+    l2: float = 0.01,
+    homogeneous: bool = True,
+    label_flip_byz: bool = False,
+) -> FedProblem:
+    """Synthetic a9a-like l2-regularized logistic regression.
+
+    ``homogeneous=True`` replicates the paper's Fig.-1 setting where every
+    worker holds the full dataset (zeta = 0)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    if homogeneous:
+        feats_one = jax.random.normal(k1, (m, dim)) / jnp.sqrt(dim)
+        w_true = jax.random.normal(k2, (dim,))
+        logits = feats_one @ w_true
+        labels_one = (jax.random.uniform(k3, (m,)) < jax.nn.sigmoid(logits)).astype(
+            jnp.float32
+        )
+        feats = jnp.broadcast_to(feats_one[None], (n_clients, m, dim))
+        labels = jnp.broadcast_to(labels_one[None], (n_clients, m))
+    else:
+        feats = jax.random.normal(k1, (n_clients, m, dim)) / jnp.sqrt(dim)
+        # heterogeneity: per-client shifted ground truth
+        w_true = jax.random.normal(k2, (dim,))
+        shifts = 0.5 * jax.random.normal(k3, (n_clients, dim))
+        logits = jnp.einsum("nmd,nd->nm", feats, w_true[None] + shifts)
+        labels = (logits > 0).astype(jnp.float32)
+    if label_flip_byz:
+        byz = jnp.arange(n_clients) >= n_good
+        labels = jnp.where(byz[:, None], 1.0 - labels, labels)
+    return FedProblem(
+        name="logreg",
+        dim=dim,
+        n_clients=n_clients,
+        n_good=n_good,
+        m=m,
+        loss_sample=_logistic_loss,
+        features=feats,
+        labels=labels,
+        x0=jnp.zeros((dim,)),
+        l2=l2,
+    )
+
+
+def mlp_problem(
+    key,
+    *,
+    n_clients: int = 20,
+    n_good: int = 15,
+    m: int = 256,
+    in_dim: int = 64,
+    hidden: int = 32,
+    n_classes: int = 10,
+    heterogeneous: bool = True,
+    label_flip_byz: bool = False,
+) -> FedProblem:
+    """MNIST-like two-layer MLP classification with (optionally) a
+    heterogeneous label split across clients (each client over-represents a
+    subset of classes, as in Karimireddy et al., 2021)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    feats = jax.random.normal(k1, (n_clients, m, in_dim))
+    w_star = jax.random.normal(k2, (in_dim, n_classes))
+    logits = jnp.einsum("nmd,dc->nmc", feats, w_star)
+    labels = jnp.argmax(logits + 0.5 * jax.random.normal(k3, logits.shape), axis=-1)
+    if heterogeneous:
+        # bias each client towards 2 "home" classes by relabelling a chunk
+        home = (jnp.arange(n_clients) * 2) % n_classes
+        chunk = m // 2
+        labels = labels.at[:, :chunk].set(home[:, None])
+    if label_flip_byz:
+        byz = jnp.arange(n_clients) >= n_good
+        labels = jnp.where(byz[:, None], (n_classes - 1) - labels, labels)
+
+    shapes = dict(
+        w1=(in_dim, hidden), b1=(hidden,), w2=(hidden, n_classes), b2=(n_classes,)
+    )
+    sizes = {k: int(jnp.prod(jnp.asarray(v))) for k, v in shapes.items()}
+    dim = sum(sizes.values())
+
+    def unpack(x):
+        out = {}
+        off = 0
+        for name, shp in shapes.items():
+            out[name] = x[off : off + sizes[name]].reshape(shp)
+            off += sizes[name]
+        return out
+
+    def loss_sample(x, a, y):
+        p = unpack(x)
+        h = jnp.tanh(a @ p["w1"] + p["b1"])
+        z = h @ p["w2"] + p["b2"]
+        return -jax.nn.log_softmax(z)[y.astype(jnp.int32)]
+
+    x0 = 0.1 * jax.random.normal(k4, (dim,))
+    return FedProblem(
+        name="mlp",
+        dim=dim,
+        n_clients=n_clients,
+        n_good=n_good,
+        m=m,
+        loss_sample=loss_sample,
+        features=feats,
+        labels=labels.astype(jnp.float32),
+        x0=x0,
+        l2=0.0,
+    )

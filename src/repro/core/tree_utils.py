@@ -1,0 +1,102 @@
+"""Pytree <-> flat-vector utilities used throughout the core algorithms.
+
+The paper's algebra (clipping radii, robust aggregation, compression) is
+defined on vectors in R^d.  Model parameters/gradients are pytrees; these
+helpers move between the two representations without host round-trips so the
+whole algorithm stays jittable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "tree_ravel",
+    "tree_unravel",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_axpy",
+    "tree_zeros_like",
+    "tree_dot",
+    "tree_norm",
+    "global_norm",
+    "tree_size",
+]
+
+
+def tree_ravel(tree):
+    """Flatten a pytree of arrays into a single 1-D vector.
+
+    Returns (vector, unravel_fn).  Unlike
+    ``jax.flatten_util.ravel_pytree`` we keep a jit-friendly closure and cast
+    everything to a common dtype (the widest float present).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    dtype = jnp.result_type(*dtypes) if leaves else jnp.float32
+    vec = (
+        jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+        if leaves
+        else jnp.zeros((0,), dtype)
+    )
+
+    def unravel(v):
+        out = []
+        offset = 0
+        for shape, dt, size in zip(shapes, dtypes, sizes):
+            out.append(v[offset : offset + size].reshape(shape).astype(dt))
+            offset += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unravel
+
+
+def tree_unravel(template, vec):
+    """Unravel ``vec`` into the structure/shapes/dtypes of ``template``."""
+    _, unravel = tree_ravel(template)
+    return unravel(vec)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+# Alias matching common framework naming.
+global_norm = tree_norm
+
+
+def tree_size(a) -> int:
+    """Total number of scalar coordinates (static)."""
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(a)))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the aggregation hot-spot (validated in
+interpret mode on CPU; see ops.py for the public wrappers)."""
+from .ops import (  # noqa: F401
+    bucketed_coordinate_median,
+    centered_clip,
+    clipped_diff,
+    coordinate_median,
+    trimmed_mean,
+)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: masked coordinate-wise median / trimmed mean over
+workers.
+
+The server aggregation streams (n_workers, d) with d ~ 1e8..1e11 and tiny
+n (<= 64): a memory-bound reduction.  TPU mapping (vs. GPU per-coordinate
+warp sorts): tile the coordinate axis into lane-aligned VMEM blocks of
+(n, TILE_D) and compute order statistics with an O(n^2) comparison-count
+selection network over the sublane axis — for n <= 64 this is cheaper than
+a bitonic sort and vectorizes perfectly across the 128-lane VPU.
+
+Masking (partial participation) pushes unsampled rows to +BIG so they sort
+to the top; ranks are made unique with index tie-breaking, so the selected
+order statistics match numpy median semantics exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+_BIG = 3.4e37
+TILE_D = 512  # lanes: 512 = 4 * 128; sublanes: n (padded to 8)
+
+
+def _ranks(vals, n):
+    """Unique ranks of each row per coordinate: (n, td) int32."""
+    vi = vals[:, None, :]  # (n, 1, td)
+    vj = vals[None, :, :]  # (1, n, td)
+    less = (vj < vi).astype(jnp.int32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n, 1), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n, 1), 1)
+    tie = ((vj == vi) & (jj < ii)).astype(jnp.int32)
+    return jnp.sum(less + tie, axis=1)  # (n, td)
+
+
+def _cm_kernel(mask_ref, x_ref, o_ref):
+    x = x_ref[...].astype(F32)  # (n, td)
+    m = mask_ref[...].astype(F32)  # (n, 1)
+    n = x.shape[0]
+    vals = jnp.where(m > 0.5, x, _BIG)
+    cnt = jnp.sum(m, dtype=F32).astype(jnp.int32)
+    rank = _ranks(vals, n)
+    lo = (cnt - 1) // 2
+    hi = cnt // 2
+    pick = (rank == lo).astype(F32) + (rank == hi).astype(F32)
+    o_ref[...] = (0.5 * jnp.sum(vals * pick, axis=0, keepdims=True)).astype(
+        o_ref.dtype
+    )
+
+
+def _tm_kernel(mask_ref, x_ref, o_ref, *, trim_ratio):
+    x = x_ref[...].astype(F32)
+    m = mask_ref[...].astype(F32)
+    n = x.shape[0]
+    vals = jnp.where(m > 0.5, x, _BIG)
+    cnt = jnp.sum(m, dtype=F32).astype(jnp.int32)
+    rank = _ranks(vals, n)
+    t = jnp.minimum(
+        jnp.ceil(trim_ratio * cnt.astype(F32)).astype(jnp.int32), (cnt - 1) // 2
+    )
+    keep = ((rank >= t) & (rank < cnt - t)).astype(F32)
+    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
+    o_ref[...] = (
+        jnp.sum(vals * keep, axis=0, keepdims=True) / denom
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("trim_ratio", "interpret"))
+def coordinate_median(xs, mask=None, *, trim_ratio: float = -1.0, interpret: bool = False):
+    """(n, d) -> (d,): masked CM (trim_ratio < 0) or trimmed mean.
+
+    Tiles d into (n, TILE_D) VMEM blocks; one grid step per tile.
+    """
+    n, d = xs.shape
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    mask = mask.astype(jnp.float32).reshape(n, 1)
+    xp, pad = _pad_to(xs, TILE_D, axis=1)
+    dp = xp.shape[1]
+    grid = dp // TILE_D
+    kernel = (
+        _cm_kernel
+        if trim_ratio < 0
+        else functools.partial(_tm_kernel, trim_ratio=trim_ratio)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # mask: resident
+            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), xs.dtype),
+        interpret=interpret,
+    )(mask, xp)
+    out = out[0]
+    return out[:d] if pad else out

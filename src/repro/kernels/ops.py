@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU (this container) they execute in
+``interpret=True`` mode — the kernel bodies run in Python with identical
+semantics, which is what the allclose sweeps in tests/test_kernels.py rely
+on.  Callers never pass ``interpret`` themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref  # noqa: F401  (re-exported for convenience)
+from .bucketing import bucketed_coordinate_median as _bucketed_cm
+from .centered_clip import centered_clip as _centered_clip
+from .clipped_diff import clipped_diff as _clipped_diff
+from .coordinate_median import coordinate_median as _coordinate_median
+
+__all__ = [
+    "coordinate_median",
+    "trimmed_mean",
+    "clipped_diff",
+    "centered_clip",
+    "bucketed_coordinate_median",
+    "ref",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def coordinate_median(xs, mask=None):
+    return _coordinate_median(xs, mask, trim_ratio=-1.0, interpret=_interpret())
+
+
+def trimmed_mean(xs, mask=None, trim_ratio: float = 0.1):
+    return _coordinate_median(
+        xs, mask, trim_ratio=trim_ratio, interpret=_interpret()
+    )
+
+
+def clipped_diff(g_new, g_old, radius, keep_mask, scale):
+    return _clipped_diff(
+        g_new, g_old, radius, keep_mask, scale, interpret=_interpret()
+    )
+
+
+def centered_clip(xs, mask=None, *, tau: float = 10.0, iters: int = 5):
+    return _centered_clip(
+        xs, mask, tau=tau, iters=iters, interpret=_interpret()
+    )
+
+
+def bucketed_coordinate_median(xs, key, mask=None, *, s: int = 2):
+    return _bucketed_cm(xs, key, mask, s=s, interpret=_interpret())

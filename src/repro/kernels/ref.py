@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def coordinate_median_ref(xs, mask=None):
+    """xs: (n, d) -> (d,) coordinate-wise median over rows with mask[i]."""
+    if mask is None:
+        mask = jnp.ones((xs.shape[0],), bool)
+    big = jnp.asarray(3.4e37, F32)
+    vals = jnp.where(mask[:, None], xs.astype(F32), big)
+    s = jnp.sort(vals, axis=0)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    lo = jnp.take(s, (cnt - 1) // 2, axis=0)
+    hi = jnp.take(s, cnt // 2, axis=0)
+    return (0.5 * (lo + hi)).astype(xs.dtype)
+
+
+def trimmed_mean_ref(xs, mask=None, trim_ratio=0.1):
+    if mask is None:
+        mask = jnp.ones((xs.shape[0],), bool)
+    big = jnp.asarray(3.4e37, F32)
+    n = xs.shape[0]
+    vals = jnp.where(mask[:, None], xs.astype(F32), big)
+    s = jnp.sort(vals, axis=0)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    t = jnp.minimum(jnp.ceil(trim_ratio * cnt).astype(jnp.int32), (cnt - 1) // 2)
+    idx = jnp.arange(n)[:, None]
+    keep = (idx >= t) & (idx < cnt - t)
+    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
+    return (jnp.sum(jnp.where(keep, s, 0.0), axis=0) / denom).astype(xs.dtype)
+
+
+def clipped_diff_ref(g_new, g_old, radius, keep_mask, scale):
+    """Fused gradient-difference -> RandK mask -> clip.
+
+    d = (g_new - g_old) * keep_mask * scale;  out = min(1, radius/||d||) d.
+    keep_mask/scale implement RandK (mask precomputed by the host RNG).
+    Returns (clipped, norm).
+    """
+    d = (g_new.astype(F32) - g_old.astype(F32)) * keep_mask.astype(F32) * scale
+    norm = jnp.sqrt(jnp.sum(d * d))
+    factor = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
+    return (d * factor).astype(g_new.dtype), norm
+
+
+def centered_clip_ref(xs, tau, iters, mask=None):
+    """CenteredClip fixed point: v <- v + mean_i clip_tau(x_i - v)."""
+    if mask is None:
+        mask = jnp.ones((xs.shape[0],), bool)
+    m = mask.astype(F32)
+    x32 = xs.astype(F32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    v = jnp.sum(x32 * m[:, None], axis=0) / denom
+
+    def body(_, v):
+        diff = x32 - v[None]
+        nrm = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-30)
+        scale = jnp.minimum(1.0, tau / nrm)
+        return v + jnp.sum(diff * (scale * m)[:, None], axis=0) / denom
+
+    return jax.lax.fori_loop(0, iters, body, v).astype(xs.dtype)
+
+
+def bucketed_cm_ref(xs, perm, mask=None, s=2):
+    """Bucketing(s) o CM with an explicit permutation (matches the kernel:
+    mask-weighted bucket means; empty buckets masked out of the median)."""
+    n = xs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    mask = mask.astype(F32)
+    pad = (-n) % s
+    if pad:
+        xs = jnp.pad(xs, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, (0, pad))
+    xp = jnp.take(xs.astype(F32), perm, axis=0)
+    mp = jnp.take(mask, perm, axis=0)
+    nb = xp.shape[0] // s
+    xb = xp.reshape(nb, s, -1)
+    mb = mp.reshape(nb, s, 1)
+    cnt = jnp.sum(mb, axis=1)
+    means = jnp.sum(xb * mb, axis=1) / jnp.maximum(cnt, 1.0)
+    return coordinate_median_ref(means.astype(xs.dtype), (cnt[:, 0] > 0.5))

@@ -1,0 +1,1 @@
+"""Launch layer: mesh construction, distributed trainer, serving, dry-run."""

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Single pod:  (data=16, model=16)          — 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)   — 512 chips across 2 pods
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run launcher sets XLA_FLAGS before any jax import to fake
+the device count; real deployments get the real topology.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = [
+    "make_production_mesh",
+    "make_debug_mesh",
+    "worker_axes",
+    "num_workers",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU subprocess tests (device count permitting)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )
+
+
+def worker_axes(mesh) -> tuple:
+    """Mesh axes that enumerate Byz-VR-MARINA-PP workers/clients."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_workers(mesh) -> int:
+    n = 1
+    for a in worker_axes(mesh):
+        n *= mesh.shape[a]
+    return n

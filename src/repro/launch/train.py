@@ -1,0 +1,526 @@
+"""Distributed Byz-VR-MARINA-PP trainer for the production mesh.
+
+Mapping (see DESIGN.md §4): worker == (pod, data) mesh index; per-worker
+variance-reduced gradients are computed with ``jax.vmap(..,
+spmd_axis_name=worker_axes)`` (so XLA pins the worker dim to the data axes
+and never replicates it), then clipped/compressed messages are robustly
+aggregated ACROSS the worker axes with one of two collective schedules:
+
+  naive    — the paper's parameter-server semantics: gather every worker's
+             message (XLA all-gathers the worker dim), aggregate everywhere.
+             Collective bytes per chip ~ W * |shard|.
+  sharded  — beyond-paper scatter-aggregate-gather: all_to_all the worker
+             messages so each chip owns all W values for 1/W-th of its
+             coordinates, aggregate locally, all_gather the result.
+             Collective bytes per chip ~ 2 * |shard|; peak memory W× lower.
+
+Both schedules compute the identical (delta, c)-robust aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.tree_utils import tree_norm
+from repro.models.model import ModelConfig, apply_train, init_params
+from repro.sharding import constraints as cons
+from repro.sharding.rules import batch_specs, param_specs, state_sharding
+from .mesh import num_workers, worker_axes
+
+__all__ = ["ByzTrainConfig", "MeshTrainState", "make_train_step", "abstract_state"]
+
+F32 = jnp.float32
+_BIG = F32(3.4e37)
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzTrainConfig:
+    gamma: float = 3e-4
+    p: float = 0.125  # Bernoulli full-grad probability
+    n_byz: int = 0  # trailing workers are byzantine
+    C: int = 0  # sampled cohort size (0 => all workers)
+    clip_alpha: float = 2.0  # lambda = clip_alpha * ||x+ - x||
+    use_clipping: bool = True
+    aggregator: str = "cm"  # "cm" | "tm" | "bucket_cm" | "cclip" | "mean"
+    trim_ratio: float = 0.25
+    bucket_s: int = 2
+    agg_schedule: str = "sharded"  # "naive" | "sharded"
+    attack: str = "bf"  # "none" | "bf" | "gauss"
+    compress_frac: float = 0.0  # leafwise RandK fraction (0 = off)
+    shard_mode: str = "tp"  # "tp" | "fsdp_tp"
+    # Workers normally enumerate over every batch-like mesh axis
+    # (pod x data).  For FSDP-scale models on the multi-pod mesh, set
+    # ("pod",) so each pod is ONE worker and "data" stays free for FSDP —
+    # per-worker gradients then shard over data x model and fit HBM
+    # (see DESIGN.md "the per-worker-gradient memory wall").
+    worker_axes_override: tuple = ()
+    seed: int = 0
+
+
+class MeshTrainState(NamedTuple):
+    params: object  # x^k
+    g: object  # g^k (gradient-shaped)
+    key: jax.Array
+    step: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation over the worker axis (axis 0 of every leaf)
+# ---------------------------------------------------------------------------
+
+def _bcast_mask(mask, leaf):
+    return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def _masked_cm_axis0(leaf, mask):
+    W = leaf.shape[0]
+    vals = jnp.where(_bcast_mask(mask, leaf), leaf.astype(F32), _BIG)
+    s = jnp.sort(vals, axis=0)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    lo = jnp.take(s, (cnt - 1) // 2, axis=0)
+    hi = jnp.take(s, cnt // 2, axis=0)
+    return (0.5 * (lo + hi)).astype(leaf.dtype)
+
+
+def _masked_tm_axis0(leaf, mask, trim_ratio):
+    W = leaf.shape[0]
+    vals = jnp.where(_bcast_mask(mask, leaf), leaf.astype(F32), _BIG)
+    s = jnp.sort(vals, axis=0)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    t = jnp.minimum(jnp.ceil(trim_ratio * cnt).astype(jnp.int32), (cnt - 1) // 2)
+    idx = jnp.arange(W).reshape((W,) + (1,) * (leaf.ndim - 1))
+    keep = (idx >= t) & (idx < cnt - t)
+    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
+    return (jnp.sum(jnp.where(keep, s, 0.0), axis=0) / denom).astype(leaf.dtype)
+
+
+def _masked_mean_axis0(leaf, mask):
+    m = _bcast_mask(mask, leaf).astype(F32)
+    denom = jnp.maximum(jnp.sum(mask.astype(F32)), 1.0)
+    return (jnp.sum(leaf.astype(F32) * m, axis=0) / denom).astype(leaf.dtype)
+
+
+def _bucketed_cm_axis0(leaf, mask, key, s):
+    """Bucketing o CM over the worker axis (mask-weighted bucket means)."""
+    W = leaf.shape[0]
+    perm = jax.random.permutation(key, W)
+    lp = jnp.take(leaf, perm, axis=0)
+    mp = jnp.take(mask, perm, axis=0)
+    nb = -(-W // s)
+    pad = nb * s - W
+    if pad:
+        lp = jnp.concatenate([lp, jnp.zeros_like(lp[:pad])], axis=0)
+        mp = jnp.concatenate([mp, jnp.zeros_like(mp[:pad])], axis=0)
+    lb = lp.reshape((nb, s) + lp.shape[1:]).astype(F32)
+    mb = mp.reshape(nb, s).astype(F32)
+    cnt = jnp.sum(mb, axis=1)
+    mbb = mb.reshape((nb, s) + (1,) * (leaf.ndim - 1))
+    means = jnp.sum(lb * mbb, axis=1) / jnp.maximum(cnt, 1.0).reshape(
+        (nb,) + (1,) * (leaf.ndim - 1)
+    )
+    return _masked_cm_axis0(means.astype(leaf.dtype), cnt > 0)
+
+
+def _masked_cclip_axis0(leaf, mask, tau=10.0, iters=5):
+    """CenteredClip over the worker axis (leaf flattened locally)."""
+    W = leaf.shape[0]
+    flat = leaf.reshape(W, -1).astype(F32)
+    m = mask.astype(F32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    v0 = jnp.sum(flat * m[:, None], axis=0) / denom
+
+    def body(_, v):
+        diff = flat - v[None]
+        nrm = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-30)
+        scale = jnp.minimum(1.0, tau / nrm) * m
+        return v + jnp.sum(diff * scale[:, None], axis=0) / denom
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return v.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+
+def _make_leaf_agg(cfg: ByzTrainConfig):
+    if cfg.aggregator == "cclip":
+        return lambda leaf, mask, key: _masked_cclip_axis0(leaf, mask)
+    if cfg.aggregator == "cm":
+        return lambda leaf, mask, key: _masked_cm_axis0(leaf, mask)
+    if cfg.aggregator == "tm":
+        return lambda leaf, mask, key: _masked_tm_axis0(leaf, mask, cfg.trim_ratio)
+    if cfg.aggregator == "mean":
+        return lambda leaf, mask, key: _masked_mean_axis0(leaf, mask)
+    if cfg.aggregator == "bucket_cm":
+        return lambda leaf, mask, key: _bucketed_cm_axis0(leaf, mask, key, cfg.bucket_s)
+    raise ValueError(f"unknown mesh aggregator {cfg.aggregator!r}")
+
+
+def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
+                     base_specs=None):
+    """Aggregate a worker-stacked pytree (leaves (W, ...)) into the
+    aggregated pytree (leaves (...)) with the configured schedule.
+
+    ``base_specs``: PartitionSpec pytree of the UNSTACKED leaves (the grad
+    sharding).  The sharded schedule runs a fully-manual shard_map matching
+    the exact grad sharding so the in-kernel flatten is chip-local —
+    flattening a model-sharded dim under auto propagation silently
+    all-gathers it (found and fixed during §Perf pair (a): the naive
+    schedule was beating the "optimized" one before this).
+    """
+    leaf_agg = _make_leaf_agg(cfg)
+    waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
+    W = 1
+    for a in waxes:
+        W *= mesh.shape[a]
+
+    if cfg.agg_schedule == "naive" or not waxes:
+        return jax.tree_util.tree_map(lambda l: leaf_agg(l, mask, key), tree_w)
+
+    wspec = waxes if len(waxes) > 1 else waxes[0]
+    if base_specs is None:
+        base_specs = jax.tree_util.tree_map(
+            lambda l: P(*([None] * (l.ndim - 1))), tree_w
+        )
+    in_specs = jax.tree_util.tree_map(
+        lambda s: P(wspec, *s), base_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    def inner(leaf, mask_in, key_in):
+        # fully-manual: leaf is the true per-chip block (1, local dims...)
+        x = leaf[0]
+        shape = x.shape
+        flat = x.reshape(-1)  # chip-local: no hidden resharding
+        pad = (-flat.shape[0]) % W
+        flat = jnp.pad(flat, (0, pad))
+        chunks = flat.reshape(W, -1)
+        sw = chunks
+        for ax in waxes:  # all_to_all over each worker axis in turn
+            n_ax = jax.lax.axis_size(ax)
+            sw = sw.reshape(n_ax, -1, sw.shape[-1])
+            sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
+            sw = sw.reshape(-1, sw.shape[-1])
+        agg = leaf_agg(sw, mask_in, key_in)  # (flat/W,)
+        out = agg
+        for ax in reversed(waxes):
+            out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+        if pad:
+            out = out[: x.size]
+        return out.reshape(shape)
+
+    # every axis referenced by the specs must be marked manual
+    referenced = set(waxes)
+    for sp in jax.tree_util.tree_leaves(
+        base_specs, is_leaf=lambda x: isinstance(x, P)
+    ):
+        for entry in sp:
+            if isinstance(entry, (tuple, list)):
+                referenced.update(entry)
+            elif entry is not None:
+                referenced.add(entry)
+    all_axes = referenced | (
+        {"model"} if "model" in mesh.axis_names else set()
+    )
+    smapped = jax.shard_map(
+        lambda t, m, k: jax.tree_util.tree_map(lambda l: inner(l, m, k), t),
+        mesh=mesh,
+        in_specs=(in_specs, P(), P()),
+        out_specs=base_specs,
+        axis_names=all_axes,
+        check_vma=False,
+    )
+    return smapped(tree_w, mask, key)
+
+
+# ---------------------------------------------------------------------------
+# worker-side messages
+# ---------------------------------------------------------------------------
+
+def _leafwise_randk(key, tree, frac):
+    """Unbiased leafwise RandK (keep ceil(frac*size) coords, scale 1/frac)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        d = leaf.size
+        kk = max(1, int(frac * d))
+        scores = jax.random.uniform(k, (d,))
+        thresh = jax.lax.top_k(scores, kk)[0][-1]
+        mask = (scores >= thresh).reshape(leaf.shape)
+        out.append(leaf * mask.astype(leaf.dtype) * jnp.asarray(d / kk, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _clip_tree_by(tree, radius):
+    norm = tree_norm(tree)
+    factor = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
+    return jax.tree_util.tree_map(lambda l: (l * factor).astype(l.dtype), tree)
+
+
+def _attack_payload(cfg: ByzTrainConfig, key, honest_tree):
+    if cfg.attack == "bf":
+        return jax.tree_util.tree_map(lambda l: -l, honest_tree)
+    if cfg.attack == "gauss":
+        leaves, treedef = jax.tree_util.tree_flatten(honest_tree)
+        keys = jax.random.split(key, len(leaves))
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [
+                (10.0 * jax.random.normal(k, l.shape, F32)).astype(l.dtype)
+                for k, l in zip(keys, leaves)
+            ],
+        )
+    return honest_tree  # "none"
+
+
+# ---------------------------------------------------------------------------
+# the train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
+    """Build the jittable train_step for the mesh."""
+    waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
+    W = 1
+    for a in waxes:
+        W *= mesh.shape[a]
+    C = cfg.C if cfg.C else W
+    spmd = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+
+    def loss_fn(params, wbatch):
+        loss, _aux = apply_train(params, model_cfg, wbatch)
+        return loss
+
+    def per_worker_grads(params, wbatches):
+        gfn = lambda b: jax.grad(loss_fn)(params, b)
+        if spmd is None:
+            return jax.vmap(gfn)(wbatches)
+        ctx = (
+            cons.override_data_axes(("model",))
+            if cfg.shard_mode == "zero3"
+            else cons.override_data_axes(("pod", "data"))
+        )
+        with cons.suspend_data_axis(waxes), ctx:
+            return jax.vmap(gfn, spmd_axis_name=spmd)(wbatches)
+
+    pspecs_cache = {}
+
+    def base_specs_of(tree_w):
+        """Unstacked grad PartitionSpecs (worker axes stripped)."""
+        grad_constraint(tree_w)  # ensure cache is built
+        stripped = jax.tree_util.tree_map(
+            lambda sp: P(*sp[1:]), pspecs_cache["g"],
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return stripped
+
+    def grad_constraint(tree_w):
+        """Pin worker dim to the worker axes; param dims per TP rules."""
+        if not waxes:
+            return tree_w
+        key = "g"
+        if key not in pspecs_cache:
+            shapes = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree_w
+            )
+            base = param_specs(mesh, model_cfg, shapes, mode=cfg.shard_mode)
+            wspec = waxes if len(waxes) > 1 else waxes[0]
+
+            def _with_worker(spec):
+                # the worker dim consumes ``waxes``; drop them from the
+                # per-param dims (a mesh axis may appear only once)
+                def strip(entry):
+                    if entry is None:
+                        return None
+                    if isinstance(entry, (tuple, list)):
+                        kept = tuple(a for a in entry if a not in waxes)
+                        return kept if len(kept) > 1 else (kept[0] if kept else None)
+                    return None if entry in waxes else entry
+
+                return P(wspec, *(strip(e) for e in spec))
+
+            pspecs_cache[key] = jax.tree_util.tree_map(
+                _with_worker, base, is_leaf=lambda x: isinstance(x, P),
+            )
+        return jax.lax.with_sharding_constraint(
+            tree_w,
+            jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pspecs_cache[key],
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+        )
+
+    def train_step(state: MeshTrainState, batch):
+        key, k_bern, k_cohort, k_q, k_att, k_agg = jax.random.split(state.key, 6)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+
+        # x^{k+1} = x^k - gamma g^k ; lambda = alpha ||x+ - x|| = alpha*gamma*||g||
+        params_new = jax.tree_util.tree_map(
+            lambda x, g: (x - cfg.gamma * g.astype(F32)).astype(x.dtype),
+            state.params,
+            state.g,
+        )
+        lam = cfg.clip_alpha * cfg.gamma * tree_norm(state.g)
+        lam = jnp.where(cfg.use_clipping, lam, _BIG)
+
+        # cohort mask over workers; byz mask static
+        perm = jax.random.permutation(k_cohort, W)
+        rank = jnp.zeros((W,), jnp.int32).at[perm].set(jnp.arange(W, dtype=jnp.int32))
+        size = jnp.where(c_k, W, C)  # full cohort on full-grad rounds
+        sampled = rank < size
+        byz = jnp.arange(W) >= (W - cfg.n_byz)
+
+        # reshape batch to per-worker leading dim
+        wbatch = jax.tree_util.tree_map(
+            lambda l: l.reshape((W, l.shape[0] // W) + l.shape[1:]), batch
+        )
+
+        grads_new = grad_constraint(per_worker_grads(params_new, wbatch))
+
+        def diff_branch(_):
+            grads_old = grad_constraint(per_worker_grads(state.params, wbatch))
+            diff = jax.tree_util.tree_map(
+                lambda a, b: a - b, grads_new, grads_old
+            )
+
+            def message(i, d_i):
+                mk = jax.random.fold_in(k_q, i)
+                if cfg.compress_frac > 0.0:
+                    d_i = _leafwise_randk(mk, d_i, cfg.compress_frac)
+                payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), d_i)
+                d_i = jax.tree_util.tree_map(
+                    lambda h, a: jnp.where(byz[i], a, h), d_i, payload
+                )
+                return _clip_tree_by(d_i, lam)  # server-side clip (Alg.1 l.10)
+
+            msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), diff)
+            msgs = grad_constraint(msgs)
+            agg = robust_aggregate(msgs, sampled, k_agg, mesh=mesh, cfg=cfg,
+                                   base_specs=base_specs_of(msgs))
+            return jax.tree_util.tree_map(
+                lambda g, a: (g.astype(F32) + a.astype(F32)).astype(g.dtype),
+                state.g,
+                agg,
+            )
+
+        def full_branch(_):
+            def message(i, g_i):
+                payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), g_i)
+                return jax.tree_util.tree_map(
+                    lambda h, a: jnp.where(byz[i], a, h), g_i, payload
+                )
+
+            msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), grads_new)
+            msgs = grad_constraint(msgs)
+            return robust_aggregate(msgs, sampled, k_agg, mesh=mesh, cfg=cfg,
+                                    base_specs=base_specs_of(msgs))
+
+        g_new = jax.lax.cond(c_k, full_branch, diff_branch, operand=None)
+        return MeshTrainState(
+            params=params_new, g=g_new, key=key, step=state.step + 1
+        )
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def abstract_state(model_cfg: ModelConfig, cfg: ByzTrainConfig):
+    """ShapeDtypeStruct state (no allocation) for dry-run lowering."""
+    pshapes = jax.eval_shape(partial(init_params, cfg=model_cfg), jax.random.PRNGKey(0))
+    g = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), pshapes
+    )
+    return MeshTrainState(
+        params=pshapes,
+        g=g,
+        key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def state_specs(mesh, model_cfg: ModelConfig, state, cfg: ByzTrainConfig):
+    ps = param_specs(mesh, model_cfg, state.params, mode=cfg.shard_mode)
+    return MeshTrainState(
+        params=ps,
+        g=jax.tree_util.tree_map(lambda s: s, ps, is_leaf=lambda x: isinstance(x, P)),
+        key=P(),
+        step=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI launcher:  python -m repro.launch.train --arch minitron-8b --smoke ...
+# ---------------------------------------------------------------------------
+
+def main():
+    import argparse
+    import time
+
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.pipeline import make_batch_iterator
+    from .mesh import make_debug_mesh, make_production_mesh
+
+    ap = argparse.ArgumentParser(description="Byz-VR-MARINA-PP mesh trainer")
+    ap.add_argument("--arch", default="minitron_8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + debug mesh (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--gamma", type=float, default=0.1)
+    ap.add_argument("--n-byz", type=int, default=1)
+    ap.add_argument("--attack", default="bf")
+    ap.add_argument("--aggregator", default="cm")
+    ap.add_argument("--agg-schedule", default="sharded")
+    ap.add_argument("--shard-mode", default="tp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if args.smoke:
+        model_cfg = get_smoke_config(args.arch).replace(dtype="float32", remat=False)
+        mesh = make_debug_mesh(
+            data=max(len(jax.devices()) // 2, 1),
+            model=2 if len(jax.devices()) >= 2 else 1,
+        )
+    else:
+        model_cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    tc = ByzTrainConfig(
+        gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
+        aggregator=args.aggregator, agg_schedule=args.agg_schedule,
+        shard_mode=args.shard_mode,
+    )
+    W = num_workers(mesh)
+    print(f"[train] {model_cfg.name} on mesh {dict(mesh.shape)} "
+          f"({W} workers, {tc.n_byz} byzantine, agg={tc.aggregator})")
+    step_fn = make_train_step(model_cfg, mesh, tc)
+    it = make_batch_iterator(model_cfg, W * args.per_worker_batch, args.seq)
+    with jax.set_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(0), model_cfg)
+        batch0 = next(it)
+        g0 = jax.grad(lambda p: apply_train(p, model_cfg, batch0)[0])(params)
+        state = MeshTrainState(params=params, g=g0,
+                               key=jax.random.PRNGKey(1), step=jnp.int32(0))
+        jstep = jax.jit(step_fn)
+        eval_loss = jax.jit(lambda p, b: apply_train(p, model_cfg, b)[0])
+        t0 = time.time()
+        for k in range(args.steps):
+            state = jstep(state, next(it))
+            if k % 10 == 0 or k == args.steps - 1:
+                print(f"[train] step {k:4d} loss "
+                      f"{float(eval_loss(state.params, batch0)):.4f} "
+                      f"({(time.time()-t0)/(k+1):.2f}s/step)")
+    if args.ckpt_dir:
+        from repro.checkpoint import save
+
+        print("[train] checkpoint:", save(args.ckpt_dir, args.steps, state.params))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: every assigned architecture as a functional-JAX model."""
+from .model import (  # noqa: F401
+    ModelConfig,
+    apply_decode,
+    apply_prefill,
+    apply_train,
+    init_cache,
+    init_params,
+    param_count,
+)

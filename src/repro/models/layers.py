@@ -1,0 +1,394 @@
+"""Functional transformer building blocks shared by all 10 architectures.
+
+Pure-JAX, dependency-free (no flax/haiku): parameters are nested dicts built
+by ``init_*`` functions and consumed by matching ``apply_*`` functions.  All
+matmuls keep bf16 inputs with f32 accumulation where it matters (softmax,
+norms, SSD state).  Attention is a chunked, flash-style scan over KV blocks
+(memory O(chunk) instead of O(S^2)) so 32k-token prefill lowers with bounded
+activations; decode (q_len==1) takes a single masked pass.
+
+Sharding is expressed through ``maybe_constrain`` (repro.sharding) so the
+same code runs un-meshed on CPU tests and partitioned under the production
+mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import maybe_constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(F32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+_NEG_INF = F32(-1e30)
+
+
+def _attend_chunk(q, k, v, mask):
+    """Grouped chunk attention without KV expansion.
+
+    q: (B,G,R,Tq,hd)  k/v: (B,G,Tk,hd)  mask: (1,1,1,Tq,Tk) or None.
+    (G = kv heads, R = query heads per kv head.)  Keeping K/V un-repeated is
+    load-bearing on the mesh: a ``jnp.repeat`` over the head dim forces XLA
+    to rematerialize (all-gather) the L-sharded KV cache every decode step
+    (§Perf pair c).  Returns (scores_max (B,G,R,Tq), exp_sum, weighted_v)
+    in f32."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, k, preferred_element_type=F32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, _NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum(
+        "bgrqk,bgkd->bgrqd", p.astype(v.dtype), v, preferred_element_type=F32
+    )
+    return m, l, o
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    chunk: int = 1024,
+):
+    """Grouped-query attention core.
+
+    q: (B, Tq, H, hd);  k, v: (B, Tk, KV, hd); H % KV == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``window > 0``: sliding-window attention (each query sees the last
+    ``window`` keys) — the sub-quadratic variant used for long_500k.
+    Chunked over Tk with a running log-sum-exp merge (flash-style) whenever
+    Tk > chunk, keeping peak activation memory O(B*H*Tq*chunk).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]  # MLA: value head dim differs from (rope-extended) key dim
+    rep = H // KV
+    qh = jnp.swapaxes(q, 1, 2).reshape(B, KV, rep, Tq, hd)  # (B,G,R,Tq,hd)
+    kh = jnp.swapaxes(k, 1, 2)  # (B,G,Tk,hd)
+    vh = jnp.swapaxes(v, 1, 2)
+
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def mask_for(k_start, width):
+        k_pos = k_start + jnp.arange(width)
+        m = jnp.ones((Tq, width), bool)
+        if causal:
+            m &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            m &= k_pos[None, :] > q_pos[:, None] - window
+        return m[None, None, None]  # (1,1,1,Tq,width)
+
+    def finish(o, l):
+        out = o / jnp.maximum(l, 1e-30)[..., None]  # (B,G,R,Tq,hd_v)
+        out = out.reshape(B, H, Tq, hd_v)
+        return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+    # Single-pass when it fits — ALWAYS for decode (Tq == 1): scores are only
+    # (B,G,R,1,Tk) so chunking buys nothing, and the scan's (n_chunks, ...)
+    # repacking of an L-sharded KV cache forces XLA to rematerialize
+    # (all-gather) the cache every step (§Perf pair c, GQA iteration).
+    if Tk <= chunk or Tq == 1:
+        need_mask = causal or window > 0
+        m, l, o = _attend_chunk(qh, kh, vh, mask_for(0, Tk) if need_mask else None)
+        return finish(o, l)
+
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kh = kh.reshape(B, KV, n_chunks, chunk, hd)
+    vh = vh.reshape(B, KV, n_chunks, chunk, hd_v)
+
+    def body(carry, inputs):
+        m_run, l_run, o_run = carry
+        kc, vc, idx = inputs
+        base = idx * chunk
+        k_pos = base + jnp.arange(chunk)
+        m = jnp.ones((Tq, chunk), bool)
+        if causal:
+            m = m & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        m = m & (k_pos[None, :] < Tk)  # padding
+        mc, lc, oc = _attend_chunk(qh, kc, vc, m[None, None, None])
+        m_new = jnp.maximum(m_run, mc)
+        a = jnp.exp(m_run - m_new)
+        b = jnp.exp(mc - m_new)
+        l_new = l_run * a + lc * b
+        o_new = o_run * a[..., None] + oc * b[..., None]
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, KV, rep, Tq), _NEG_INF)
+    l0 = jnp.zeros((B, KV, rep, Tq), F32)
+    o0 = jnp.zeros((B, KV, rep, Tq, hd_v), F32)
+    kcs = jnp.moveaxis(kh, 2, 0)  # (n_chunks, B,G,chunk,hd)
+    vcs = jnp.moveaxis(vh, 2, 0)
+    (m_f, l_f, o_f), _ = jax.lax.scan(
+        body, (m0, l0, o0), (kcs, vcs, jnp.arange(n_chunks))
+    )
+    return finish(o_f, l_f)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention layer (with KV cache decode path)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype, scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+def gqa_forward(
+    params,
+    cfg,
+    x,
+    *,
+    positions,
+    causal=True,
+    window=0,
+    cache=None,
+    cache_index=None,
+):
+    """Self-attention.  If ``cache`` is given (dict with 'k','v' of shape
+    (B, L, KV, hd)) run incremental decode: write x's k/v at ``cache_index``
+    and attend over the cache.  Returns (out, new_cache)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (x @ params["wk"]).reshape(B, T, KV, hd)
+    v = (x @ params["wv"]).reshape(B, T, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if T > 1:
+        q = maybe_constrain(q, "data", None, "heads", None)
+        k = maybe_constrain(k, "data", None, "kv", None)
+        v = maybe_constrain(v, "data", None, "kv", None)
+    # T == 1 (decode): leave q/k/v replicated over "model" so attention
+    # reduces over the L-sharded cache in place (partial softmax + psum)
+    # instead of gathering the whole cache per step (§Perf pair c).
+
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = attention(
+            q, ck, cv, causal=causal, window=window, q_offset=cache_index
+        )
+    else:
+        new_cache = None
+        out = attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, T, H * hd)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (VLM layers: text queries, vision keys/values)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype, scale=1.0 / math.sqrt(H * hd)),
+        "gate": jnp.zeros((1,), dtype),  # tanh-gated residual (Llama-3.2 style)
+    }
+
+
+def cross_attn_forward(params, cfg, x, vision_kv):
+    """vision_kv: (B, n_vis, d_model) precomputed projected vision states."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    nv = vision_kv.shape[1]
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (vision_kv @ params["wk"]).reshape(B, nv, KV, hd)
+    v = (vision_kv @ params["wv"]).reshape(B, nv, KV, hd)
+    out = attention(q, k, v, causal=False)
+    out = out.reshape(B, T, H * hd) @ params["wo"]
+    return jnp.tanh(params["gate"].astype(F32)).astype(x.dtype) * out
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype):
+    """Low-rank q (rank q_lora_rank) and joint kv compression (kv_lora_rank)
+    with a decoupled RoPE sub-head of qk_rope_dim dims.  The decode cache
+    stores only the latent c_kv plus the rope key: (kv_lora_rank + rope_dim)
+    per token — the paper-faithful memory saving of MLA."""
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    rq, rkv, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_rope_dim
+    nope = hd  # non-rope head dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], d, rq, dtype),
+        "q_norm": init_rmsnorm(rq, dtype),
+        "wq_b": dense_init(ks[1], rq, H * (nope + rd), dtype),
+        "wkv_a": dense_init(ks[2], d, rkv + rd, dtype),
+        "kv_norm": init_rmsnorm(rkv, dtype),
+        "wkv_b": dense_init(ks[3], rkv, H * (nope + nope), dtype),
+        "wo": dense_init(ks[4], H * nope, d, dtype, scale=1.0 / math.sqrt(H * nope)),
+    }
+
+
+def mla_forward(params, cfg, x, *, positions, cache=None, cache_index=None, window=0):
+    """cache: {'ckv': (B, L, rkv), 'krope': (B, L, rd)}."""
+    B, T, d = x.shape
+    H, hd, rd = cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim
+    rkv = cfg.kv_lora_rank
+    nope = hd
+
+    qa = rmsnorm(params["q_norm"], x @ params["wq_a"])
+    q = (qa @ params["wq_b"]).reshape(B, T, H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]  # (B,T,rkv+rd)
+    ckv = rmsnorm(params["kv_norm"], kv_a[..., :rkv])
+    k_rope = apply_rope(kv_a[..., rkv:][:, :, None, :], positions, cfg.rope_theta)[
+        :, :, 0, :
+    ]
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, cache_index, 0)
+        )
+        new_cache = {"ckv": ckv, "krope": k_rope}
+        q_offset = cache_index
+    else:
+        new_cache = None
+        q_offset = 0
+
+    if cache is not None and T == 1:
+        # Absorbed decode (DeepSeek-V2/V3): never expand the latent to
+        # per-head K/V.  Scores contract the query against the latent
+        # directly (W_uk absorbed into q), values are read in latent space
+        # and projected per head afterwards (W_uv applied to the 1-token
+        # attention output).  Cache reads stay (L, rkv + rd) — this is both
+        # the MLA memory win and, on the mesh, the collective win (§Perf).
+        L = ckv.shape[1]
+        wkv_b = params["wkv_b"].reshape(rkv, H, 2 * nope)
+        w_uk = wkv_b[..., :nope]  # (rkv, H, nope)
+        w_uv = wkv_b[..., nope:]  # (rkv, H, nope)
+        q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)  # (B,1,H,rkv)
+        s = jnp.einsum("bthr,blr->bhtl", q_abs.astype(F32), ckv.astype(F32))
+        s = s + jnp.einsum(
+            "bthr,blr->bhtl", q_rope.astype(F32), k_rope.astype(F32)
+        )
+        s = s / math.sqrt(nope + rd)
+        l_pos = jnp.arange(L)
+        mask = l_pos[None, None, None, :] <= q_offset
+        if window:
+            mask = mask & (l_pos[None, None, None, :] > q_offset - window)
+        s = jnp.where(mask, s, _NEG_INF)
+        alpha = jax.nn.softmax(s, axis=-1)  # (B,H,1,L)
+        o_lat = jnp.einsum("bhtl,blr->bthr", alpha, ckv.astype(F32))  # (B,1,H,rkv)
+        out = jnp.einsum("bthr,rhn->bthn", o_lat, w_uv.astype(F32)).astype(x.dtype)
+        out = out.reshape(B, T, H * nope)
+        return out @ params["wo"], new_cache
+
+    # prefill / training: expand latent to per-head keys/values
+    L = ckv.shape[1]
+    kvb = (ckv @ params["wkv_b"]).reshape(B, L, H, 2 * nope)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, L, H, rd))], axis=-1
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(qf, k, v, causal=True, window=window, q_offset=q_offset)
+    out = out.reshape(B, T, H * nope)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype, scale=1.0 / math.sqrt(f)),
+    }
+
+
+def swiglu_forward(params, x):
+    h = jax.nn.silu((x @ params["w_gate"]).astype(F32)).astype(x.dtype) * (
+        x @ params["w_up"]
+    )
+    h = maybe_constrain(h, "data", None, "model")
+    return h @ params["w_down"]

@@ -1,0 +1,500 @@
+"""Unified model assembly for all 10 assigned architectures.
+
+A model is described by a ``ModelConfig``: a *period* of layer specs
+(mixer/mlp kind per position) cycled over the depth, plus embedding /
+modality-frontend configuration.  Layers repeat with period P, so parameters
+are stored **stacked over periods** and the forward pass is a single
+``lax.scan`` over periods with an unrolled inner loop over the P positions —
+this keeps the HLO size O(P) instead of O(L) (essential for compiling the
+61-layer MoE and 100-layer VLM on the production mesh).
+
+Entry points:
+  init_params(key, cfg)                      -> pytree (use jax.eval_shape for dry-runs)
+  apply_train(params, cfg, batch)            -> (loss, aux) for the train_4k shape
+  apply_prefill(params, cfg, batch)          -> last-position logits (prefill_32k)
+  init_cache(cfg, batch, cache_len)          -> decode cache pytree
+  apply_decode(params, cfg, batch, cache, i) -> (logits, new_cache)   (decode shapes)
+
+Modality stubs (the one sanctioned carve-out): hubert consumes precomputed
+frame embeddings, the VLM consumes precomputed projected vision tokens —
+``repro.configs.shapes.input_specs`` fabricates both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import maybe_constrain
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    F32,
+    cross_attn_forward,
+    dense_init,
+    gqa_forward,
+    init_cross_attn,
+    init_gqa,
+    init_mla,
+    init_rmsnorm,
+    init_swiglu,
+    mla_forward,
+    rmsnorm,
+    swiglu_forward,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "apply_train",
+    "apply_prefill",
+    "apply_decode",
+    "init_cache",
+    "param_count",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0
+    # layer pattern (cycled); both tuples must share one period length
+    mixer_pattern: Tuple[str, ...] = ("attn",)  # "attn"|"ssm"|"cross"
+    mlp_pattern: Tuple[str, ...] = ("dense",)  # "dense"|"moe"|"none"
+    first_dense_layers: int = 0  # prefix of attn+dense layers (deepseek-v3)
+    first_dense_ff: int = 0  # FFN width of the prefix layers (0 -> d_ff)
+    causal: bool = True
+    attn_kind: str = "gqa"  # "gqa"|"mla"
+    sliding_window: int = 0  # >0: sliding-window attention (long_500k variant)
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_dense_residual: bool = False  # arctic: dense FFN parallel to MoE
+    capacity_factor: float = 1.25
+    # MLA
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    # SSM
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # IO / modality
+    input_kind: str = "tokens"  # "tokens"|"frames"|"tokens+vision"
+    n_vision_tokens: int = 0
+    frame_dim: int = 0
+    mtp_depth: int = 0  # deepseek-v3 multi-token-prediction aux head
+    dtype: str = "bfloat16"
+    logit_chunk: int = 512  # chunked cross-entropy block
+    remat: bool = True  # activation-checkpoint each scanned layer group
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if len(self.mixer_pattern) != len(self.mlp_pattern):
+            raise ValueError("mixer_pattern and mlp_pattern must share a period")
+        if (self.n_layers - self.first_dense_layers) % len(self.mixer_pattern):
+            raise ValueError(
+                f"{self.name}: n_layers-{self.first_dense_layers} not divisible "
+                f"by period {len(self.mixer_pattern)}"
+            )
+
+    @property
+    def period(self) -> int:
+        return len(self.mixer_pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return (self.n_layers - self.first_dense_layers) // self.period
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, mlp: str, ff: int = 0):
+    km, kf, kn1, kn2 = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    ff = ff or cfg.d_ff
+    layer: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dt)}
+    if mixer == "attn":
+        layer["mixer"] = (
+            init_mla(km, cfg, dt) if cfg.attn_kind == "mla" else init_gqa(km, cfg, dt)
+        )
+    elif mixer == "cross":
+        layer["mixer"] = init_cross_attn(km, cfg, dt)
+    elif mixer == "ssm":
+        layer["mixer"] = ssm_mod.init_mamba2(km, cfg, dt)
+    else:
+        raise ValueError(mixer)
+    if mlp == "none":  # mixer-only block (Mamba-2)
+        return layer
+    layer["norm2"] = init_rmsnorm(cfg.d_model, dt)
+    if mlp == "dense":
+        layer["mlp"] = init_swiglu(kf, cfg.d_model, ff, dt)
+    elif mlp == "moe":
+        layer["mlp"] = moe_mod.init_moe(kf, cfg, dt)
+        if cfg.moe_dense_residual:
+            layer["mlp_dense"] = init_swiglu(kn2, cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(mlp)
+    return layer
+
+
+def _apply_layer(
+    layer,
+    cfg: ModelConfig,
+    mixer: str,
+    mlp: str,
+    x,
+    *,
+    positions,
+    vision=None,
+    cache=None,
+    cache_index=None,
+    window=0,
+):
+    """Returns (x, new_cache, aux) where aux = (lb_loss, z_loss)."""
+    h = rmsnorm(layer["norm1"], x)
+    new_cache = cache
+    if mixer == "attn":
+        if cfg.attn_kind == "mla":
+            out, new_cache = mla_forward(
+                layer["mixer"], cfg, h, positions=positions, cache=cache,
+                cache_index=cache_index, window=window,
+            )
+        else:
+            out, new_cache = gqa_forward(
+                layer["mixer"], cfg, h, positions=positions, causal=cfg.causal,
+                window=window, cache=cache, cache_index=cache_index,
+            )
+    elif mixer == "cross":
+        out = cross_attn_forward(layer["mixer"], cfg, h, vision)
+        new_cache = cache  # cross-attn kv are static vision tokens: no cache
+    elif mixer == "ssm":
+        if x.shape[1] == 1 and cache is not None:
+            out, new_cache = ssm_mod.mamba2_decode_step(layer["mixer"], cfg, h, cache)
+        else:
+            out, new_cache = ssm_mod.mamba2_forward(layer["mixer"], cfg, h, state=cache)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    aux = (jnp.zeros((), F32), jnp.zeros((), F32))
+    if mlp == "none":
+        return x, new_cache, aux
+    h = rmsnorm(layer["norm2"], x)
+    if mlp == "dense":
+        x = x + swiglu_forward(layer["mlp"], h)
+    else:
+        mo = moe_mod.moe_forward(layer["mlp"], cfg, h, capacity_factor=cfg.capacity_factor)
+        extra = swiglu_forward(layer["mlp_dense"], h) if "mlp_dense" in layer else 0
+        x = x + mo.out + extra
+        aux = (mo.lb_loss, mo.z_loss)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    if cfg.input_kind == "frames":
+        params["frontend"] = dense_init(keys[0], cfg.frame_dim, cfg.d_model, dt)
+    else:
+        params["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), F32) * 0.02
+        ).astype(dt)
+
+    # prefix (plain attn+dense) layers, stacked
+    if cfg.first_dense_layers:
+        pk = jax.random.split(keys[1], cfg.first_dense_layers)
+        params["prefix"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, "attn", "dense", ff=cfg.first_dense_ff)
+        )(pk)
+
+    # main body: one stacked pytree per period position
+    body = []
+    for pos in range(cfg.period):
+        pk = jax.random.split(jax.random.fold_in(keys[2], pos), cfg.n_periods)
+        body.append(
+            jax.vmap(
+                lambda k, _pos=pos: _init_layer(
+                    k, cfg, cfg.mixer_pattern[_pos], cfg.mlp_pattern[_pos]
+                )
+            )(pk)
+        )
+    params["body"] = tuple(body)
+
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dt)
+    params["unembed"] = dense_init(keys[3], cfg.d_model, cfg.vocab, dt, scale=0.02)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "layer": _init_layer(keys[4], cfg, "attn", "dense"),
+            "norm": init_rmsnorm(cfg.d_model, dt),
+            "proj": dense_init(keys[5], 2 * cfg.d_model, cfg.d_model, dt),
+        }
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    return sum(int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# embedding / stack runner
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    if cfg.input_kind == "frames":
+        x = batch["frames"].astype(cfg.jdtype) @ params["frontend"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return maybe_constrain(x, "data", None, None)
+
+
+def _run_stack(params, cfg: ModelConfig, x, *, positions, vision=None,
+               caches=None, cache_index=None, window=0):
+    """Scan the prefix layers then the periodic body.
+
+    ``caches``: None (training/prefill without cache) or a dict
+    {"prefix": stacked, "body": tuple of stacked per position} matching
+    init_cache.  Returns (x, new_caches, aux_sum)."""
+    aux = jnp.zeros((2,), F32)
+    new_caches = {"prefix": None, "body": None}
+
+    def prefix_step(carry, inp):
+        h, aux = carry
+        layer, cache = inp
+        h, nc, (lb, zl) = _apply_layer(
+            layer, cfg, "attn", "dense", h, positions=positions, vision=vision,
+            cache=cache, cache_index=cache_index, window=window,
+        )
+        return (h, aux + jnp.stack([lb, zl])), nc
+
+    if cfg.remat:
+        prefix_step = jax.checkpoint(prefix_step)
+
+    if cfg.first_dense_layers:
+        pc = None if caches is None else caches["prefix"]
+        xs = (params["prefix"], pc) if pc is not None else (params["prefix"], None)
+        if pc is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, l: prefix_step(c, (l, None)), (x, aux), params["prefix"]
+            )
+        else:
+            (x, aux), npc = jax.lax.scan(prefix_step, (x, aux), (params["prefix"], pc))
+            new_caches["prefix"] = npc
+
+    def body_step(carry, inp):
+        h, aux = carry
+        layers, caches_slice = inp
+        new_slices = []
+        for pos in range(cfg.period):
+            cache = None if caches_slice is None else caches_slice[pos]
+            h, nc, (lb, zl) = _apply_layer(
+                layers[pos], cfg, cfg.mixer_pattern[pos], cfg.mlp_pattern[pos], h,
+                positions=positions, vision=vision, cache=cache,
+                cache_index=cache_index, window=window,
+            )
+            aux = aux + jnp.stack([lb, zl])
+            new_slices.append(nc)
+        return (h, aux), tuple(new_slices)
+
+    if cfg.remat:
+        body_step = jax.checkpoint(body_step)
+
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, ls: body_step(c, (ls, None)), (x, aux), params["body"]
+        )
+    else:
+        (x, aux), nbc = jax.lax.scan(
+            body_step, (x, aux), (params["body"], caches["body"])
+        )
+        new_caches["body"] = nbc
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# losses / entry points
+# ---------------------------------------------------------------------------
+
+def _chunked_ce(cfg, h, unembed, targets, valid):
+    """Memory-bounded cross-entropy: scan over sequence chunks, recomputing
+    each chunk's logits in the backward pass (jax.checkpoint) so the
+    (B, S, vocab) tensor is never materialized."""
+    B, S, D = h.shape
+    Q = min(cfg.logit_chunk, S)
+    n_chunks = -(-S // Q)
+    pad = n_chunks * Q - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(h.reshape(B, n_chunks, Q, D), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, n_chunks, Q), 1, 0)
+    vc = jnp.moveaxis(valid.reshape(B, n_chunks, Q), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(hq, tq, vq):
+        logits = (hq @ unembed).astype(F32)  # (B, Q, V)
+        logits = maybe_constrain(logits, "data", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tq[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * vq.astype(F32)
+        return jnp.sum(nll), jnp.sum(vq.astype(F32))
+
+    def body(carry, inp):
+        s, n = carry
+        ls, ns = chunk_loss(*inp)
+        return (s + ls, n + ns), None
+
+    (total, count), _ = jax.lax.scan(body, (F32(0.0), F32(0.0)), (hc, tc, vc))
+    return total / jnp.maximum(count, 1.0)
+
+
+def apply_train(params, cfg: ModelConfig, batch):
+    """Next-token (or masked-prediction) training loss.  Returns (loss, aux
+    dict)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    vision = batch.get("vision") if cfg.input_kind == "tokens+vision" else None
+    x, _, aux = _run_stack(
+        params, cfg, x, positions=positions, vision=vision,
+        window=cfg.sliding_window,
+    )
+    h = rmsnorm(params["final_norm"], x)
+
+    if cfg.input_kind == "frames":
+        targets = batch["targets"]
+        valid = batch.get("mask", jnp.ones_like(targets, dtype=bool))
+        loss = _chunked_ce(cfg, h, params["unembed"], targets, valid)
+    else:
+        tokens = batch["tokens"]
+        targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        valid = jnp.arange(S)[None] < S - 1
+        valid = jnp.broadcast_to(valid, (B, S))
+        loss = _chunked_ce(cfg, h, params["unembed"], targets, valid)
+        if cfg.mtp_depth and "mtp" in params:
+            # simplified DeepSeek-V3 MTP: one extra block predicts t+2
+            mtp = params["mtp"]
+            nxt = jnp.take(params["embed"], targets, axis=0)  # emb of t+1
+            hm = jnp.concatenate([h, nxt.astype(h.dtype)], axis=-1) @ mtp["proj"]
+            hm, _, _ = _apply_layer(
+                mtp["layer"], cfg, "attn", "dense", hm, positions=positions
+            )
+            hm = rmsnorm(mtp["norm"], hm)
+            t2 = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
+            v2 = jnp.broadcast_to(jnp.arange(S)[None] < S - 2, (B, S))
+            loss = loss + 0.3 * _chunked_ce(cfg, hm, params["unembed"], t2, v2)
+
+    lb, zl = aux[0], aux[1]
+    n_moe = sum(1 for m in cfg.mlp_pattern if m == "moe") * cfg.n_periods
+    if n_moe:
+        loss = loss + 0.01 * lb / n_moe + 1e-4 * zl / n_moe
+    return loss, {"lb_loss": lb, "z_loss": zl}
+
+
+def apply_prefill(params, cfg: ModelConfig, batch):
+    """Full-sequence forward returning last-position logits (B, vocab)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    vision = batch.get("vision") if cfg.input_kind == "tokens+vision" else None
+    x, _, _ = _run_stack(
+        params, cfg, x, positions=positions, vision=vision,
+        window=cfg.sliding_window,
+    )
+    h = rmsnorm(params["final_norm"], x[:, -1])
+    return (h @ params["unembed"]).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, mixer: str, batch: int, cache_len: int):
+    dt = cfg.jdtype
+    if mixer == "attn":
+        if cfg.attn_kind == "mla":
+            return {
+                "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt),
+                "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    if mixer == "ssm":
+        return ssm_mod.init_ssm_state(cfg, batch, dt)
+    if mixer == "cross":
+        return {"_empty": jnp.zeros((batch, 0), dt)}  # vision kv are inputs
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Decode cache pytree; attention caches hold ``cache_len`` positions
+    (use the sliding window size for long-context configs)."""
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    caches = {"prefix": None, "body": None}
+    if cfg.first_dense_layers:
+        caches["prefix"] = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls),
+            *[
+                _layer_cache(cfg, "attn", batch, cache_len)
+                for _ in range(cfg.first_dense_layers)
+            ],
+        )
+    body = []
+    for pos in range(cfg.period):
+        per = [
+            _layer_cache(cfg, cfg.mixer_pattern[pos], batch, cache_len)
+            for _ in range(cfg.n_periods)
+        ]
+        body.append(jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *per))
+    caches["body"] = tuple(body)
+    return caches
+
+
+def apply_decode(params, cfg: ModelConfig, batch, caches, cache_index):
+    """One-token decode step: batch["tokens"] is (B, 1); ``cache_index`` is
+    the write position (== current sequence length so far, possibly wrapped
+    by the caller for sliding windows).  Returns (logits (B, vocab), caches)."""
+    x = _embed_inputs(params, cfg, batch)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.asarray(cache_index)[None, None], (B, 1)
+    )
+    vision = batch.get("vision") if cfg.input_kind == "tokens+vision" else None
+    x, new_caches, _ = _run_stack(
+        params, cfg, x, positions=positions, vision=vision, caches=caches,
+        cache_index=cache_index, window=cfg.sliding_window,
+    )
+    h = rmsnorm(params["final_norm"], x[:, -1])
+    return (h @ params["unembed"]).astype(F32), new_caches

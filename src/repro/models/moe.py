@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded scatter
+dispatch, shared experts (DeepSeek-V3) and parallel dense residual (Arctic).
+
+Dispatch strategy (TPU-native): one-hot dispatch tensors of shape
+(tokens, E, capacity) are infeasible at 1M tokens x 256 experts, so we use a
+scatter/gather schedule:
+
+  1. router logits -> top-k (expert_id, gate) per token
+  2. position of each (token, choice) inside its expert's buffer via a
+     cumulative count over the one-hot routing matrix (T x E int32 — the only
+     O(T*E) intermediate, ~4 MB/chip at the production shard sizes)
+  3. scatter tokens into (E, capacity, D) buffers — tokens over capacity get
+     dropped (standard capacity-factor semantics)
+  4. batched expert FFN einsum (E, cap, D) x (E, D, F) — the expert dim is
+     sharded over the "model" mesh axis (expert parallelism); XLA inserts the
+     token all-to-all at the scatter/gather boundaries
+  5. gather back and combine weighted by the (renormalized) gates.
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import maybe_constrain
+from .layers import F32, dense_init
+
+__all__ = ["init_moe", "moe_forward", "MoEOutput"]
+
+
+class MoEOutput(NamedTuple):
+    out: jnp.ndarray
+    lb_loss: jnp.ndarray  # load-balance aux
+    z_loss: jnp.ndarray
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 8)
+    params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), F32) / math.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), F32) / math.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), F32) / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        params["shared"] = {
+            "w_gate": dense_init(ks[4], d, fs, dtype),
+            "w_up": dense_init(ks[5], d, fs, dtype),
+            "w_down": dense_init(ks[6], fs, d, dtype, scale=1.0 / math.sqrt(fs)),
+        }
+    return params
+
+
+def _expert_ffn(w, x):
+    """x: (E, cap, D) -> (E, cap, D), batched SwiGLU over experts."""
+    g = jnp.einsum("ecd,edf->ecf", x, w["w_gate"], preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", x, w["w_up"], preferred_element_type=F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    h = maybe_constrain(h, "expert", None, None)
+    return jnp.einsum("ecf,efd->ecd", h, w["w_down"], preferred_element_type=F32).astype(
+        x.dtype
+    )
+
+
+def moe_forward(params, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, D).  Returns MoEOutput."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(F32) @ params["router"].astype(F32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # aux losses (switch-transformer style)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=F32), axis=1), axis=0
+    )  # fraction of tokens routed to each expert
+    lb_loss = E * jnp.sum(me * ce) / K
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    capacity = max(1, int(capacity_factor * T * K / E))
+
+    # Process the K routing choices sequentially (K is 2 or 8 — a static,
+    # unrolled loop) so the transient working set stays O(T*D), never
+    # O(T*K*D).  Positions inside each expert buffer are made globally
+    # consistent across choices by carrying per-expert counts.
+    buffers = jnp.zeros((E, capacity, D), x.dtype)
+    counts = jnp.zeros((E,), jnp.int32)
+    positions, keeps = [], []
+    for kk in range(K):
+        ids_k = expert_ids[:, kk]  # (T,)
+        onehot = jax.nn.one_hot(ids_k, E, dtype=jnp.int32)  # (T, E)
+        intra = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
+        pos_k = jnp.sum(intra * onehot, axis=-1) + counts[ids_k]
+        keep_k = pos_k < capacity
+        safe_k = jnp.where(keep_k, pos_k, capacity - 1)
+        src = jnp.where(keep_k[:, None], xt, 0)
+        buffers = buffers.at[ids_k, safe_k].add(src, mode="drop")
+        counts = counts + jnp.sum(onehot, axis=0)
+        positions.append(safe_k)
+        keeps.append(keep_k)
+    buffers = maybe_constrain(buffers, "expert", None, None)
+
+    outputs = _expert_ffn(params, buffers)  # (E, cap, D)
+
+    combined = jnp.zeros((T, D), x.dtype)
+    for kk in range(K):
+        gathered = outputs[expert_ids[:, kk], positions[kk]]  # (T, D)
+        gathered = jnp.where(keeps[kk][:, None], gathered, 0)
+        combined = combined + gathered * gate_vals[:, kk][:, None].astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        g = jax.nn.silu((xt @ sh["w_gate"]).astype(F32)).astype(x.dtype)
+        combined = combined + (g * (xt @ sh["w_up"])) @ sh["w_down"]
+
+    return MoEOutput(combined.reshape(B, S, D), lb_loss, z_loss)

@@ -1,0 +1,3 @@
+"""Optimizers & schedules (hand-rolled; no optax dependency offline)."""
+from .optimizers import Optimizer, adamw, momentum, sgd  # noqa: F401
+from .schedules import constant, cosine_decay, warmup_cosine  # noqa: F401

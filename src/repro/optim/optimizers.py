@@ -1,0 +1,97 @@
+"""Minimal optimizer substrate: (init, update) pairs over pytrees.
+
+Byz-VR-MARINA-PP itself uses the plain step x <- x - gamma * g (no extra
+state), but the examples and the heuristic base methods need standard
+optimizers; they are also used to train the reduced-config examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+
+    def apply(self, params, grads, state, lr):
+        updates, state = self.update(grads, state, params, lr)
+        new_params = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        return new_params, state
+
+
+def sgd() -> Optimizer:
+    return Optimizer(
+        "sgd",
+        init=lambda params: (),
+        update=lambda g, s, p, lr: (
+            jax.tree_util.tree_map(lambda gi: -lr * gi, g),
+            s,
+        ),
+    )
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(g, m, p, lr):
+        m = jax.tree_util.tree_map(lambda mi, gi: beta * mi + gi.astype(jnp.float32), m, g)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda mi, gi: -lr * (beta * mi + gi.astype(jnp.float32)), m, g
+            )
+        else:
+            upd = jax.tree_util.tree_map(lambda mi: -lr * mi, m)
+        return upd, m
+
+    return Optimizer(f"momentum{beta}", init, update)
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adamw(
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(g, s, p, lr):
+        count = s.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, gi: b1 * m + (1 - b1) * gi.astype(jnp.float32), s.mu, g
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, gi: b2 * v + (1 - b2) * jnp.square(gi.astype(jnp.float32)),
+            s.nu,
+            g,
+        )
+        bc1 = 1 - b1**count.astype(jnp.float32)
+        bc2 = 1 - b2**count.astype(jnp.float32)
+
+        def upd(m, v, pi):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return -lr * (step + weight_decay * pi.astype(jnp.float32))
+
+        return (
+            jax.tree_util.tree_map(upd, mu, nu, p),
+            AdamState(mu=mu, nu=nu, count=count),
+        )
+
+    return Optimizer("adamw", init, update)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules as step -> lr callables (jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_decay", "warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, jnp.float32(warm), cos(step - warmup))
+
+    return fn

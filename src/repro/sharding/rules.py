@@ -1,0 +1,224 @@
+"""Parameter / cache / batch partition rules for the production mesh.
+
+Modes:
+  "tp"       params replicated over data, tensor-parallel over "model"
+  "fsdp_tp"  additionally shard each kernel's remaining large dim over "data"
+             (per-layer all-gathers emerge inside the layer scan) — required
+             for deepseek-v3-671b, arctic-480b, llama-3.2-vision-90b.
+  "zero3"    NO tensor parallelism: parameters are fully sharded over
+             "model" (ZeRO-3 style; gathered per layer inside the scan) and
+             the per-worker batch is ALSO sharded over "model".  Trades the
+             per-layer activation all-reduces of TP for per-layer weight
+             gathers — the winning trade whenever the per-chip batch is
+             small (see EXPERIMENTS.md §Perf, yi-34b hillclimb).
+
+Rules key off the *leaf name* (last path component).  Stacked-layer leading
+dims (the scan axis) are always unsharded (each step slices one layer).
+Indivisible dims fall back to replication (GSPMD could pad, but explicit
+fallback keeps the collective schedule predictable for the roofline).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig
+
+__all__ = [
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "state_sharding",
+    "needs_fsdp",
+]
+
+# (core_rank, spec over the trailing core dims); "col" = output-dim sharded,
+# "row" = input-dim sharded (Megatron convention)
+_RULES: Dict[str, tuple] = {
+    # embeddings / heads
+    "embed": (2, ("model", "fsdp")),
+    "unembed": (2, ("fsdp", "model")),
+    "frontend": (2, (None, "model")),
+    # attention (GQA + MLA + cross)
+    "wq": (2, ("fsdp", "model")),
+    "wk": (2, ("fsdp", "model")),
+    "wv": (2, ("fsdp", "model")),
+    "wo": (2, ("model", "fsdp")),
+    "wq_a": (2, ("fsdp", "model")),
+    "wq_b": (2, ("fsdp", "model")),
+    "wkv_a": (2, ("fsdp", "model")),
+    "wkv_b": (2, ("fsdp", "model")),
+    "proj": (2, ("fsdp", "model")),
+    # dense mlp
+    "w_gate": (2, ("fsdp", "model")),
+    "w_up": (2, ("fsdp", "model")),
+    "w_down": (2, ("model", "fsdp")),
+    # moe (expert-parallel over "model"; fsdp over the d_model dim)
+    "router": (2, (None, None)),
+    # ssm
+    "in_proj": (2, ("fsdp", "model")),
+    "out_proj": (2, ("model", "fsdp")),
+    "conv_w": (2, (None, "model")),
+}
+
+_MOE_RULES: Dict[str, tuple] = {
+    "w_gate": (3, ("model", "fsdp", None)),
+    "w_up": (3, ("model", "fsdp", None)),
+    "w_down": (3, ("model", None, "fsdp")),
+}
+
+# parameter-count threshold above which fsdp_tp is selected automatically
+_FSDP_THRESHOLD = 60e9
+
+
+def needs_fsdp(cfg: ModelConfig, param_count: Optional[int] = None) -> bool:
+    if param_count is None:
+        from repro.models.model import param_count as pc
+
+        param_count = pc(cfg)
+    return param_count > _FSDP_THRESHOLD
+
+
+def _axes(mesh):
+    names = set(mesh.axis_names)
+    data_axes = tuple(a for a in ("data",) if a in names)
+    return names
+
+
+def _resolve_token(mesh, token, dim, mode):
+    if token is None:
+        return None
+    if mode == "zero3":
+        # no TP: the "fsdp" slot takes the model axis, TP slots replicate
+        if token == "fsdp":
+            if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0:
+                return "model"
+        return None
+    if token == "model":
+        if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0:
+            return "model"
+        return None
+    if token == "fsdp":
+        if mode != "fsdp_tp":
+            return None
+        if "data" in mesh.axis_names and dim % mesh.shape["data"] == 0:
+            return "data"
+        return None
+    return None
+
+
+def _leaf_spec(mesh, name: str, shape, mode: str) -> P:
+    rank = len(shape)
+    rule = None
+    if name in _MOE_RULES and rank >= 3:
+        cr, tokens = _MOE_RULES[name]
+        if rank >= cr:
+            rule = (cr, tokens)
+    if rule is None and name in _RULES:
+        rule = _RULES[name]
+    if rule is None:
+        return P()  # norms, biases, gates, scalars: replicate
+    cr, tokens = rule
+    if rank < cr:
+        return P()
+    lead = rank - cr
+    spec = [None] * lead + [
+        _resolve_token(mesh, t, shape[lead + i], mode)
+        for i, t in enumerate(tokens)
+    ]
+    return P(*spec)
+
+
+def param_specs(mesh, cfg: ModelConfig, params_shape, mode: str = "tp"):
+    """Pytree of PartitionSpec matching ``params_shape`` (a pytree of arrays
+    or ShapeDtypeStructs)."""
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None) or getattr(entry, "name", None)
+            if isinstance(key, str):
+                name = key
+                break
+        return _leaf_spec(mesh, name or "", leaf.shape, mode)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(mesh, batch_shape, worker_axes=("data",)):
+    """Shard the leading (batch or worker) dim of every batch leaf."""
+    axes = tuple(a for a in worker_axes if a in mesh.axis_names)
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return P()
+        lead = leaf.shape[0]
+        total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        first = (axes if len(axes) > 1 else axes[0]) if total > 1 and lead % total == 0 else None
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_shape)
+
+
+def cache_specs(mesh, cfg: ModelConfig, cache_shape):
+    """Decode-cache sharding: batch dim over "data" when divisible; the cache
+    length dim of attention caches over "model"; SSM states: batch over
+    "data", heads over "model"."""
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", None) or getattr(entry, "name", None)
+            if isinstance(key, str):
+                name = key
+                break
+        shape = leaf.shape
+        rank = len(shape)
+        # stacked caches carry a leading layer dim => actual dims shifted
+        if name in ("k", "v", "ckv", "krope"):
+            # (layers, B, L, ...) or (B, L, ...)
+            lead = rank - (4 if name in ("k", "v") else 3)
+            spec = [None] * lead
+            B, L = shape[lead], shape[lead + 1]
+            spec.append(
+                "data"
+                if "data" in mesh.axis_names and B % mesh.shape["data"] == 0
+                else None
+            )
+            spec.append(
+                "model"
+                if "model" in mesh.axis_names and L % mesh.shape["model"] == 0
+                else None
+            )
+            spec += [None] * (rank - len(spec))
+            return P(*spec)
+        if name == "h":  # SSM state (layers, B, H, P, N)
+            lead = rank - 4
+            spec = [None] * lead
+            B, H = shape[lead], shape[lead + 1]
+            spec.append("data" if "data" in mesh.axis_names and B % mesh.shape["data"] == 0 else None)
+            spec.append("model" if "model" in mesh.axis_names and H % mesh.shape["model"] == 0 else None)
+            spec += [None] * (rank - len(spec))
+            return P(*spec)
+        if name == "conv":  # (layers, B, K-1, C)
+            lead = rank - 3
+            spec = [None] * lead
+            B = shape[lead]
+            spec.append("data" if "data" in mesh.axis_names and B % mesh.shape["data"] == 0 else None)
+            spec += [None] * (rank - len(spec))
+            return P(*spec)
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def state_sharding(mesh, specs):
+    """Pytree of PartitionSpec -> pytree of NamedSharding."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device.  The multi-device dry-run tests
+# spawn subprocesses with XLA_FLAGS set there (device count locks at first
+# jax init, so it must NOT be set globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

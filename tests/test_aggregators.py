@@ -1,0 +1,188 @@
+"""Aggregator unit + property tests (Definition 2.1, Assumption 2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregators import (
+    bucketing,
+    centered_clip,
+    coordinate_median,
+    geometric_median,
+    krum,
+    make_aggregator,
+    mean,
+    trimmed_mean,
+)
+
+ALL_AGGS = [
+    mean(),
+    coordinate_median(),
+    trimmed_mean(0.2),
+    geometric_median(iters=32),
+    krum(byz_bound=2),
+    centered_clip(tau=100.0, iters=10),
+    bucketing(coordinate_median(), s=2),
+]
+
+
+@pytest.mark.parametrize("agg", ALL_AGGS, ids=lambda a: a.name)
+def test_agrees_with_mean_on_identical_inputs(agg):
+    xs = jnp.broadcast_to(jnp.arange(8.0)[None], (10, 8))
+    out = agg(xs, key=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out), np.arange(8.0), rtol=1e-5, atol=1e-5)
+
+
+def test_coordinate_median_matches_numpy():
+    rng = np.random.RandomState(0)
+    xs = rng.randn(9, 17).astype(np.float32)
+    out = coordinate_median()(jnp.asarray(xs))
+    np.testing.assert_allclose(np.asarray(out), np.median(xs, axis=0), rtol=1e-6)
+    xs = rng.randn(10, 17).astype(np.float32)  # even count
+    out = coordinate_median()(jnp.asarray(xs))
+    np.testing.assert_allclose(np.asarray(out), np.median(xs, axis=0), rtol=1e-6)
+
+
+def test_masked_median_equals_subset_median():
+    rng = np.random.RandomState(1)
+    xs = rng.randn(12, 5).astype(np.float32)
+    mask = np.array([1, 0, 1, 1, 0, 1, 1, 1, 0, 0, 1, 0], dtype=bool)
+    out = coordinate_median()(jnp.asarray(xs), mask=jnp.asarray(mask))
+    np.testing.assert_allclose(
+        np.asarray(out), np.median(xs[mask], axis=0), rtol=1e-6
+    )
+
+
+def test_masked_trimmed_mean_equals_subset():
+    rng = np.random.RandomState(2)
+    xs = rng.randn(12, 7).astype(np.float32)
+    mask = np.zeros(12, dtype=bool)
+    mask[[0, 3, 4, 7, 8, 9, 10]] = True  # 7 sampled
+    out = trimmed_mean(0.2)(jnp.asarray(xs), mask=jnp.asarray(mask))
+    sub = np.sort(xs[mask], axis=0)
+    t = int(np.ceil(0.2 * 7))
+    expected = sub[t : 7 - t].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-5, atol=1e-6)
+
+
+def test_krum_returns_honest_row_under_large_outliers():
+    rng = np.random.RandomState(3)
+    good = rng.randn(8, 16).astype(np.float32) * 0.1
+    byz = 100.0 + rng.randn(3, 16).astype(np.float32)
+    xs = jnp.asarray(np.concatenate([good, byz]))
+    out = krum(byz_bound=3)(xs)
+    # winner must be one of the good rows
+    dists = np.linalg.norm(np.asarray(out)[None] - good, axis=1)
+    assert dists.min() < 1e-6
+
+
+def test_geometric_median_resists_one_outlier():
+    xs = np.zeros((5, 4), dtype=np.float32)
+    xs[-1] = 1e6
+    out = np.asarray(geometric_median(iters=64)(jnp.asarray(xs)))
+    assert np.linalg.norm(out) < 1.0
+
+
+@pytest.mark.parametrize(
+    "agg",
+    [coordinate_median(), trimmed_mean(0.2), geometric_median(), krum(byz_bound=2)],
+    ids=lambda a: a.name,
+)
+def test_bounded_output_assumption_2_3(agg):
+    """||A(x_1..x_n)|| <= F_A max_i ||x_i|| (Assumption 2.3)."""
+    rng = np.random.RandomState(4)
+    xs = rng.randn(11, 33).astype(np.float32) * rng.exponential(5, (11, 1))
+    out = np.asarray(agg(jnp.asarray(xs), key=jax.random.PRNGKey(0)))
+    max_norm = np.linalg.norm(xs, axis=1).max()
+    d = xs.shape[1]
+    assert np.linalg.norm(out) <= agg.f_a(d) * max_norm * (1 + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 16),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_median_bounded_by_inputs(n, d, seed):
+    rng = np.random.RandomState(seed)
+    xs = rng.randn(n, d).astype(np.float32)
+    out = np.asarray(coordinate_median()(jnp.asarray(xs)))
+    assert (out <= xs.max(0) + 1e-6).all() and (out >= xs.min(0) - 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 14),
+    d=st.integers(1, 8),
+    n_byz=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_bucketing_cm_robust_aggregation_error(n, d, n_byz, seed):
+    """Empirical Def-2.1 check: ||A(x) - mean(good)||^2 <= c*delta*sigma_max^2
+    with a generous c.  Bucketing with s=2 tolerates delta*s < 1/2, i.e.
+    n_byz <= floor(n/5) keeps contaminated buckets a strict minority."""
+    n_byz = min(n_byz, n // 5)
+    rng = np.random.RandomState(seed)
+    good = rng.randn(n - n_byz, d).astype(np.float32)
+    byz = 1e4 * rng.randn(max(n_byz, 0), d).astype(np.float32)
+    xs = np.concatenate([good, byz]) if n_byz else good
+    agg = bucketing(coordinate_median(), s=2)
+    out = np.asarray(agg(jnp.asarray(xs), key=jax.random.PRNGKey(seed % 100)))
+    bar = good.mean(0)
+    # pairwise variance bound sigma^2 of the good set
+    diffs = good[:, None] - good[None, :]
+    sigma2 = (diffs**2).sum(-1).mean()
+    delta = max(n_byz, 1) / n
+    err = ((out - bar) ** 2).sum()
+    if n_byz == 0:
+        assert err <= 4.0 * sigma2 + 1e-3
+    else:
+        assert err <= 200.0 * delta * sigma2 + 1e-2  # generous empirical c
+
+
+def test_make_aggregator_registry():
+    for name in ["mean", "cm", "trimmed_mean", "rfa", "krum", "centered_clip"]:
+        agg = make_aggregator(name, bucket_s=2 if name != "mean" else 0)
+        xs = jnp.ones((4, 3))
+        out = agg(xs, key=jax.random.PRNGKey(0))
+        assert out.shape == (3,)
+    with pytest.raises(ValueError):
+        make_aggregator("nope")
+
+
+def test_multi_krum_averages_honest_rows():
+    from repro.core.aggregators import multi_krum
+
+    rng = np.random.RandomState(6)
+    good = rng.randn(9, 12).astype(np.float32) * 0.1
+    byz = 50.0 + rng.randn(3, 12).astype(np.float32)
+    xs = jnp.asarray(np.concatenate([good, byz]))
+    out = np.asarray(multi_krum(byz_bound=3)(xs))
+    # result must be an average of good rows only: close to the good mean
+    assert np.linalg.norm(out - good.mean(0)) < 0.5
+    # masked variant equals subset behaviour
+    mask = jnp.asarray([True] * 9 + [False] * 3)
+    out_m = np.asarray(multi_krum(byz_bound=0)(xs, mask=mask))
+    assert np.linalg.norm(out_m - good.mean(0)) < 0.5
+
+
+def test_from_theory_constructor_converges():
+    import jax as _jax
+
+    from repro.core.marina_pp import ByzVRMarinaPP
+    from repro.core.problems import logistic_problem
+
+    prob = logistic_problem(
+        _jax.random.PRNGKey(0), n_clients=10, n_good=8, m=100, dim=20,
+        homogeneous=True,
+    )
+    alg = ByzVRMarinaPP.from_theory(
+        prob, C=2, C_hat=10, p=0.25, delta=0.2, attack="shb"
+    )
+    assert 0 < alg.cfg.gamma < 1.0
+    assert alg.cfg.clip_alpha == 2.0 * prob.smoothness()
+    st, m = _jax.jit(lambda s: alg.run(150, s))(alg.init())
+    # theory stepsizes are conservative: loss must decrease monotonically-ish
+    assert float(m["loss"][-1]) < float(m["loss"][0])

@@ -1,0 +1,95 @@
+"""Attack + estimator unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import ATTACKS, AttackContext, make_attack
+from repro.core.estimators import p_choice, page_update, page_update_tree
+
+
+def _ctx(byz_majority=False):
+    n, d = 6, 5
+    rng = np.random.RandomState(0)
+    honest = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    return AttackContext(
+        honest=honest,
+        good_mask=jnp.asarray([True] * 4 + [False] * 2),
+        sampled=jnp.ones((n,), bool),
+        x_now=jnp.arange(5.0),
+        x_prev=jnp.zeros(5),
+        x0=jnp.full((5,), -1.0),
+        g_prev=jnp.zeros(5),
+        byz_majority=jnp.asarray(byz_majority),
+        key=jax.random.PRNGKey(0),
+    )
+
+
+def test_bit_flip_negates():
+    ctx = _ctx()
+    out = make_attack("bf")(ctx)
+    np.testing.assert_allclose(np.asarray(out), -np.asarray(ctx.honest))
+
+
+def test_alie_rows_identical_and_plausible():
+    ctx = _ctx()
+    out = np.asarray(make_attack("alie")(ctx))
+    assert np.allclose(out, out[0][None])  # colluding byz send the same msg
+    good = np.asarray(ctx.honest)[:4]
+    mu, sd = good.mean(0), good.std(0)
+    assert (out[0] >= mu - 3 * sd - 1e-5).all() and (out[0] <= mu + 3 * sd + 1e-5).all()
+
+
+def test_ipm_is_negative_scaled_mean():
+    ctx = _ctx()
+    out = np.asarray(make_attack("ipm")(ctx))
+    mu = np.asarray(ctx.honest)[:4].mean(0)
+    np.testing.assert_allclose(out[0], -1.1 * mu, rtol=1e-5)
+
+
+def test_shift_back_conditional_on_majority():
+    ctx_min = _ctx(byz_majority=False)
+    out = np.asarray(make_attack("shb")(ctx_min))
+    np.testing.assert_allclose(out, np.asarray(ctx_min.honest))  # behaves honestly
+    ctx_maj = _ctx(byz_majority=True)
+    out = np.asarray(make_attack("shb")(ctx_maj))
+    expected = np.asarray(ctx_maj.x0 - ctx_maj.x_now)
+    np.testing.assert_allclose(out[0], expected)
+
+
+def test_lf_is_data_level():
+    assert ATTACKS["lf"].data_level
+    assert not ATTACKS["bf"].data_level
+
+
+def test_registry_unknown():
+    with pytest.raises(ValueError):
+        make_attack("zzz")
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+def test_page_update_switch():
+    g = jnp.ones(3)
+    fg = jnp.full(3, 5.0)
+    diff = jnp.full(3, 0.25)
+    np.testing.assert_allclose(np.asarray(page_update(True, g, fg, diff)), 5.0)
+    np.testing.assert_allclose(np.asarray(page_update(False, g, fg, diff)), 1.25)
+
+
+def test_page_update_tree():
+    g = {"a": jnp.ones(2), "b": jnp.zeros(2)}
+    fg = {"a": jnp.full(2, 3.0), "b": jnp.full(2, 4.0)}
+    diff = {"a": jnp.full(2, 0.5), "b": jnp.full(2, 0.5)}
+    out = page_update_tree(jnp.asarray(False), g, fg, diff)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.5)
+    out = page_update_tree(jnp.asarray(True), g, fg, diff)
+    np.testing.assert_allclose(np.asarray(out["b"]), 4.0)
+
+
+def test_p_choice():
+    assert p_choice(C=4, n=20, b=32, m=300, zeta_q=10, d=40) == pytest.approx(
+        min(4 / 20, 32 / 300, 10 / 40)
+    )

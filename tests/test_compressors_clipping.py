@@ -1,0 +1,124 @@
+"""Compressor (Def 2.2) and clipping (Lemma D.6) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clipping import clip, clip_tree, marina_radius
+from repro.core.compressors import l2_quantization, make_compressor, rand_k
+from repro.core.tree_utils import tree_norm, tree_ravel, tree_unravel
+
+
+# ---------------------------------------------------------------------------
+# compressors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp_name,kw", [("rand_k", {"k": 8}), ("l2_quantization", {})])
+def test_compressor_unbiased(comp_name, kw):
+    comp = make_compressor(comp_name, **kw)
+    x = jnp.asarray(np.random.RandomState(0).randn(32).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    mean_q = qs.mean(0)
+    np.testing.assert_allclose(np.asarray(mean_q), np.asarray(x), atol=0.15)
+
+
+@pytest.mark.parametrize("comp_name,kw", [("rand_k", {"k": 4}), ("l2_quantization", {})])
+def test_compressor_variance_bound(comp_name, kw):
+    comp = make_compressor(comp_name, **kw)
+    d = 24
+    x = jnp.asarray(np.random.RandomState(1).randn(d).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(1), 3000)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    var = float(((qs - x[None]) ** 2).sum(-1).mean())
+    omega = comp.omega(d)
+    assert var <= (omega + 0.3) * float((x**2).sum()) * 1.15
+
+
+def test_rand_k_density_and_dq():
+    comp = rand_k(4)
+    d = 40
+    x = jnp.ones((d,))
+    q = comp(jax.random.PRNGKey(2), x)
+    assert int((q != 0).sum()) == 4
+    assert float(jnp.linalg.norm(q)) <= comp.dq(d) * float(jnp.linalg.norm(x)) + 1e-5
+    assert comp.omega(d) == pytest.approx(d / 4 - 1)
+    assert comp.zeta(d) == 4
+
+
+def test_l2_quant_dq_bound():
+    comp = l2_quantization()
+    rng = np.random.RandomState(3)
+    for _ in range(10):
+        x = jnp.asarray(rng.randn(30).astype(np.float32))
+        q = comp(jax.random.PRNGKey(rng.randint(1 << 30)), x)
+        assert float(jnp.linalg.norm(q)) <= comp.dq(30) * float(jnp.linalg.norm(x)) * (
+            1 + 1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# clipping
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(1, 32),
+    radius=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_clip_norm_bound(d, radius, seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(d).astype(np.float32))
+    y = clip(x, radius)
+    assert float(jnp.linalg.norm(y)) <= radius * (1 + 1e-5)
+    # identity when inside the ball
+    if float(jnp.linalg.norm(x)) <= radius:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_clip_zero():
+    assert float(jnp.linalg.norm(clip(jnp.zeros(5), 1.0))) == 0.0
+
+
+def test_clip_tree_global_norm():
+    tree = {"a": jnp.ones((3,)), "b": {"c": 2.0 * jnp.ones((4,))}}
+    norm = float(tree_norm(tree))
+    clipped = clip_tree(tree, norm / 2)
+    assert float(tree_norm(clipped)) == pytest.approx(norm / 2, rel=1e-5)
+    # direction preserved
+    np.testing.assert_allclose(
+        np.asarray(clipped["a"] / clipped["b"]["c"][0]),
+        np.asarray(tree["a"] / tree["b"]["c"][0]),
+        rtol=1e-6,
+    )
+
+
+def test_marina_radius():
+    x_new, x_old = jnp.array([1.0, 2.0]), jnp.array([1.0, 0.0])
+    assert float(marina_radius(x_new, x_old, 3.0)) == pytest.approx(6.0)
+    t_new = {"w": jnp.array([1.0, 2.0])}
+    t_old = {"w": jnp.array([1.0, 0.0])}
+    assert float(marina_radius(t_new, t_old, 3.0)) == pytest.approx(6.0)
+
+
+def test_lemma_d6_second_moment():
+    """E||clip_l(X) - x||^2 <= 10 E||X - x||^2 when ||x|| <= lambda/2."""
+    rng = np.random.RandomState(7)
+    x = np.array([0.3, 0.4, 0.0], dtype=np.float32)  # ||x|| = 0.5
+    lam = 1.0  # ||x|| <= lam/2
+    samples = x[None] + rng.randn(20000, 3).astype(np.float32) * 2.0
+    clipped = jax.vmap(lambda v: clip(v, lam))(jnp.asarray(samples))
+    lhs = float(((np.asarray(clipped) - x[None]) ** 2).sum(-1).mean())
+    rhs = float(((samples - x[None]) ** 2).sum(-1).mean())
+    assert lhs <= 10.0 * rhs
+
+
+def test_tree_ravel_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": (jnp.ones((4,), jnp.bfloat16),)}
+    vec, unravel = tree_ravel(tree)
+    back = unravel(vec)
+    np.testing.assert_allclose(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert back["b"][0].dtype == jnp.bfloat16
+    back2 = tree_unravel(tree, vec)
+    np.testing.assert_allclose(np.asarray(back2["a"]), np.asarray(tree["a"]))

@@ -1,0 +1,115 @@
+"""Config registry + input-shape fabrication tests (deliverable f plumbing)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, get_smoke_config, input_specs, list_archs
+from repro.configs.shapes import LONG_CONTEXT_WINDOW, decode_variant, mode_for
+
+
+EXACT = {
+    # arch: (L, d_model, H, KV, d_ff, vocab) from the assignment table
+    "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+    "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+    "mamba2_780m": (48, 1536, None, None, 0, 50280),
+    "jamba_v01_52b": (32, 4096, 32, 8, 14336, 65536),
+    "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    "deepseek_v3_671b": (61, 7168, 128, 128, 2048, 129280),
+    "llama32_vision_90b": (100, 8192, 64, 8, 28672, 128256),
+    "deepseek_7b": (30, 4096, 32, 32, 11008, 102400),
+    "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+    "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = EXACT[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab == V
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+
+
+def test_assignment_special_features():
+    ds = get_config("deepseek_v3_671b")
+    assert ds.attn_kind == "mla" and ds.n_experts == 256
+    assert ds.experts_per_token == 8 and ds.n_shared_experts == 1
+    assert ds.mtp_depth == 1
+    jm = get_config("jamba_v01_52b")
+    assert jm.mixer_pattern.count("attn") * 7 == jm.mixer_pattern.count("ssm")
+    assert jm.n_experts == 16 and jm.experts_per_token == 2
+    ar = get_config("arctic_480b")
+    assert ar.n_experts == 128 and ar.moe_dense_residual
+    hb = get_config("hubert_xlarge")
+    assert not hb.causal and hb.input_kind == "frames"
+    vl = get_config("llama32_vision_90b")
+    assert "cross" in vl.mixer_pattern and vl.input_kind == "tokens+vision"
+    mb = get_config("mamba2_780m")
+    assert mb.mixer_pattern == ("ssm",) and mb.mlp_pattern == ("none",)
+    assert mb.ssm_state == 128
+
+
+def test_alias_resolution():
+    assert get_config("deepseek-v3-671b").name == "deepseek-v3-671b"
+    assert get_config("llama-3.2-vision-90b").n_layers == 100
+    with pytest.raises(ValueError):
+        get_config("gpt-5")
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_are_abstract(arch, shape_name):
+    cfg = get_smoke_config(arch)
+    shape = SHAPES[shape_name]
+    mode = mode_for(cfg, shape)
+    if mode is None:
+        assert arch == "hubert_xlarge" and shape.kind == "decode"
+        return
+    specs = input_specs(cfg, shape)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert leaves, (arch, shape_name)
+    for l in leaves:
+        assert isinstance(l, jax.ShapeDtypeStruct)
+    if shape.kind in ("train", "prefill"):
+        main = specs["frames"] if cfg.input_kind == "frames" else specs["tokens"]
+        assert main.shape[:2] == (shape.global_batch, shape.seq_len)
+    else:
+        assert specs["batch"]["tokens"].shape == (shape.global_batch, 1)
+
+
+def test_decode_variant_sliding_window_only_for_attention_archs():
+    long = SHAPES["long_500k"]
+    yi = decode_variant(get_config("yi_34b"), long)
+    assert yi.sliding_window == LONG_CONTEXT_WINDOW
+    mb = decode_variant(get_config("mamba2_780m"), long)
+    assert mb.sliding_window == 0  # SSM is already O(1)/token
+    # decode_32k keeps full attention
+    yi32 = decode_variant(get_config("yi_34b"), SHAPES["decode_32k"])
+    assert yi32.sliding_window == 0
+
+
+def test_long_500k_cache_is_bounded():
+    """long_500k decode cache must reflect the window, not 524288."""
+    from repro.models.model import init_cache
+
+    cfg = decode_variant(get_config("minitron_8b"), SHAPES["long_500k"])
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, SHAPES["long_500k"].seq_len))
+    k = cache["body"][0]["k"]
+    assert k.shape[2] == LONG_CONTEXT_WINDOW  # (layers, B, L, KV, hd)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_configs_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4

@@ -1,0 +1,145 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Sweeps shapes (odd/even worker counts, lane-aligned and ragged coordinate
+counts) and dtypes (f32, bf16) as required for kernel sign-off.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import centered_clip, clipped_diff, coordinate_median, trimmed_mean
+from repro.kernels.ref import (
+    centered_clip_ref,
+    clipped_diff_ref,
+    coordinate_median_ref,
+    trimmed_mean_ref,
+)
+
+SHAPES = [(3, 64), (8, 512), (11, 700), (16, 1024), (5, 1), (32, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 else dict(atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+def test_coordinate_median_sweep(shape, dtype):
+    rng = np.random.RandomState(hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape), dtype)
+    out = coordinate_median(xs)
+    ref = coordinate_median_ref(xs)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_coordinate_median_masked_sweep(shape):
+    rng = np.random.RandomState(1 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    mask = np.zeros(shape[0], bool)
+    mask[: max(1, shape[0] // 2)] = True
+    rng.shuffle(mask)
+    out = coordinate_median(xs, jnp.asarray(mask))
+    ref = coordinate_median_ref(xs, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # also equals numpy median over the selected subset
+    np.testing.assert_allclose(
+        np.asarray(out), np.median(np.asarray(xs)[mask], axis=0), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("trim", [0.1, 0.25])
+def test_trimmed_mean_sweep(shape, trim):
+    rng = np.random.RandomState(2 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    out = trimmed_mean(xs, trim_ratio=trim)
+    ref = trimmed_mean_ref(xs, trim_ratio=trim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n", [100, 8192, 8193, 100000], ids=lambda n: f"d{n}"
+)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+def test_clipped_diff_sweep(n, dtype):
+    rng = np.random.RandomState(n % 2**31)
+    gn = jnp.asarray(rng.randn(n), dtype)
+    go = jnp.asarray(rng.randn(n), dtype)
+    km = jnp.asarray((rng.rand(n) > 0.5).astype(np.float32), dtype)
+    out, norm = clipped_diff(gn, go, 2.5, km, 3.0)
+    rout, rnorm = clipped_diff_ref(gn, go, 2.5, km, 3.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(rout, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(float(norm), float(rnorm), rtol=1e-2)
+    assert float(jnp.linalg.norm(out.astype(jnp.float32))) <= 2.5 * 1.05
+
+
+def test_clipped_diff_multidim_shapes():
+    rng = np.random.RandomState(9)
+    gn = jnp.asarray(rng.randn(4, 33, 7).astype(np.float32))
+    go = jnp.asarray(rng.randn(4, 33, 7).astype(np.float32))
+    km = jnp.ones_like(gn)
+    out, _ = clipped_diff(gn, go, 1e9, km, 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gn - go), atol=1e-5)
+    assert out.shape == gn.shape
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (9, 257), (16, 1024)], ids=str)
+@pytest.mark.parametrize("tau", [0.5, 100.0])
+def test_centered_clip_sweep(shape, tau):
+    rng = np.random.RandomState(3 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    out = centered_clip(xs, tau=tau, iters=6)
+    ref = centered_clip_ref(xs, tau, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    d=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_kernel_cm_equals_numpy(n, d, seed):
+    rng = np.random.RandomState(seed)
+    xs = rng.randn(n, d).astype(np.float32)
+    out = coordinate_median(jnp.asarray(xs))
+    np.testing.assert_allclose(np.asarray(out), np.median(xs, axis=0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused Bucketing o CM kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,s", [(10, 300, 2), (11, 700, 3), (16, 1024, 2), (8, 64, 4)])
+def test_bucketed_cm_sweep(n, d, s):
+    from repro.kernels import bucketed_coordinate_median
+    from repro.kernels.ref import bucketed_cm_ref
+
+    rng = np.random.RandomState(n * 31 + s)
+    xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    mask = jnp.asarray(rng.rand(n) > 0.2)
+    key = jax.random.PRNGKey(n)
+    out = bucketed_coordinate_median(xs, key, mask, s=s)
+    n_p = n + ((-n) % s)
+    perm = jax.random.permutation(key, n_p).astype(jnp.int32)
+    ref = bucketed_cm_ref(xs, perm, mask, s=s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_bucketed_cm_resists_outlier_minority():
+    from repro.kernels import bucketed_coordinate_median
+
+    rng = np.random.RandomState(7)
+    good = rng.randn(10, 256).astype(np.float32)
+    byz = 1e6 * np.ones((2, 256), np.float32)
+    xs = jnp.asarray(np.concatenate([good, byz]))
+    out = bucketed_coordinate_median(xs, jax.random.PRNGKey(0), s=2)
+    assert float(jnp.abs(out).max()) < 10.0

@@ -1,0 +1,208 @@
+"""Integration tests for Byz-VR-MARINA-PP (Algorithm 1) and the heuristic.
+
+These validate the paper's *claims*, not just shapes:
+  - Fig.1-left: with clipping the method converges linearly under SHB with
+    partial participation; without clipping it does not converge.
+  - Full participation + mean aggregation + no byz reduces to VR-MARINA and
+    matches distributed gradient descent when p=1.
+  - Theory module: probabilities and stepsizes are sane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ByzVRMarinaPP,
+    ClippedPPConfig,
+    ClippedPPMomentum,
+    MarinaPPConfig,
+    cohort_probabilities,
+    logistic_problem,
+    mlp_problem,
+)
+from repro.core.theory import MarinaTheory, theorem41_A, theorem42_A
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return logistic_problem(
+        jax.random.PRNGKey(0), n_clients=20, n_good=15, m=200, dim=30, homogeneous=True
+    )
+
+
+@pytest.fixture(scope="module")
+def fstar(prob):
+    x = prob.x0
+    g = jax.jit(prob.grad)
+    for _ in range(3000):
+        x = x - 0.5 * g(x)
+    return float(prob.loss(x))
+
+
+def _run(prob, steps=250, **overrides):
+    base = dict(
+        gamma=0.5,
+        p=0.2,
+        C=4,
+        C_hat=20,
+        batch=32,
+        clip_alpha=1.0,
+        use_clipping=True,
+        aggregator="cm",
+        bucket_s=2,
+        attack="shb",
+        seed=1,
+    )
+    base.update(overrides)
+    alg = ByzVRMarinaPP(prob, MarinaPPConfig(**base))
+    _, metrics = jax.jit(lambda s: alg.run(steps, s))(alg.init())
+    return metrics
+
+
+def test_fig1_left_clipping_converges_shb(prob, fstar):
+    m = _run(prob, use_clipping=True)
+    final = float(m["loss"][-1])
+    assert final - fstar < 5e-3, f"clipped should approach f*; gap={final - fstar}"
+
+
+def test_fig1_left_no_clipping_fails_shb(prob, fstar):
+    m = _run(prob, use_clipping=False)
+    final = float(m["loss"][-1])
+    assert final - fstar > 0.05, "unclipped under SHB must NOT converge"
+
+
+def test_full_participation_no_byz_matches_gd(prob):
+    """p=1, C=C_hat=n, mean agg, no attack, no clip: each step aggregates full
+    gradients of the good clients => exact GD on f (homogeneous data)."""
+    probg = logistic_problem(
+        jax.random.PRNGKey(3), n_clients=8, n_good=8, m=64, dim=10, homogeneous=True
+    )
+    alg = ByzVRMarinaPP(
+        probg,
+        MarinaPPConfig(
+            gamma=0.3,
+            p=1.0,
+            C=8,
+            C_hat=8,
+            use_clipping=False,
+            aggregator="mean",
+            bucket_s=0,
+            attack="none",
+        ),
+    )
+    st = alg.init()
+    for _ in range(5):
+        st = jax.jit(alg.step)(st)
+    # reference GD
+    x = probg.x0
+    for _ in range(5):
+        x = x - 0.3 * probg.grad(x)
+    np.testing.assert_allclose(np.asarray(st.x), np.asarray(x), rtol=1e-4, atol=1e-5)
+
+
+def test_partial_participation_no_attack_converges(prob, fstar):
+    m = _run(prob, attack="none", use_clipping=True, steps=250)
+    assert float(m["loss"][-1]) - fstar < 5e-3
+
+
+@pytest.mark.parametrize("attack", ["bf", "alie", "ipm"])
+def test_other_attacks_tolerated(prob, fstar, attack):
+    """The paper's Fig.2/F.2 attacks (BF, ALIE; plus IPM) are tolerated.
+    `gauss` at scale 10 is NOT included: bucketing s=2 at delta=0.25 sits at
+    the delta*s = 1/2 theory boundary where symmetric large-norm noise can
+    drag the bucket median (see DESIGN.md §Arch-applicability note)."""
+    m = _run(prob, attack=attack, steps=250)
+    assert float(m["loss"][-1]) - fstar < 2e-2, attack
+
+
+@pytest.mark.parametrize("lam", [0.1, 1.0, 10.0])
+def test_fig1_right_lambda_sensitivity(prob, fstar, lam):
+    """All lambda multipliers converge (possibly at different speeds)."""
+    m = _run(prob, clip_alpha=lam, steps=400)
+    assert float(m["loss"][-1]) - fstar < 2e-2
+
+
+def test_compression_still_converges(prob, fstar):
+    m = _run(
+        prob,
+        compressor="rand_k",
+        compressor_kwargs=(("k", 10),),
+        steps=400,
+        attack="shb",
+    )
+    assert float(m["loss"][-1]) - fstar < 2e-2
+
+
+def test_heuristic_clipped_pp_momentum():
+    """Fig.2 claim for the heuristic (eq. 10): clipped robust momentum-SGD
+    keeps descending under SHB with partial participation, while the
+    unclipped variant is driven to divergence by byzantine-majority rounds."""
+    prob = mlp_problem(
+        jax.random.PRNGKey(5), n_clients=10, n_good=7, m=128, in_dim=16, hidden=8
+    )
+    cfgc = ClippedPPConfig(
+        gamma=0.1, C=3, attack="shb", use_clipping=True, aggregator="cm", bucket_s=2
+    )
+    algc = ClippedPPMomentum(prob, cfgc)
+    _, mc = jax.jit(lambda s: algc.run(500, s))(algc.init())
+    cfgn = ClippedPPConfig(
+        gamma=0.1, C=3, attack="shb", use_clipping=False, aggregator="cm", bucket_s=2
+    )
+    algn = ClippedPPMomentum(prob, cfgn)
+    _, mn = jax.jit(lambda s: algn.run(500, s))(algn.init())
+    assert float(mc["loss"][-1]) < float(mc["loss"][0])  # clipped descends
+    assert float(mn["loss"][-1]) > 2.0 * float(mn["loss"][0])  # unclipped diverges
+    assert float(mc["loss"][-1]) < float(mn["loss"][-1])
+
+
+# ---------------------------------------------------------------------------
+# theory
+# ---------------------------------------------------------------------------
+
+def test_cohort_probabilities_special_cases():
+    # C=1: p_G = G/n, P = 1/G (Section 4)
+    p_g, p_i = cohort_probabilities(n=20, G=15, C=1, delta=0.25)
+    assert p_g == pytest.approx(15 / 20)
+    assert p_i == pytest.approx(1 / 15)
+    # full participation: p_G = 1 (delta >= B/n)
+    p_g, p_i = cohort_probabilities(n=20, G=15, C=20, delta=0.25)
+    assert p_g == pytest.approx(1.0)
+    assert p_i == pytest.approx(1.0)
+
+
+def test_theorem_A_positive_and_stepsize():
+    kw = dict(n=20, G=15, C=4, C_hat=20, delta=0.25, p=0.2, omega=0.0, c_const=1.0, f_a=1.0)
+    A1 = theorem41_A(**kw)
+    A2 = theorem42_A(d_q=1.0, **kw)
+    assert A1 > 0 and A2 > 0
+    th = MarinaTheory(n=20, G=15, C=4, C_hat=20, delta=0.25, p=0.2, L=1.0)
+    g1 = th.gamma("4.1")
+    g2 = th.gamma("4.2")
+    assert 0 < g1 < 1.0 and 0 < g2 < 1.0
+    assert th.clip_alpha("4.1") == 2.0
+
+
+@pytest.mark.parametrize("agg", ["multi_krum", "centered_clip", "trimmed_mean"])
+def test_additional_aggregators_tolerate_shb(prob, fstar, agg):
+    """The clipped-PP machinery is aggregator-agnostic: every registry rule
+    that satisfies Def 2.1 (directly or via bucketing) survives SHB."""
+    m = _run(prob, aggregator=agg, bucket_s=2, steps=250)
+    assert float(m["loss"][-1]) - fstar < 3e-2, agg
+
+
+def test_theory_A_full_participation_not_necessarily_better():
+    """Section 4's observation: Theorem 4.1's constant A does NOT simply
+    improve with larger C — clipping costs the full-participation case a
+    worse constant than Byz-VR-MARINA (the paper discusses exactly this)."""
+    from repro.core.theory import theorem41_A
+
+    kw = dict(n=20, G=15, C_hat=20, delta=0.25, p=0.2, omega=0.0,
+              c_const=1.0, f_a=1.0)
+    vals = {C: theorem41_A(C=C, **kw) for C in (1, 4, 7, 20)}
+    assert all(v > 0 for v in vals.values())
+    # non-monotonicity is expected; just pin the relation we rely on in
+    # from_theory: every A yields a usable positive stepsize
+    from repro.core.theory import stepsize
+
+    assert all(0 < stepsize(1.0, v) < 1 for v in vals.values())
