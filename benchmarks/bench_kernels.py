@@ -1,22 +1,40 @@
 """Microbenchmarks: Pallas aggregation kernels (interpret mode on CPU) vs
-their pure-jnp references, plus the mask-aware mesh aggregators.
+their pure-jnp references, plus the fused clip->aggregate server step.
 
 On CPU the interpret-mode timings are NOT performance data (the kernels
 target TPU); the derived column reports the HBM-traffic model instead:
 bytes_touched / HBM_BW = the roofline floor the kernel is designed to hit.
+
+Both the unmasked and the masked (partial-participation) variants are
+timed — the engine only ever runs the masked shape, so that is the row
+that matters.  Results are also written to ``BENCH_kernels.json`` so the
+perf trajectory accumulates across PRs (see benchmarks/report.py).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import clipped_diff, coordinate_median
-from repro.kernels.ref import clipped_diff_ref, coordinate_median_ref
+from repro.core.aggregators import make_aggregator
+from repro.kernels import (
+    bucketed_coordinate_median,
+    centered_clip,
+    clip_then_aggregate,
+    clipped_diff,
+    coordinate_median,
+)
+from repro.kernels.ref import (
+    clip_then_aggregate_ref,
+    clipped_diff_ref,
+    coordinate_median_ref,
+)
 
-HBM_BW = 819e9
+HBM_BW = 819e9  # bytes/s (TPU v5e)
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=5):
@@ -27,26 +45,144 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _floor_us(num_bytes: float) -> float:
+    return num_bytes / HBM_BW * 1e6
+
+
+def traffic_model(n: int, d: int, itemsize: int = 4) -> dict:
+    """Modeled HBM streams of the diff-round server step (clip at lambda
+    then robust-aggregate the (n, d) message matrix).
+
+    unfused: norm-reduction read + clip read/write (materializes the
+    clipped matrix) + aggregation read, plus the (d,) output.
+    fused:   two streaming passes over the matrix, plus the (d,) output.
+    """
+    nd = n * d * itemsize
+    out = d * itemsize
+    unfused = 4 * nd + out
+    fused = 2 * nd + out
+    return {
+        "n": n,
+        "d": d,
+        "unfused_bytes": unfused,
+        "fused_bytes": fused,
+        "traffic_reduction": unfused / fused,
+        "unfused_tpu_floor_us": _floor_us(unfused),
+        "fused_tpu_floor_us": _floor_us(fused),
+    }
+
+
 def run(quick: bool = False):
     rows = []
     n, d = 16, 1 << (12 if quick else 16)
     rng = np.random.RandomState(0)
     xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    mask_np = np.zeros(n, bool)
+    mask_np[: n // 4] = True  # 25% participation — the engine's C/n regime
+    rng.shuffle(mask_np)
+    mask = jnp.asarray(mask_np)
 
+    # --- coordinate median: unmasked AND masked (the engine shape) ---------
     us_ref = _time(jax.jit(coordinate_median_ref), xs)
     us_ker = _time(coordinate_median, xs)
-    floor_us = (n * d * 4 + d * 4) / HBM_BW * 1e6
+    floor_us = _floor_us(n * d * 4 + d * 4)
     rows.append(("kernel_cm_ref_jnp", us_ref, f"d={d}"))
     rows.append(("kernel_cm_pallas_interp", us_ker, f"tpu_floor_us={floor_us:.1f}"))
+    us_ref = _time(jax.jit(coordinate_median_ref), xs, mask)
+    us_ker = _time(coordinate_median, xs, mask)
+    rows.append(("kernel_cm_masked_ref_jnp", us_ref, f"d={d};C={n // 4}"))
+    rows.append(
+        ("kernel_cm_masked_pallas_interp", us_ker, f"tpu_floor_us={floor_us:.1f}")
+    )
 
+    # --- worker-side clipped diff (masked RandK) ---------------------------
     g1 = jnp.asarray(rng.randn(d).astype(np.float32))
     g2 = jnp.asarray(rng.randn(d).astype(np.float32))
     km = jnp.asarray((rng.rand(d) > 0.5).astype(np.float32))
     us_ref = _time(jax.jit(lambda a, b, m: clipped_diff_ref(a, b, 1.0, m, 2.0)), g1, g2, km)
     us_ker = _time(lambda a, b, m: clipped_diff(a, b, 1.0, m, 2.0), g1, g2, km)
-    floor_us = (3 * d * 4) / HBM_BW * 1e6
+    floor_us = _floor_us(3 * d * 4)
     rows.append(("kernel_clipdiff_ref_jnp", us_ref, f"d={d}"))
     rows.append(
         ("kernel_clipdiff_pallas_interp", us_ker, f"tpu_floor_us={floor_us:.1f}")
     )
+
+    # --- fused clip->aggregate (the diff-round server step) ----------------
+    tm = traffic_model(n, d)
+    lam = 1.5
+
+    def unfused(x, m):
+        out, _ = clip_then_aggregate_ref(x, lam, m)
+        return out
+
+    def fused(x, m):
+        out, _ = clip_then_aggregate(x, lam, m)
+        return out
+
+    us_ref = _time(jax.jit(unfused), xs, mask)
+    us_ker = _time(fused, xs, mask)
+    rows.append(
+        (
+            "kernel_clipagg_unfused_jnp",
+            us_ref,
+            f"tpu_floor_us={tm['unfused_tpu_floor_us']:.1f}",
+        )
+    )
+    rows.append(
+        (
+            "kernel_clipagg_fused_pallas_interp",
+            us_ker,
+            f"tpu_floor_us={tm['fused_tpu_floor_us']:.1f};"
+            f"traffic_x{tm['traffic_reduction']:.2f}",
+        )
+    )
+
+    # fused bucketed variant through the dispatch layer (mask-aware, the
+    # exact path ByzVRMarinaPP.step takes with backend="pallas")
+    agg = make_aggregator("cm", bucket_s=2, backend="pallas")
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def engine_step(x, m):
+        return agg.clip_then_aggregate(x, lam, mask=m, key=key)
+
+    us_eng = _time(engine_step, xs, mask)
+    rows.append(
+        (
+            "kernel_clipagg_bucketed_pallas_interp",
+            us_eng,
+            f"tpu_floor_us={tm['fused_tpu_floor_us']:.1f}",
+        )
+    )
+
+    # --- remaining kernels, so --smoke really covers every Pallas kernel --
+    us_cc = _time(lambda x, m: centered_clip(x, m, tau=10.0, iters=5), xs, mask)
+    rows.append(
+        (
+            "kernel_cclip_pallas_interp",
+            us_cc,
+            f"tpu_floor_us={_floor_us(5 * n * d * 4):.1f}",
+        )
+    )
+    us_bcm = _time(
+        lambda x, k, m: bucketed_coordinate_median(x, k, m, s=2), xs, key, mask
+    )
+    rows.append(
+        (
+            "kernel_bucketcm_pallas_interp",
+            us_bcm,
+            f"tpu_floor_us={_floor_us(n * d * 4 + d * 4):.1f}",
+        )
+    )
+
+    payload = {
+        "rows": [
+            {"name": r[0], "us_per_call": round(r[1], 1), "derived": r[2]}
+            for r in rows
+        ],
+        "traffic_model": tm,
+        "quick": quick,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
     return rows

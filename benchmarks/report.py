@@ -2,8 +2,12 @@
 
   PYTHONPATH=src python -m benchmarks.report
 
-Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers with
-freshly generated markdown (idempotent: regenerates between marker pairs).
+Replaces the <!-- DRYRUN_TABLE -->, <!-- ROOFLINE_TABLE --> and
+<!-- KERNEL_TABLE --> markers with freshly generated markdown (idempotent:
+regenerates between marker pairs).  The kernel table reads
+``BENCH_kernels.json`` (written by ``python -m benchmarks.run --quick
+--only kernels``) and shows the fused clip->aggregate before/after rows
+against their TPU roofline floors.
 """
 from __future__ import annotations
 
@@ -89,6 +93,33 @@ def roofline_table() -> str:
     return "\n".join(lines)
 
 
+def kernel_table(path: str = "BENCH_kernels.json") -> str:
+    if not os.path.exists(path):
+        return "(no BENCH_kernels.json — run `python -m benchmarks.run " \
+               "--quick --only kernels`)"
+    data = json.load(open(path))
+    tm = data.get("traffic_model", {})
+    lines = [
+        "| kernel | us/call (interp) | derived |",
+        "|---|---|---|",
+    ]
+    for r in data.get("rows", []):
+        lines.append(
+            f"| {r['name']} | {r['us_per_call']:.1f} | {r['derived']} |"
+        )
+    if tm:
+        lines.append("")
+        lines.append(
+            f"Fused clip->aggregate traffic model (n={tm['n']}, d={tm['d']}):"
+            f" **{tm['unfused_bytes']/1e6:.1f} MB -> "
+            f"{tm['fused_bytes']/1e6:.1f} MB per server step "
+            f"({tm['traffic_reduction']:.2f}x reduction)**; TPU roofline "
+            f"floors {tm['unfused_tpu_floor_us']:.1f} us -> "
+            f"{tm['fused_tpu_floor_us']:.1f} us."
+        )
+    return "\n".join(lines)
+
+
 def replace_block(text: str, marker: str, content: str) -> str:
     begin = f"<!-- {marker} -->"
     end = f"<!-- /{marker} -->"
@@ -102,9 +133,14 @@ def replace_block(text: str, marker: str, content: str) -> str:
 
 def main():
     path = "EXPERIMENTS.md"
+    if not os.path.exists(path):
+        print("EXPERIMENTS.md not present; kernel table only:")
+        print(kernel_table())
+        return
     text = open(path).read()
     text = replace_block(text, "DRYRUN_TABLE", dryrun_table())
     text = replace_block(text, "ROOFLINE_TABLE", roofline_table())
+    text = replace_block(text, "KERNEL_TABLE", kernel_table())
     open(path, "w").write(text)
     print("EXPERIMENTS.md tables refreshed")
 

@@ -3,6 +3,11 @@ microbenches and the roofline summary.  Prints ``name,us_per_call,derived``
 CSV rows.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+
+``--smoke`` (CI entry) is shorthand for ``--quick --only kernels``: it
+exercises every Pallas kernel — including the fused clip->aggregate server
+step — in interpret mode and writes ``BENCH_kernels.json`` for the perf
+trajectory (rendered by benchmarks/report.py).
 """
 from __future__ import annotations
 
@@ -17,7 +22,12 @@ def main() -> None:
                     help="reduced step counts (CI-sized)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig1,fig2,kernels,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: --quick --only kernels")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
+        args.only = "kernels"
 
     from benchmarks import bench_ablation, bench_fig1, bench_fig2, bench_kernels
 

@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save
 from repro.data.pipeline import make_batch_iterator
-from repro.launch.mesh import make_debug_mesh, num_workers
+from repro.launch.mesh import make_debug_mesh, num_workers, set_mesh
 from repro.launch.train import (
     ByzTrainConfig,
     MeshTrainState,
@@ -78,7 +78,7 @@ def main():
     step_fn = make_train_step(cfg, mesh, tc)
 
     it = make_batch_iterator(cfg, W * args.per_worker_batch, args.seq)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(jax.random.PRNGKey(0), cfg)
         batch0 = next(it)
         g0 = jax.grad(lambda p: apply_train(p, cfg, batch0)[0])(params)

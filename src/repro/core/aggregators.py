@@ -16,6 +16,13 @@ The registry records for each rule:
 Aggregations are pure-jnp so the same code runs inside vmap / shard_map /
 pjit; the Pallas kernels in repro.kernels implement the hot (n,d)->d paths
 with explicit VMEM tiling and are verified against these references.
+
+``make_aggregator(..., backend=)`` selects which implementation backs the
+returned rule: ``"jnp"`` (reference), ``"pallas"`` (kernel-backed CM /
+trimmed-mean, including the fused server-side clip->aggregate used by the
+engine's difference rounds), or ``"auto"`` (pallas iff running on TPU).
+Rules without a kernel keep the jnp path regardless of backend.  See
+repro.kernels.ops for the full contract.
 """
 from __future__ import annotations
 
@@ -26,6 +33,10 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels import ops as _kops
+from .clipping import clip as _clip
+from .tree_utils import tree_batch_ravel
 
 __all__ = [
     "Aggregator",
@@ -38,6 +49,7 @@ __all__ = [
     "centered_clip",
     "bucketing",
     "make_aggregator",
+    "resolve_backend",
 ]
 
 _BIG = jnp.float32(3.4e37)  # +inf stand-in that survives arithmetic
@@ -191,6 +203,19 @@ def _centered_clip(
 # Bucketing (Algorithm 2, Karimireddy et al., 2022)
 # ---------------------------------------------------------------------------
 
+def _bucket_order(key, mask, n):
+    """The row order Bucketing aggregates in: a random permutation stably
+    re-sorted so sampled rows come first (dense buckets).  Shared by the
+    jnp `_bucketing` and the pallas fused path — the backends' trajectory
+    equivalence depends on this being the single source of truth."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    m = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    perm = jax.random.permutation(key, n)
+    order = jnp.argsort(jnp.where(m[perm], 0, 1), stable=True)
+    return perm[order]
+
+
 def _bucketing(xs, mask=None, key=None, *, s: int = 2, inner=None):
     """Randomly permute rows, average buckets of size ``s``, apply ``inner``.
 
@@ -200,15 +225,9 @@ def _bucketing(xs, mask=None, key=None, *, s: int = 2, inner=None):
     """
     if inner is None:
         inner = _coordinate_median
-    if key is None:
-        key = jax.random.PRNGKey(0)
     n = xs.shape[0]
     m = _full_mask(xs, mask)
-    perm = jax.random.permutation(key, n)
-    # Move sampled rows to the front so buckets are dense in the sampled set:
-    # sort by (not sampled, random) — stable argsort on the permuted order.
-    order = jnp.argsort(jnp.where(m[perm], 0, 1), stable=True)
-    idx = perm[order]
+    idx = _bucket_order(key, mask, n)
     xp = xs[idx]
     mp = m[idx]
     n_buckets = -(-n // s)
@@ -233,6 +252,15 @@ class Aggregator:
 
     ``f_a(d)``: the Assumption-2.3 bound ||A(x_1..x_n)|| <= F_A max||x_i||.
     ``is_aragg``: satisfies Def 2.1 agnostically (possibly via bucketing).
+    ``backend``: which implementation backs ``fn`` ("jnp" or "pallas").
+    ``fused_clip_fn``: when set (pallas CM/TM), computes
+    Agg({clip_radius(x_i)}) in one fused kernel pass-pair without
+    materializing the clipped matrix; ``clip_then_aggregate`` falls back to
+    per-row clip + ``fn`` otherwise.
+
+    ``xs`` may be an (n, d) matrix or a pytree whose leaves carry a leading
+    worker axis; pytrees are flattened into ONE contiguous (n, d) buffer
+    (single kernel launch) and the result is unflattened.
     """
 
     name: str
@@ -240,9 +268,27 @@ class Aggregator:
     f_a: Callable[[int], float]
     is_aragg: bool
     c_const: float  # the c in (delta, c)-RAgg (literature values)
+    backend: str = "jnp"
+    fused_clip_fn: Optional[Callable] = None
 
     def __call__(self, xs, mask=None, key=None):
+        if not hasattr(xs, "ndim"):
+            mat, unravel_row = tree_batch_ravel(xs)
+            return unravel_row(self.fn(mat, mask=mask, key=key))
         return self.fn(xs, mask=mask, key=key)
+
+    def clip_then_aggregate(self, xs, radius, mask=None, key=None):
+        """Agg over per-row l2-clipped messages (the Algorithm-1 server step
+        for difference rounds).  Fused on the pallas backend."""
+        if not hasattr(xs, "ndim"):
+            mat, unravel_row = tree_batch_ravel(xs)
+            return unravel_row(
+                self.clip_then_aggregate(mat, radius, mask=mask, key=key)
+            )
+        if self.fused_clip_fn is not None:
+            return self.fused_clip_fn(xs, radius, mask=mask, key=key)
+        clipped = jax.vmap(lambda v: _clip(v, radius))(xs)
+        return self.fn(clipped, mask=mask, key=key)
 
 
 def mean() -> Aggregator:
@@ -308,10 +354,14 @@ def bucketing(inner: Aggregator, s: int = 2) -> Aggregator:
     )
 
 
+_DEFAULT_TRIM = 0.1
+
 _FACTORY = {
     "mean": lambda **kw: mean(),
     "cm": lambda **kw: coordinate_median(),
-    "trimmed_mean": lambda **kw: trimmed_mean(float(kw.get("trim_ratio", 0.1))),
+    "trimmed_mean": lambda **kw: trimmed_mean(
+        float(kw.get("trim_ratio", _DEFAULT_TRIM))
+    ),
     "rfa": lambda **kw: geometric_median(int(kw.get("iters", 8))),
     "geometric_median": lambda **kw: geometric_median(int(kw.get("iters", 8))),
     "krum": lambda **kw: krum(kw.get("byz_bound")),
@@ -324,12 +374,81 @@ _FACTORY = {
 }
 
 
-def make_aggregator(name: str, bucket_s: int = 0, **kwargs) -> Aggregator:
+# ---------------------------------------------------------------------------
+# backend dispatch
+# ---------------------------------------------------------------------------
+
+def resolve_backend(backend: str) -> str:
+    """Resolve "auto" to the concrete backend for this process."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"unknown backend {backend!r}; have 'jnp', 'pallas', 'auto'"
+        )
+    return backend
+
+
+def _make_pallas_cm_fns(trim_ratio: float, bucket_s: int):
+    """Kernel-backed (aggregate, fused clip+aggregate) pair for CM/TM,
+    optionally composed with Bucketing — same math as the jnp rules."""
+
+    def _idx(key, mask, n):
+        return _bucket_order(key, mask, n) if bucket_s >= 2 else None
+
+    def aggregate(xs, mask=None, key=None):
+        if bucket_s < 2:
+            if trim_ratio < 0:
+                return _kops.coordinate_median(xs, mask)
+            return _kops.trimmed_mean(xs, mask, trim_ratio=trim_ratio)
+        out, _ = _kops.clip_then_aggregate(
+            xs, 0.0, mask, _idx(key, mask, xs.shape[0]),
+            trim_ratio=trim_ratio, bucket_s=bucket_s, use_clip=False,
+        )
+        return out
+
+    def fused_clip(xs, radius, mask=None, key=None):
+        out, _ = _kops.clip_then_aggregate(
+            xs, radius, mask, _idx(key, mask, xs.shape[0]),
+            trim_ratio=trim_ratio, bucket_s=max(bucket_s, 1), use_clip=True,
+        )
+        return out
+
+    return aggregate, fused_clip
+
+
+def make_aggregator(
+    name: str, bucket_s: int = 0, backend: str = "jnp", **kwargs
+) -> Aggregator:
     """Build an aggregator by name, optionally composed with Bucketing
-    (``bucket_s >= 2``)."""
+    (``bucket_s >= 2``) and backed by the requested ``backend``
+    ("jnp" | "pallas" | "auto"; see module docstring)."""
     if name not in _FACTORY:
         raise ValueError(f"unknown aggregator {name!r}; have {sorted(_FACTORY)}")
+    resolved = resolve_backend(backend)
     agg = _FACTORY[name](**kwargs)
     if bucket_s and bucket_s >= 2:
         agg = bucketing(agg, s=bucket_s)
+    if resolved != "pallas":
+        return agg
+    if name in ("cm", "trimmed_mean"):
+        trim = (
+            -1.0
+            if name == "cm"
+            else float(kwargs.get("trim_ratio", _DEFAULT_TRIM))
+        )
+        fn, fused = _make_pallas_cm_fns(trim, bucket_s if bucket_s else 0)
+        return dataclasses.replace(
+            agg, fn=fn, fused_clip_fn=fused, backend="pallas"
+        )
+    if name == "centered_clip" and bucket_s < 2:
+        tau = float(kwargs.get("tau", 10.0))
+        iters = int(kwargs.get("iters", 5))
+
+        def cclip_fn(xs, mask=None, key=None):
+            return _kops.centered_clip(xs, mask, tau=tau, iters=iters)
+
+        return dataclasses.replace(agg, fn=cclip_fn, backend="pallas")
+    # no kernel for this rule/composition (krum, rfa, mean, bucketed
+    # centered-clip, ...): keep the jnp implementation.
     return agg

@@ -15,6 +15,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# clip_factor lives in the kernel module (which imports nothing from
+# repro.core) so the fused kernel and this reference path share one
+# definition; the reverse direction would cycle through repro.core.__init__.
+from ..kernels.clip_aggregate import clip_factor
 from .tree_utils import tree_norm
 
 __all__ = [
@@ -25,13 +29,6 @@ __all__ = [
     "theorem41_alpha",
     "theorem42_alpha",
 ]
-
-_EPS = 1e-30
-
-
-def clip_factor(norm, radius):
-    """min{1, radius/norm} with clip(0)=0 semantics (factor of 1 at 0)."""
-    return jnp.minimum(1.0, radius / jnp.maximum(norm, _EPS))
 
 
 def clip(x, radius):

@@ -14,6 +14,7 @@ import numpy as np
 __all__ = [
     "tree_ravel",
     "tree_unravel",
+    "tree_batch_ravel",
     "tree_add",
     "tree_sub",
     "tree_scale",
@@ -59,6 +60,46 @@ def tree_unravel(template, vec):
     """Unravel ``vec`` into the structure/shapes/dtypes of ``template``."""
     _, unravel = tree_ravel(template)
     return unravel(vec)
+
+
+def tree_batch_ravel(tree):
+    """Flatten a pytree of per-worker arrays into ONE contiguous (n, d) buffer.
+
+    Every leaf must carry the same leading worker axis n; leaf ``(n, *s)``
+    contributes ``prod(s)`` columns.  This is what lets a multi-tensor model
+    gradient hit the aggregation kernels in a single launch instead of one
+    launch per leaf.
+
+    Returns (matrix (n, d), unravel_row) where ``unravel_row`` maps an
+    aggregated row vector (d,) back to a pytree of per-leaf shapes
+    (without the worker axis).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("tree_batch_ravel: empty pytree")
+    n = leaves[0].shape[0]
+    for l in leaves:
+        if l.shape[0] != n:
+            raise ValueError(
+                f"leading worker axes disagree: {l.shape[0]} != {n}"
+            )
+    shapes = [l.shape[1:] for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    dtype = jnp.result_type(*dtypes)
+    mat = jnp.concatenate(
+        [l.reshape(n, -1).astype(dtype) for l in leaves], axis=1
+    )
+
+    def unravel_row(v):
+        out = []
+        offset = 0
+        for shape, dt, size in zip(shapes, dtypes, sizes):
+            out.append(v[offset : offset + size].reshape(shape).astype(dt))
+            offset += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return mat, unravel_row
 
 
 def tree_add(a, b):

@@ -3,6 +3,7 @@ interpret mode on CPU; see ops.py for the public wrappers)."""
 from .ops import (  # noqa: F401
     bucketed_coordinate_median,
     centered_clip,
+    clip_then_aggregate,
     clipped_diff,
     coordinate_median,
     trimmed_mean,

@@ -36,36 +36,46 @@ def _ranks(vals, n):
     return jnp.sum(less + tie, axis=1)  # (n, td)
 
 
+def _select_masked(vals, ok_mask_f32, *, trim_ratio):
+    """Masked order-statistic selection over rows of a (m, td) block.
+
+    ``vals`` must already hold +BIG in masked-out rows.  ``trim_ratio < 0``
+    selects the numpy-style median (average of the two middle order
+    statistics); otherwise the symmetric trimmed mean.  Shared by the
+    standalone CM/TM kernels and the fused clip->aggregate kernel
+    (clip_aggregate.py) — one source of truth for tie/trim handling.
+    """
+    m_rows = vals.shape[0]
+    cnt = jnp.sum(ok_mask_f32, dtype=F32).astype(jnp.int32)
+    rank = _ranks(vals, m_rows)
+    if trim_ratio < 0:
+        lo = (cnt - 1) // 2
+        hi = cnt // 2
+        pick = (rank == lo).astype(F32) + (rank == hi).astype(F32)
+        return 0.5 * jnp.sum(vals * pick, axis=0, keepdims=True)
+    t = jnp.minimum(
+        jnp.ceil(trim_ratio * cnt.astype(F32)).astype(jnp.int32),
+        (cnt - 1) // 2,
+    )
+    keep = ((rank >= t) & (rank < cnt - t)).astype(F32)
+    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
+    return jnp.sum(vals * keep, axis=0, keepdims=True) / denom
+
+
 def _cm_kernel(mask_ref, x_ref, o_ref):
     x = x_ref[...].astype(F32)  # (n, td)
     m = mask_ref[...].astype(F32)  # (n, 1)
-    n = x.shape[0]
     vals = jnp.where(m > 0.5, x, _BIG)
-    cnt = jnp.sum(m, dtype=F32).astype(jnp.int32)
-    rank = _ranks(vals, n)
-    lo = (cnt - 1) // 2
-    hi = cnt // 2
-    pick = (rank == lo).astype(F32) + (rank == hi).astype(F32)
-    o_ref[...] = (0.5 * jnp.sum(vals * pick, axis=0, keepdims=True)).astype(
-        o_ref.dtype
-    )
+    o_ref[...] = _select_masked(vals, m, trim_ratio=-1.0).astype(o_ref.dtype)
 
 
 def _tm_kernel(mask_ref, x_ref, o_ref, *, trim_ratio):
     x = x_ref[...].astype(F32)
     m = mask_ref[...].astype(F32)
-    n = x.shape[0]
     vals = jnp.where(m > 0.5, x, _BIG)
-    cnt = jnp.sum(m, dtype=F32).astype(jnp.int32)
-    rank = _ranks(vals, n)
-    t = jnp.minimum(
-        jnp.ceil(trim_ratio * cnt.astype(F32)).astype(jnp.int32), (cnt - 1) // 2
+    o_ref[...] = _select_masked(vals, m, trim_ratio=trim_ratio).astype(
+        o_ref.dtype
     )
-    keep = ((rank >= t) & (rank < cnt - t)).astype(F32)
-    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
-    o_ref[...] = (
-        jnp.sum(vals * keep, axis=0, keepdims=True) / denom
-    ).astype(o_ref.dtype)
 
 
 def _pad_to(x, mult, axis):

@@ -4,14 +4,36 @@ On TPU the kernels run compiled; on CPU (this container) they execute in
 ``interpret=True`` mode — the kernel bodies run in Python with identical
 semantics, which is what the allclose sweeps in tests/test_kernels.py rely
 on.  Callers never pass ``interpret`` themselves.
+
+Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
+
+- ``backend="jnp"``    — pure-jnp aggregation everywhere (the reference
+  path; always available, used inside vmap/shard_map/pjit freely).
+- ``backend="pallas"`` — the (n, d) -> (d,) hot paths route through these
+  kernels: ``coordinate_median`` / ``trimmed_mean`` for the aggregation
+  itself and ``clip_then_aggregate`` for the fused server-side
+  clip -> aggregate of the difference rounds (2 instead of ~4 HBM streams
+  over the message matrix).  Rules without a kernel (krum, rfa, mean, ...)
+  silently keep the jnp implementation.
+- ``backend="auto"``   — picks ``pallas`` iff ``jax.default_backend()`` is
+  TPU (where the tiling pays off), else ``jnp``.  On CPU the pallas choice
+  still *works* (interpret mode) and is what the equivalence tests use.
+
+The backend probe is memoized at module level: the default jax backend
+cannot change within a process, and ``jax.default_backend()`` initializes
+the platform on every call — too expensive for a per-kernel-invocation
+check.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from . import ref  # noqa: F401  (re-exported for convenience)
 from .bucketing import bucketed_coordinate_median as _bucketed_cm
 from .centered_clip import centered_clip as _centered_clip
+from .clip_aggregate import clip_then_aggregate as _clip_then_aggregate
 from .clipped_diff import clipped_diff as _clipped_diff
 from .coordinate_median import coordinate_median as _coordinate_median
 
@@ -19,14 +41,20 @@ __all__ = [
     "coordinate_median",
     "trimmed_mean",
     "clipped_diff",
+    "clip_then_aggregate",
     "centered_clip",
     "bucketed_coordinate_median",
     "ref",
 ]
 
+_INTERPRET: Optional[bool] = None
+
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
 
 
 def coordinate_median(xs, mask=None):
@@ -42,6 +70,31 @@ def trimmed_mean(xs, mask=None, trim_ratio: float = 0.1):
 def clipped_diff(g_new, g_old, radius, keep_mask, scale):
     return _clipped_diff(
         g_new, g_old, radius, keep_mask, scale, interpret=_interpret()
+    )
+
+
+def clip_then_aggregate(
+    xs,
+    radius,
+    mask=None,
+    bucket_idx=None,
+    *,
+    trim_ratio: float = -1.0,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+):
+    """Fused per-row clip at ``radius`` -> masked CM/TM (optionally over
+    ``bucket_s``-buckets in the ``bucket_idx`` row order).  Returns
+    (aggregated (d,), row_norms (n,) or None)."""
+    return _clip_then_aggregate(
+        xs,
+        radius,
+        mask,
+        bucket_idx,
+        trim_ratio=trim_ratio,
+        bucket_s=bucket_s,
+        use_clip=use_clip,
+        interpret=_interpret(),
     )
 
 

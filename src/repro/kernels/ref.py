@@ -67,6 +67,50 @@ def centered_clip_ref(xs, tau, iters, mask=None):
     return jax.lax.fori_loop(0, iters, body, v).astype(xs.dtype)
 
 
+def clip_then_aggregate_ref(
+    xs, radius, mask=None, bucket_idx=None, *, trim_ratio=-1.0, bucket_s=1
+):
+    """Oracle for the fused clip -> aggregate kernel.
+
+    Per-row l2 clip at ``radius`` followed by masked CM (``trim_ratio < 0``)
+    or trimmed mean, optionally composed with Bucketing over the explicit
+    row order ``bucket_idx`` (mask-weighted bucket means, empty buckets
+    masked out — the aggregators._bucketing semantics).
+    Returns (aggregated (d,), row_norms (n,)).
+    """
+    n = xs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    x32 = xs.astype(F32)
+    norms = jnp.sqrt(jnp.sum(x32 * x32, axis=1))
+    factors = jnp.minimum(1.0, radius / jnp.maximum(norms, 1e-30))
+    clipped = (x32 * factors[:, None]).astype(xs.dtype)
+
+    def inner(vals, m):
+        if trim_ratio < 0:
+            return coordinate_median_ref(vals, m)
+        return trimmed_mean_ref(vals, m, trim_ratio=trim_ratio)
+
+    if bucket_s < 2:
+        return inner(clipped, mask), norms
+
+    if bucket_idx is None:
+        bucket_idx = jnp.arange(n, dtype=jnp.int32)
+    m = mask.astype(F32)
+    xp = jnp.take(clipped.astype(F32), bucket_idx, axis=0)
+    mp = jnp.take(m, bucket_idx, axis=0)
+    pad = (-n) % bucket_s
+    if pad:
+        xp = jnp.pad(xp, ((0, pad), (0, 0)))
+        mp = jnp.pad(mp, (0, pad))
+    nb = xp.shape[0] // bucket_s
+    xb = xp.reshape(nb, bucket_s, -1)
+    mb = mp.reshape(nb, bucket_s, 1)
+    cnt = jnp.sum(mb, axis=1)
+    means = jnp.sum(xb * mb, axis=1) / jnp.maximum(cnt, 1.0)
+    return inner(means.astype(xs.dtype), cnt[:, 0] > 0.5), norms
+
+
 def bucketed_cm_ref(xs, perm, mask=None, s=2):
     """Bucketing(s) o CM with an explicit permutation (matches the kernel:
     mask-weighted bucket means; empty buckets masked out of the median)."""

@@ -10,20 +10,41 @@ the device count; real deployments get the real topology.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older releases default to Auto
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 __all__ = [
     "make_production_mesh",
     "make_debug_mesh",
+    "set_mesh",
     "worker_axes",
     "num_workers",
 ]
 
 
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on jax >= 0.5; on older releases a concrete Mesh is
+    itself the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
@@ -31,10 +52,10 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     if pod:
         return jax.make_mesh(
             (pod, data, model), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
+            **_axis_type_kwargs(3),
         )
     return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+        (data, model), ("data", "model"), **_axis_type_kwargs(2)
     )
 
 

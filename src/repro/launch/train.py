@@ -30,7 +30,7 @@ from repro.core.tree_utils import tree_norm
 from repro.models.model import ModelConfig, apply_train, init_params
 from repro.sharding import constraints as cons
 from repro.sharding.rules import batch_specs, param_specs, state_sharding
-from .mesh import num_workers, worker_axes
+from .mesh import num_workers, set_mesh, worker_axes
 
 __all__ = ["ByzTrainConfig", "MeshTrainState", "make_train_step", "abstract_state"]
 
@@ -198,7 +198,7 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         chunks = flat.reshape(W, -1)
         sw = chunks
         for ax in waxes:  # all_to_all over each worker axis in turn
-            n_ax = jax.lax.axis_size(ax)
+            n_ax = mesh.shape[ax]  # static (jax.lax.axis_size needs >= 0.5)
             sw = sw.reshape(n_ax, -1, sw.shape[-1])
             sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
             sw = sw.reshape(-1, sw.shape[-1])
@@ -223,15 +223,32 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     all_axes = referenced | (
         {"model"} if "model" in mesh.axis_names else set()
     )
-    smapped = jax.shard_map(
+    smapped = _shard_map(
         lambda t, m, k: jax.tree_util.tree_map(lambda l: inner(l, m, k), t),
         mesh=mesh,
         in_specs=(in_specs, P(), P()),
         out_specs=base_specs,
         axis_names=all_axes,
-        check_vma=False,
     )
     return smapped(tree_w, mask, key)
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+    """jax.shard_map on jax >= 0.5; jax.experimental.shard_map before.
+
+    The legacy API has no ``axis_names`` — every mesh axis is manual, which
+    matches the callers here (``axis_names`` always covers the whole mesh:
+    worker axes plus "model")."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -501,7 +518,7 @@ def main():
           f"({W} workers, {tc.n_byz} byzantine, agg={tc.aggregator})")
     step_fn = make_train_step(model_cfg, mesh, tc)
     it = make_batch_iterator(model_cfg, W * args.per_worker_batch, args.seq)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(jax.random.PRNGKey(0), model_cfg)
         batch0 = next(it)
         g0 = jax.grad(lambda p: apply_train(p, model_cfg, batch0)[0])(params)

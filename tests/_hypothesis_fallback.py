@@ -1,0 +1,92 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+The container this repo tests in does not ship hypothesis and nothing may be
+pip-installed, so conftest registers this module under ``sys.modules
+["hypothesis"]`` as a fallback.  It implements the tiny subset the test
+suite uses — ``@settings(max_examples=..., deadline=...)``, ``@given(**
+strategies)`` and ``strategies.integers/floats/booleans/sampled_from`` — by
+drawing ``max_examples`` samples from a fixed-seed PRNG, so runs are
+reproducible (no shrinking, no database).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=None, max_value=None, **_kw):
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            for _ in range(wrapper._max_examples):
+                drawn = {
+                    k: s.example(rng) for k, s in strategy_kwargs.items()
+                }
+                fn(*args, **drawn, **kwargs)
+
+        wrapper._max_examples = 10
+        wrapper._is_given_wrapper = True
+        # Hide the drawn parameters from pytest's fixture resolution
+        # (functools.wraps exposes the original signature via __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kwargs
+        )
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = 10, **_kw):
+    def decorate(fn):
+        if getattr(fn, "_is_given_wrapper", False):
+            fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(strategies, name, getattr(mod, name))
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,9 +1,18 @@
 import os
+import sys
 
 # Tests run on the single real CPU device.  The multi-device dry-run tests
 # spawn subprocesses with XLA_FLAGS set there (device count locks at first
 # jax init, so it must NOT be set globally here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container has no hypothesis; use the deterministic shim
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
 
 import jax  # noqa: E402
 

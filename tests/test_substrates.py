@@ -124,7 +124,10 @@ def test_param_specs_tp_and_fsdp():
 
     cfg = get_smoke_config("minitron_8b")
     shapes = _jax.eval_shape(lambda k: init_params(k, cfg), _jax.random.PRNGKey(0))
-    mesh = _jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    try:
+        mesh = _jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    except TypeError:  # jax < 0.5: AbstractMesh takes ((name, size), ...)
+        mesh = _jax.sharding.AbstractMesh((("data", 4), ("model", 4)))
     specs_tp = param_specs(mesh, cfg, shapes, mode="tp")
     specs_fs = param_specs(mesh, cfg, shapes, mode="fsdp_tp")
     flat_tp = jax.tree_util.tree_leaves(specs_tp, is_leaf=lambda x: isinstance(x, P))
