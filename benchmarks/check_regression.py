@@ -1,0 +1,187 @@
+"""Kernel-perf regression gate.
+
+Runs a fresh ``--smoke``-sized kernel benchmark and diffs it against the
+committed ``BENCH_kernels.json``.  Two tiers:
+
+- **traffic models** (deterministic): any >1% increase in modeled fused
+  HBM bytes — someone un-fused a path — fails immediately.  This is the
+  trustworthy PR-over-PR perf trajectory on a CPU-only container.
+- **wall-clock rows**: fail on a per-kernel slowdown beyond
+  ``--tolerance`` (default 20%).  Interpret-mode timings on this
+  container's shared vCPU jitter up to ~2.5x between processes, so the
+  effective threshold is ``max(1 + tolerance, --noise-ratio)`` (default
+  3.0); on hardware with stable timers pass ``--noise-ratio 1`` to get
+  the pure 20% gate.  Rows faster than ``--min-us`` never fail, but a
+  committed row that vanishes or reports 0 in the fresh run always does
+  (a kernel or bench path broke; after an intentional kernel removal,
+  regenerate the baseline).
+
+  PYTHONPATH=src python -m benchmarks.check_regression            # gate
+  PYTHONPATH=src python -m benchmarks.run --smoke --check-regression
+
+Regenerate the committed baseline (``python -m benchmarks.run --smoke``)
+whenever kernels are intentionally changed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+BASELINE = "BENCH_kernels.json"
+
+# deterministic modeled-bytes keys gated at 1%: fused streams growing
+# means a fusion was lost
+_TRAFFIC_KEYS = ("fused_bytes", "fused_resident_bytes", "fused_tiled_bytes")
+
+
+def _rows_by_name(payload: dict) -> dict:
+    return {r["name"]: float(r["us_per_call"]) for r in payload.get("rows", [])}
+
+
+def _traffic_models(payload: dict) -> dict:
+    """Flatten every traffic_model* block into {path: bytes}."""
+    out = {}
+
+    def walk(prefix, obj):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                if k in _TRAFFIC_KEYS and isinstance(v, (int, float)):
+                    out[f"{prefix}.{k}"] = float(v)
+                elif isinstance(v, dict):
+                    walk(f"{prefix}.{k}", v)
+
+    for key, val in payload.items():
+        if key.startswith("traffic_model"):
+            walk(key, val)
+    return out
+
+
+def compare(committed: dict, fresh: dict, *, tolerance: float,
+            noise_ratio: float, min_us: float):
+    """Returns (timing_regressions, traffic_regressions)."""
+    old, new = _rows_by_name(committed), _rows_by_name(fresh)
+    timing = []
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name], new[name]
+        if o <= 0:  # skipped/degenerate committed rows
+            continue
+        if n <= 0:  # row stopped producing data (e.g. subprocess failed)
+            timing.append((name, o, n, 0.0))
+            continue
+        if name.endswith("_ref_jnp"):
+            # jnp reference rows are comparison context, not the guarded
+            # surface — XLA-CPU fusion timing flukes shouldn't gate PRs
+            continue
+        thresh = max(1.0 + tolerance, noise_ratio)
+        if name.startswith("robust_agg"):  # subprocess rows: extra noise
+            thresh *= 1.25
+        if n > max(o * thresh, min_us):
+            timing.append((name, o, n, n / o))
+    # a committed row missing entirely from the fresh run is the same
+    # failure as a zeroed one — a kernel/bench path broke
+    for name in sorted(set(old) - set(new)):
+        if old[name] > 0:
+            timing.append((name, old[name], 0.0, 0.0))
+    t_old, t_new = _traffic_models(committed), _traffic_models(fresh)
+    traffic = [
+        (name, t_old[name], t_new[name], t_new[name] / t_old[name])
+        for name in sorted(set(t_old) & set(t_new))
+        if t_new[name] > t_old[name] * 1.01
+    ]
+    return timing, traffic
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="committed benchmark JSON to diff against")
+    ap.add_argument("--fresh", default="",
+                    help="pre-generated fresh JSON (skips the bench run)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed per-kernel slowdown fraction")
+    ap.add_argument("--noise-ratio", type=float, default=3.0,
+                    help="effective ratio floor for noisy interpret-mode "
+                         "timers (1 = pure --tolerance gate)")
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="rows below this never fail (timing noise floor)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"[check_regression] no baseline {args.baseline!r}; "
+              "run `python -m benchmarks.run --smoke` and commit it")
+        return 1
+    committed = json.load(open(args.baseline))
+
+    def _size_check(fresh):
+        """Quick-vs-full runs differ ~16x in d: comparing them is either
+        all-false-regressions or a vacuous pass that would then corrupt
+        the committed baseline — refuse instead."""
+        if committed.get("quick") != fresh.get("quick"):
+            print(
+                "[check_regression] baseline quick="
+                f"{committed.get('quick')!r} but fresh run quick="
+                f"{fresh.get('quick')!r}: problem sizes differ, refusing "
+                "to compare (regenerate the baseline at the matching size)"
+            )
+            return False
+        return True
+
+    if args.fresh:
+        fresh = json.load(open(args.fresh))
+    else:
+        from benchmarks import bench_kernels
+
+        tmp = tempfile.NamedTemporaryFile(
+            mode="r", suffix=".json", delete=False
+        )
+        tmp.close()
+        try:
+            bench_kernels.run(quick=True, out_json=tmp.name)
+            fresh = json.load(open(tmp.name))
+        finally:
+            os.unlink(tmp.name)
+
+    if not _size_check(fresh):
+        return 1
+
+    timing, traffic = compare(
+        committed, fresh, tolerance=args.tolerance,
+        noise_ratio=args.noise_ratio, min_us=args.min_us,
+    )
+    old, new = _rows_by_name(committed), _rows_by_name(fresh)
+    warn_ratio = 1.0 + args.tolerance
+    for name in sorted(set(old) & set(new)):
+        ratio = new[name] / old[name] if old[name] else float("inf")
+        flag = ""
+        if any(r[0] == name for r in timing):
+            flag = " <-- REGRESSION"
+        elif ratio > warn_ratio:
+            flag = " (warn: above tolerance, within timer noise)"
+        print(f"[check_regression] {name:44s} {old[name]:10.1f} -> "
+              f"{new[name]:10.1f} us ({ratio:5.2f}x){flag}")
+    for name, o, n, ratio in traffic:
+        print(f"[check_regression] TRAFFIC {name}: {o:.3e} -> {n:.3e} "
+              f"modeled bytes ({ratio:.2f}x) <-- REGRESSION")
+    for name, o, n, _ in timing:
+        if name not in new or n <= 0:
+            print(f"[check_regression] {name}: committed {o:.1f} us but "
+                  "missing/zero in the fresh run <-- REGRESSION "
+                  "(bench path broke, or regenerate the baseline after an "
+                  "intentional kernel removal)")
+    added = sorted(set(new) - set(old))
+    if added:
+        print(f"[check_regression] new rows (not gated): {added}")
+    if timing or traffic:
+        print(f"[check_regression] FAIL: {len(timing)} timing + "
+              f"{len(traffic)} modeled-traffic regression(s)")
+        return 1
+    print("[check_regression] OK: no modeled-traffic growth; no slowdown "
+          f"beyond {max(1 + args.tolerance, args.noise_ratio):.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

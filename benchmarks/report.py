@@ -117,6 +117,23 @@ def kernel_table(path: str = "BENCH_kernels.json") -> str:
             f"floors {tm['unfused_tpu_floor_us']:.1f} us -> "
             f"{tm['fused_tpu_floor_us']:.1f} us."
         )
+    tmk = data.get("traffic_model_krum")
+    if tmk:
+        lines.append(
+            f"Fused clip->Krum (one Gram stream): "
+            f"**{tmk['unfused_bytes']/1e6:.1f} MB -> "
+            f"{tmk['fused_bytes']/1e6:.1f} MB "
+            f"({tmk['traffic_reduction']:.2f}x)**."
+        )
+    tmi = data.get("traffic_model_iterative", {})
+    for label, t in sorted(tmi.items()):
+        lines.append(
+            f"Fused clip->{label} (VMEM-resident iterations): "
+            f"**{t['unfused_bytes']/1e6:.1f} MB -> "
+            f"{t['fused_resident_bytes']/1e6:.1f} MB "
+            f"({t['traffic_reduction_resident']:.2f}x resident, "
+            f"{t['traffic_reduction_tiled']:.2f}x coordinate-tiled)**."
+        )
     return "\n".join(lines)
 
 

@@ -6,8 +6,15 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
 
 ``--smoke`` (CI entry) is shorthand for ``--quick --only kernels``: it
 exercises every Pallas kernel — including the fused clip->aggregate server
-step — in interpret mode and writes ``BENCH_kernels.json`` for the perf
-trajectory (rendered by benchmarks/report.py).
+step for the whole aggregator registry (CM/TM/mean, Krum, centered-clip,
+Weiszfeld GM) and the sharded-vs-naive robust_aggregate pair — in
+interpret mode and writes ``BENCH_kernels.json`` for the perf trajectory
+(rendered by benchmarks/report.py).
+
+``--check-regression`` additionally diffs the freshly written
+``BENCH_kernels.json`` against the committed one BEFORE overwriting it
+and exits non-zero on a >20% per-kernel slowdown
+(benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -24,6 +31,9 @@ def main() -> None:
                     help="comma-separated subset: fig1,fig2,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: --quick --only kernels")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="gate: fail on >20%% per-kernel slowdown vs the "
+                         "committed BENCH_kernels.json")
     args = ap.parse_args()
     if args.smoke:
         args.quick = True
@@ -31,10 +41,37 @@ def main() -> None:
 
     from benchmarks import bench_ablation, bench_fig1, bench_fig2, bench_kernels
 
+    kernels_run = bench_kernels.run
+    if args.check_regression:
+        import json
+        import tempfile
+
+        from benchmarks import check_regression
+
+        def kernels_run(quick=False):  # noqa: F811 — gate wrapper
+            import os
+
+            tmp = tempfile.NamedTemporaryFile(
+                mode="r", suffix=".json", delete=False
+            )
+            tmp.close()
+            try:
+                rows = bench_kernels.run(quick=quick, out_json=tmp.name)
+                rc = check_regression.main(["--fresh", tmp.name])
+                if rc:
+                    raise SystemExit(rc)
+                # gate passed: promote the fresh numbers to the baseline
+                payload = json.load(open(tmp.name))
+            finally:
+                os.unlink(tmp.name)
+            with open(bench_kernels.BENCH_JSON, "w") as f:
+                json.dump(payload, f, indent=2)
+            return rows
+
     suites = {
         "fig1": bench_fig1.run,
         "fig2": bench_fig2.run,
-        "kernels": bench_kernels.run,
+        "kernels": kernels_run,
         "ablation": bench_ablation.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites) | {"roofline"}

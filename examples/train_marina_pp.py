@@ -57,6 +57,14 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n-byz", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
+    # Aggregation backend ("jnp" | "pallas" | "auto").  "auto" picks the
+    # Pallas kernels iff running on TPU; "pallas" forces them (interpret
+    # mode on CPU — same math, slower, what the equivalence tests use).
+    # The sharded robust-aggregation schedule then runs the fused
+    # clip->aggregate kernel on each chip's (W, d/W) block: the server
+    # clip never materializes a clipped message tree in HBM.
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas"])
     args = ap.parse_args()
 
     cfg = build_config(args.smoke)
@@ -74,6 +82,7 @@ def main():
         attack="bf",
         use_clipping=True,
         clip_alpha=2.0,
+        backend=args.backend,
     )
     step_fn = make_train_step(cfg, mesh, tc)
 

@@ -18,11 +18,19 @@ pjit; the Pallas kernels in repro.kernels implement the hot (n,d)->d paths
 with explicit VMEM tiling and are verified against these references.
 
 ``make_aggregator(..., backend=)`` selects which implementation backs the
-returned rule: ``"jnp"`` (reference), ``"pallas"`` (kernel-backed CM /
-trimmed-mean, including the fused server-side clip->aggregate used by the
-engine's difference rounds), or ``"auto"`` (pallas iff running on TPU).
-Rules without a kernel keep the jnp path regardless of backend.  See
-repro.kernels.ops for the full contract.
+returned rule: ``"jnp"`` (reference), ``"pallas"`` (kernel-backed — the
+registry is kernel-complete: CM/TM/mean via the selection-network tiles,
+krum/multi-krum via the MXU Gram kernel, centered-clip and Weiszfeld GM
+via the resident/coordinate-tiled iteration kernels, each including the
+fused server-side clip->aggregate used by the engine's difference rounds
+and the Bucketing composition), or ``"auto"`` (pallas iff running on
+TPU).  See repro.kernels.ops for the full contract and coverage matrix.
+
+Krum selection semantics (distance masking, neighbour counting,
+tie-breaking) are shared helpers in repro.kernels.krum used by BOTH
+backends, so exact ties resolve identically under a backend swap (see
+kernels/krum.py for the ulp-level caveat on near-ties of distinct
+scores).
 """
 from __future__ import annotations
 
@@ -35,6 +43,11 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops as _kops
+from ..kernels.krum import (
+    krum_scores as _krum_scores,
+    masked_pairwise_d2 as _masked_pairwise_d2,
+    multi_krum_selection as _multi_krum_selection,
+)
 from .clipping import clip as _clip
 from .tree_utils import tree_batch_ravel
 
@@ -65,7 +78,7 @@ def _full_mask(xs, mask):
 # basic rules
 # ---------------------------------------------------------------------------
 
-def _mean(xs, mask=None, key=None):
+def _mean(xs, mask=None, key=None, reduce_fn=None):
     m = _full_mask(xs, mask).astype(xs.dtype)
     denom = jnp.maximum(jnp.sum(m), 1.0)
     return jnp.sum(xs * m[:, None], axis=0) / denom
@@ -80,9 +93,11 @@ def _masked_sorted(xs, mask):
     return jnp.sort(vals, axis=0), jnp.sum(m)
 
 
-def _coordinate_median(xs, mask=None, key=None):
+def _coordinate_median(xs, mask=None, key=None, reduce_fn=None):
     """Coordinate-wise median over the sampled rows (numpy semantics: the
-    average of the two middle order statistics for even counts)."""
+    average of the two middle order statistics for even counts).
+    ``reduce_fn`` is accepted (uniform rule signature) but unused:
+    coordinate-wise rules are exact on coordinate shards."""
     s, cnt = _masked_sorted(xs, mask)
     lo = (cnt - 1) // 2
     hi = cnt // 2
@@ -91,7 +106,8 @@ def _coordinate_median(xs, mask=None, key=None):
     return (0.5 * (v_lo + v_hi)).astype(xs.dtype)
 
 
-def _trimmed_mean(xs, mask=None, key=None, *, trim_ratio: float = 0.1):
+def _trimmed_mean(xs, mask=None, key=None, reduce_fn=None, *,
+                  trim_ratio: float = 0.1):
     """Coordinate-wise trimmed mean: drop ceil(trim_ratio*cnt) smallest and
     largest entries per coordinate, average the rest.  Satisfies Def 2.1
     (Allouah et al., 2023) when trim_ratio >= delta."""
@@ -106,15 +122,23 @@ def _trimmed_mean(xs, mask=None, key=None, *, trim_ratio: float = 0.1):
     return (jnp.sum(sv, axis=0) / denom).astype(xs.dtype)
 
 
-def _geometric_median(xs, mask=None, key=None, *, iters: int = 8, eps: float = 1e-8):
+def _geometric_median(xs, mask=None, key=None, reduce_fn=None, *,
+                      iters: int = 8, eps: float = 1e-8):
     """Geometric median via smoothed Weiszfeld fixed-point iterations
-    (Pillutla et al., 2022 — "RFA").  F_A = 1 (stays in the convex hull)."""
+    (Pillutla et al., 2022 — "RFA").  F_A = 1 (stays in the convex hull).
+
+    ``reduce_fn`` reduces the per-row squared distances across coordinate
+    shards (a psum inside shard_map) so the iteration runs on global
+    distances when ``xs`` is one chip's coordinate block."""
     m = _full_mask(xs, mask).astype(jnp.float32)
     x32 = xs.astype(jnp.float32)
     z0 = jnp.sum(x32 * m[:, None], axis=0) / jnp.maximum(jnp.sum(m), 1.0)
 
     def body(_, z):
-        dist = jnp.sqrt(jnp.sum((x32 - z[None]) ** 2, axis=1) + eps)
+        ssq = jnp.sum((x32 - z[None]) ** 2, axis=1)
+        if reduce_fn is not None:
+            ssq = reduce_fn(ssq)
+        dist = jnp.sqrt(ssq + eps)
         w = m / dist
         return jnp.sum(x32 * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), eps)
 
@@ -122,55 +146,40 @@ def _geometric_median(xs, mask=None, key=None, *, iters: int = 8, eps: float = 1
     return z.astype(xs.dtype)
 
 
-def _krum(xs, mask=None, key=None, *, byz_bound: Optional[int] = None):
+def _krum_scores_of(x32, mask_b, reduce_fn, byz_bound):
+    """Krum scores of the rows of ``x32``: jnp Gram matrix (psum-reduced
+    across coordinate shards when ``reduce_fn`` is set) fed into the
+    selection helpers shared with the pallas backend (repro.kernels.krum)
+    — masking, neighbour count and tie-breaking live in ONE place."""
+    gram = x32 @ x32.T
+    if reduce_fn is not None:
+        gram = reduce_fn(gram)
+        sq = jnp.diagonal(gram)  # global row ssq comes from the reduction
+    else:
+        sq = jnp.sum(x32 * x32, axis=1)
+    d2 = _masked_pairwise_d2(gram, sq, mask_b)
+    return _krum_scores(d2, mask_b, byz_bound)
+
+
+def _krum(xs, mask=None, key=None, reduce_fn=None, *,
+          byz_bound: Optional[int] = None):
     """Krum (Blanchard et al., 2017): return the row minimizing the summed
     squared distance to its n-B-2 nearest sampled neighbours.  F_A = 1."""
     m = _full_mask(xs, mask)
-    n = xs.shape[0]
-    cnt = jnp.sum(m)
-    b = jnp.asarray(
-        byz_bound if byz_bound is not None else 0, jnp.int32
-    )
     x32 = xs.astype(jnp.float32)
-    sq = jnp.sum(x32 * x32, axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (x32 @ x32.T)
-    d2 = jnp.maximum(d2, 0.0)
-    pair_ok = m[:, None] & m[None, :] & ~jnp.eye(n, dtype=bool)
-    d2 = jnp.where(pair_ok, d2, _BIG)
-    d2_sorted = jnp.sort(d2, axis=1)
-    csum = jnp.cumsum(jnp.where(d2_sorted >= _BIG, 0.0, d2_sorted), axis=1)
-    # number of neighbours scored: cnt - b - 2, at least 1
-    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
-    scores = csum[:, k_nb - 1]
-    scores = jnp.where(m, scores, _BIG)
+    scores = _krum_scores_of(x32, m, reduce_fn, byz_bound)
     winner = jnp.argmin(scores)
     return xs[winner]
 
 
-def _multi_krum(xs, mask=None, key=None, *, byz_bound: Optional[int] = None,
-                m_select: int = 0):
+def _multi_krum(xs, mask=None, key=None, reduce_fn=None, *,
+                byz_bound: Optional[int] = None, m_select: int = 0):
     """Multi-Krum (Damaskinos et al., 2019): average the m rows with the
     best Krum scores.  m defaults to cnt - B - 2."""
     m0 = _full_mask(xs, mask)
-    n = xs.shape[0]
-    cnt = jnp.sum(m0)
-    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
     x32 = xs.astype(jnp.float32)
-    sq = jnp.sum(x32 * x32, axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (x32 @ x32.T)
-    d2 = jnp.maximum(d2, 0.0)
-    pair_ok = m0[:, None] & m0[None, :] & ~jnp.eye(n, dtype=bool)
-    d2 = jnp.where(pair_ok, d2, _BIG)
-    d2_sorted = jnp.sort(d2, axis=1)
-    csum = jnp.cumsum(jnp.where(d2_sorted >= _BIG, 0.0, d2_sorted), axis=1)
-    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
-    scores = jnp.where(m0, csum[:, k_nb - 1], _BIG)
-    m_sel = jnp.clip(
-        jnp.asarray(m_select, jnp.int32) if m_select else cnt - b - 2, 1, n
-    )
-    order = jnp.argsort(scores)
-    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    sel = (rank < m_sel) & m0
+    scores = _krum_scores_of(x32, m0, reduce_fn, byz_bound)
+    sel = _multi_krum_selection(scores, m0, byz_bound, m_select)
     w = sel.astype(jnp.float32)
     return (
         jnp.sum(x32 * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1.0)
@@ -178,7 +187,8 @@ def _multi_krum(xs, mask=None, key=None, *, byz_bound: Optional[int] = None,
 
 
 def _centered_clip(
-    xs, mask=None, key=None, *, tau: float = 10.0, iters: int = 5
+    xs, mask=None, key=None, reduce_fn=None, *, tau: float = 10.0,
+    iters: int = 5
 ):
     """CenteredClip (Karimireddy et al., 2021):
        v <- v + mean_i clip_tau(x_i - v), iterated.  F_A depends on tau; with
@@ -190,7 +200,10 @@ def _centered_clip(
 
     def body(_, v):
         diff = x32 - v[None]
-        nrm = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-30)
+        ssq = jnp.sum(diff * diff, axis=1)
+        if reduce_fn is not None:
+            ssq = reduce_fn(ssq)
+        nrm = jnp.sqrt(ssq + 1e-30)
         scale = jnp.minimum(1.0, tau / nrm)
         upd = jnp.sum(diff * (scale * m)[:, None], axis=0) / denom
         return v + upd
@@ -216,7 +229,8 @@ def _bucket_order(key, mask, n):
     return perm[order]
 
 
-def _bucketing(xs, mask=None, key=None, *, s: int = 2, inner=None):
+def _bucketing(xs, mask=None, key=None, reduce_fn=None, *, s: int = 2,
+               inner=None):
     """Randomly permute rows, average buckets of size ``s``, apply ``inner``.
 
     With a mask, bucket means are taken over sampled members only and empty
@@ -239,7 +253,9 @@ def _bucketing(xs, mask=None, key=None, *, s: int = 2, inner=None):
     cntb = jnp.sum(mb, axis=1)
     means = jnp.sum(xb * mb[:, :, None], axis=1) / jnp.maximum(cntb, 1.0)[:, None]
     bucket_mask = cntb > 0
-    return inner(means, mask=bucket_mask)
+    # bucket means are linear, hence exact per coordinate shard; only the
+    # inner rule needs the cross-shard reduction
+    return inner(means, mask=bucket_mask, reduce_fn=reduce_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -271,24 +287,45 @@ class Aggregator:
     backend: str = "jnp"
     fused_clip_fn: Optional[Callable] = None
 
-    def __call__(self, xs, mask=None, key=None):
-        if not hasattr(xs, "ndim"):
-            mat, unravel_row = tree_batch_ravel(xs)
-            return unravel_row(self.fn(mat, mask=mask, key=key))
-        return self.fn(xs, mask=mask, key=key)
-
-    def clip_then_aggregate(self, xs, radius, mask=None, key=None):
-        """Agg over per-row l2-clipped messages (the Algorithm-1 server step
-        for difference rounds).  Fused on the pallas backend."""
+    def __call__(self, xs, mask=None, key=None, reduce_fn=None):
+        """``reduce_fn`` reduces row statistics (norms, distances, Gram)
+        across coordinate shards — a psum when ``xs`` is one chip's block
+        inside shard_map; coordinate-wise rules ignore it."""
         if not hasattr(xs, "ndim"):
             mat, unravel_row = tree_batch_ravel(xs)
             return unravel_row(
-                self.clip_then_aggregate(mat, radius, mask=mask, key=key)
+                self.fn(mat, mask=mask, key=key, reduce_fn=reduce_fn)
+            )
+        return self.fn(xs, mask=mask, key=key, reduce_fn=reduce_fn)
+
+    def clip_then_aggregate(self, xs, radius, mask=None, key=None,
+                            factors=None, reduce_fn=None):
+        """Agg over per-row l2-clipped messages (the Algorithm-1 server step
+        for difference rounds).  Fused on the pallas backend.
+
+        ``factors`` (n,) supplies precomputed per-row clip scales instead
+        of clipping by the row norms of ``xs`` — the sharded trainer clips
+        by *global* per-worker tree norms that a per-chip block cannot
+        see, so it computes the factors once and passes them down here.
+        ``reduce_fn`` as in ``__call__``."""
+        if not hasattr(xs, "ndim"):
+            mat, unravel_row = tree_batch_ravel(xs)
+            return unravel_row(
+                self.clip_then_aggregate(
+                    mat, radius, mask=mask, key=key, factors=factors,
+                    reduce_fn=reduce_fn,
+                )
             )
         if self.fused_clip_fn is not None:
-            return self.fused_clip_fn(xs, radius, mask=mask, key=key)
-        clipped = jax.vmap(lambda v: _clip(v, radius))(xs)
-        return self.fn(clipped, mask=mask, key=key)
+            return self.fused_clip_fn(
+                xs, radius, mask=mask, key=key, factors=factors,
+                reduce_fn=reduce_fn,
+            )
+        if factors is not None:
+            clipped = (xs * factors[:, None]).astype(xs.dtype)
+        else:
+            clipped = jax.vmap(lambda v: _clip(v, radius))(xs)
+        return self.fn(clipped, mask=mask, key=key, reduce_fn=reduce_fn)
 
 
 def mean() -> Aggregator:
@@ -389,30 +426,51 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
-def _make_pallas_cm_fns(trim_ratio: float, bucket_s: int):
-    """Kernel-backed (aggregate, fused clip+aggregate) pair for CM/TM,
-    optionally composed with Bucketing — same math as the jnp rules."""
+def _make_pallas_fns(kernel_fn, bucket_s: int, **kernel_kwargs):
+    """Kernel-backed (aggregate, fused clip+aggregate) pair from one of the
+    ``clip_then_*`` kernels, optionally composed with Bucketing via the
+    shared ``_bucket_order`` row-gather — same math as the jnp rules.
+
+    ``kernel_fn(xs, radius, mask, bucket_idx, factors, *, bucket_s,
+    use_clip, **kw) -> (out, norms)``."""
 
     def _idx(key, mask, n):
         return _bucket_order(key, mask, n) if bucket_s >= 2 else None
 
-    def aggregate(xs, mask=None, key=None):
+    def aggregate(xs, mask=None, key=None, reduce_fn=None):
+        out, _ = kernel_fn(
+            xs, 0.0, mask, _idx(key, mask, xs.shape[0]),
+            bucket_s=max(bucket_s, 1), use_clip=False, reduce_fn=reduce_fn,
+            **kernel_kwargs,
+        )
+        return out
+
+    def fused_clip(xs, radius, mask=None, key=None, factors=None,
+                   reduce_fn=None):
+        out, _ = kernel_fn(
+            xs, radius, mask, _idx(key, mask, xs.shape[0]), factors,
+            bucket_s=max(bucket_s, 1), use_clip=True, reduce_fn=reduce_fn,
+            **kernel_kwargs,
+        )
+        return out
+
+    return aggregate, fused_clip
+
+
+def _make_pallas_cm_fns(trim_ratio: float, bucket_s: int):
+    """CM/TM/mean specialization: routes the bucket-free plain aggregation
+    through the standalone CM/TM kernels (no factor pass at all)."""
+    aggregate_f, fused_clip = _make_pallas_fns(
+        _kops.clip_then_aggregate, bucket_s, trim_ratio=trim_ratio
+    )
+
+    def aggregate(xs, mask=None, key=None, reduce_fn=None):
+        # reduce_fn unused: CM/TM are coordinate-wise (exact per shard)
         if bucket_s < 2:
             if trim_ratio < 0:
                 return _kops.coordinate_median(xs, mask)
             return _kops.trimmed_mean(xs, mask, trim_ratio=trim_ratio)
-        out, _ = _kops.clip_then_aggregate(
-            xs, 0.0, mask, _idx(key, mask, xs.shape[0]),
-            trim_ratio=trim_ratio, bucket_s=bucket_s, use_clip=False,
-        )
-        return out
-
-    def fused_clip(xs, radius, mask=None, key=None):
-        out, _ = _kops.clip_then_aggregate(
-            xs, radius, mask, _idx(key, mask, xs.shape[0]),
-            trim_ratio=trim_ratio, bucket_s=max(bucket_s, 1), use_clip=True,
-        )
-        return out
+        return aggregate_f(xs, mask=mask, key=key)
 
     return aggregate, fused_clip
 
@@ -431,24 +489,37 @@ def make_aggregator(
         agg = bucketing(agg, s=bucket_s)
     if resolved != "pallas":
         return agg
-    if name in ("cm", "trimmed_mean"):
+    bs = bucket_s if bucket_s else 0
+    if name in ("cm", "trimmed_mean", "mean"):
+        # mean == trimmed mean with t = ceil(0 * cnt) = 0 dropped rows
         trim = (
             -1.0
             if name == "cm"
+            else 0.0
+            if name == "mean"
             else float(kwargs.get("trim_ratio", _DEFAULT_TRIM))
         )
-        fn, fused = _make_pallas_cm_fns(trim, bucket_s if bucket_s else 0)
-        return dataclasses.replace(
-            agg, fn=fn, fused_clip_fn=fused, backend="pallas"
+        fn, fused = _make_pallas_cm_fns(trim, bs)
+    elif name == "centered_clip":
+        fn, fused = _make_pallas_fns(
+            _kops.clip_then_centered_clip, bs,
+            tau=float(kwargs.get("tau", 10.0)),
+            iters=int(kwargs.get("iters", 5)),
         )
-    if name == "centered_clip" and bucket_s < 2:
-        tau = float(kwargs.get("tau", 10.0))
-        iters = int(kwargs.get("iters", 5))
-
-        def cclip_fn(xs, mask=None, key=None):
-            return _kops.centered_clip(xs, mask, tau=tau, iters=iters)
-
-        return dataclasses.replace(agg, fn=cclip_fn, backend="pallas")
-    # no kernel for this rule/composition (krum, rfa, mean, bucketed
-    # centered-clip, ...): keep the jnp implementation.
-    return agg
+    elif name in ("rfa", "geometric_median"):
+        fn, fused = _make_pallas_fns(
+            _kops.clip_then_geometric_median, bs,
+            iters=int(kwargs.get("iters", 8)),
+        )
+    elif name in ("krum", "multi_krum"):
+        fn, fused = _make_pallas_fns(
+            _kops.clip_then_krum, bs,
+            byz_bound=kwargs.get("byz_bound"),
+            m_select=int(kwargs.get("m_select", 0)),
+            multi=(name == "multi_krum"),
+        )
+    else:  # pragma: no cover — registry and dispatch lists must agree
+        raise AssertionError(f"no pallas dispatch for {name!r}")
+    return dataclasses.replace(
+        agg, fn=fn, fused_clip_fn=fused, backend="pallas"
+    )

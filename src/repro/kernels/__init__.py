@@ -1,10 +1,17 @@
 """Pallas TPU kernels for the aggregation hot-spot (validated in
-interpret mode on CPU; see ops.py for the public wrappers)."""
+interpret mode on CPU; see ops.py for the public wrappers and the
+backend contract)."""
 from .ops import (  # noqa: F401
     bucketed_coordinate_median,
     centered_clip,
     clip_then_aggregate,
+    clip_then_centered_clip,
+    clip_then_geometric_median,
+    clip_then_krum,
     clipped_diff,
     coordinate_median,
+    geometric_median,
+    krum,
+    multi_krum,
     trimmed_mean,
 )

@@ -85,7 +85,10 @@ def _clip_bucket_agg_kernel(
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _row_norms(xp, grid, n, interpret):
+def _row_norms(xp, grid, n, interpret, reduce_fn=None):
+    """Per-row l2 norms via tile-partial sums of squares.  ``reduce_fn``
+    (e.g. a psum over shard_map axes) turns block-local partial sums into
+    global ones when ``xp`` is one coordinate shard of a larger row."""
     partial_ssq = pl.pallas_call(
         _rownorm_kernel,
         grid=(grid,),
@@ -94,22 +97,29 @@ def _row_norms(xp, grid, n, interpret):
         out_shape=jax.ShapeDtypeStruct((n, grid), F32),
         interpret=interpret,
     )(xp)
-    return jnp.sqrt(jnp.sum(partial_ssq, axis=1))  # (n,)
+    ssq = jnp.sum(partial_ssq, axis=1)  # (n,)
+    if reduce_fn is not None:
+        ssq = reduce_fn(ssq)
+    return jnp.sqrt(ssq)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("trim_ratio", "bucket_s", "use_clip", "interpret"),
+    static_argnames=(
+        "trim_ratio", "bucket_s", "use_clip", "reduce_fn", "interpret"
+    ),
 )
 def clip_then_aggregate(
     xs,
     radius,
     mask=None,
     bucket_idx=None,
+    factors=None,
     *,
     trim_ratio: float = -1.0,
     bucket_s: int = 1,
     use_clip: bool = True,
+    reduce_fn=None,
     interpret: bool = False,
 ):
     """Fused Agg({clip_radius(x_i)}_{i in mask}) over the rows of (n, d).
@@ -119,6 +129,13 @@ def clip_then_aggregate(
     shared across all coordinate tiles) the clipped rows are bucket-averaged
     before the selection, reproducing Bucketing o CM/TM.  ``use_clip=False``
     skips the norm pass (plain kernel aggregation, factors = 1).
+    ``factors`` (n,) also skips the norm pass and applies the given
+    per-row scales instead — the sharded trainer precomputes them from
+    global per-worker tree norms (a chip-local block norm would be wrong).
+    ``reduce_fn`` (static) reduces the pass-1 row sums-of-squares across
+    coordinate shards (a psum inside shard_map) so clipping uses global
+    norms when ``xs`` is one shard of a wider row; CM/TM themselves are
+    coordinate-wise, so the selection needs no reduction.
 
     Returns ``(aggregated (d,), row_norms (n,) or None)``.
     """
@@ -131,8 +148,12 @@ def clip_then_aggregate(
     grid = dp // TILE_D
 
     if use_clip:
-        norms = _row_norms(xp, grid, n, interpret)
-        factors = clip_factor(norms, radius).astype(F32)
+        if factors is None:
+            norms = _row_norms(xp, grid, n, interpret, reduce_fn)
+            factors = clip_factor(norms, radius).astype(F32)
+        else:
+            norms = None
+            factors = factors.astype(F32)
     else:
         norms = None
         factors = jnp.ones((n,), F32)

@@ -1,0 +1,263 @@
+"""Pallas TPU kernel: Krum / multi-Krum via an MXU-tiled Gram matrix.
+
+Krum (Blanchard et al., 2017) scores every worker by the summed squared
+distance to its cnt-B-2 nearest sampled neighbours and returns the best row
+(multi-Krum: the average of the best-scored rows).  The only d-sized work
+in the O(n^2 d) pairwise distances is the (n, n) Gram matrix, because
+
+    ||x_i - x_j||^2 = ||x_i||^2 + ||x_j||^2 - 2 <x_i, x_j>,
+
+so the kernel computes G = X X^T as one MXU matmul per (n, TILE_D) VMEM
+block, accumulated tile-wise over the coordinate axis — a single HBM
+stream over the message matrix for ANY d (no large-d fallback).  The
+compositions the server step needs are Gram algebra, not extra streams:
+
+  clip at lambda   G_c = f f^T o G  with  f_i = min{1, lambda/||x_i||};
+                   row norms are sqrt(diag G) — pass 1 is free.
+  Bucketing        G_b = M G M^T    with  M the (nb, n) mask-weighted
+                   bucket-mean operator over the resident ``bucket_idx``
+                   row order (aggregators._bucketing semantics).
+
+Only the winner reconstruction touches xs again: one dynamic row gather
+(Krum) or one weighted row-sum (multi-Krum / bucketed winners).
+
+Distance masking / neighbour counting / tie-breaking live in the pure-jnp
+helpers below, which ``repro.core.aggregators`` imports for its jnp
+backend too, so EXACT ties (duplicate rows, mutual-nearest-neighbour
+symmetric ties — ``g_eff`` is kept exactly symmetric for this) resolve
+identically on both backends.  The Gram values themselves may differ in
+final ulps between the tile-accumulated kernel and jnp's single matmul
+for d > TILE_D, so two *distinct* scores separated by less than that
+noise could in principle rank differently — the cross-backend bitwise
+trajectory tests (tests/test_backend_trajectory.py) cover the regime the
+engine runs in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .centered_clip import _pad_bucket_aux
+from .clip_aggregate import clip_factor
+from .coordinate_median import TILE_D, _pad_to
+
+F32 = jnp.float32
+_BIG = 3.4e37
+
+
+# ---------------------------------------------------------------------------
+# selection helpers — the single source of truth shared with the jnp backend
+# ---------------------------------------------------------------------------
+
+def masked_pairwise_d2(gram, sq, mask_b):
+    """(n, n) squared distances from a Gram matrix; invalid pairs (either
+    endpoint unsampled, or the diagonal) pushed to +BIG."""
+    n = gram.shape[0]
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    d2 = jnp.maximum(d2, 0.0)
+    pair_ok = mask_b[:, None] & mask_b[None, :] & ~jnp.eye(n, dtype=bool)
+    return jnp.where(pair_ok, d2, _BIG)
+
+
+def krum_scores(d2, mask_b, byz_bound: Optional[int]):
+    """Krum score per row: sum of the cnt-B-2 smallest valid distances
+    (at least 1 neighbour); unsampled rows score +BIG."""
+    n = d2.shape[0]
+    cnt = jnp.sum(mask_b)
+    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
+    d2_sorted = jnp.sort(d2, axis=1)
+    csum = jnp.cumsum(jnp.where(d2_sorted >= _BIG, 0.0, d2_sorted), axis=1)
+    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
+    return jnp.where(mask_b, csum[:, k_nb - 1], _BIG)
+
+
+def multi_krum_selection(scores, mask_b, byz_bound: Optional[int],
+                         m_select: int):
+    """Boolean selection of the best-scored sampled rows; size defaults to
+    cnt - B - 2 (Damaskinos et al., 2019), clipped to [1, n]."""
+    n = scores.shape[0]
+    cnt = jnp.sum(mask_b)
+    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
+    m_sel = jnp.clip(
+        jnp.asarray(m_select, jnp.int32) if m_select else cnt - b - 2, 1, n
+    )
+    order = jnp.argsort(scores)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return (rank < m_sel) & mask_b
+
+
+# ---------------------------------------------------------------------------
+# the kernel: tile-accumulated Gram matrix
+# ---------------------------------------------------------------------------
+
+def _gram_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(F32)  # (n, td)
+    g = jnp.dot(x, x.T, preferred_element_type=F32)  # MXU (n, n)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = g
+
+    @pl.when(i > 0)
+    def _accumulate():
+        o_ref[...] = o_ref[...] + g
+
+
+def gram_matrix(xs, *, interpret: bool = False):
+    """(n, d) -> (n, n) f32 Gram matrix in one tiled streaming pass."""
+    n = xs.shape[0]
+    xp, _ = _pad_to(xs, TILE_D, axis=1)
+    grid = xp.shape[1] // TILE_D
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((n, TILE_D), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), F32),
+        interpret=interpret,
+    )(xp)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _bucket_operator(bucket_idx, mask_f, factors, n_p, s):
+    """The (nb, n_p) mask-weighted bucket-mean matrix M (clip factors
+    folded in) plus the per-bucket sampled counts."""
+    nb = n_p // s
+    idx_r = bucket_idx.reshape(nb, s)
+    memb = jax.nn.one_hot(idx_r, n_p, dtype=F32)  # (nb, s, n_p)
+    memb = memb * jnp.take(mask_f, idx_r)[:, :, None]
+    e = jnp.sum(memb, axis=1)  # (nb, n_p): membership * mask
+    cnt = jnp.sum(e, axis=1)  # (nb,)
+    m_op = e * factors[None, :] / jnp.maximum(cnt, 1.0)[:, None]
+    return m_op, cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "byz_bound", "m_select", "multi", "bucket_s", "use_clip",
+        "reduce_fn", "interpret"
+    ),
+)
+def clip_then_krum(
+    xs,
+    radius,
+    mask=None,
+    bucket_idx=None,
+    factors=None,
+    *,
+    byz_bound: Optional[int] = None,
+    m_select: int = 0,
+    multi: bool = False,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+    reduce_fn=None,
+    interpret: bool = False,
+):
+    """Fused Krum/multi-Krum over per-row l2-clipped messages.
+
+    One Gram streaming pass; clip factors (from diag G, or precomputed
+    ``factors``) and Bucketing are applied as (n, n) algebra.
+    ``reduce_fn`` (static) sums the (n, n) Gram across coordinate shards
+    (a psum inside shard_map): distances — and therefore the selection —
+    then match the full-vector semantics exactly even though each chip
+    only streams its own (n, d/W) block.  Returns
+    ``(aggregated (d,), row_norms (n,) or None)``; ``use_clip=False``
+    gives the plain aggregation (factors = 1, norms = None).
+    """
+    n, d = xs.shape
+    mask_b = (
+        jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    )
+    mask_f = mask_b.astype(F32)
+    gram = gram_matrix(xs, interpret=interpret)
+    if reduce_fn is not None:
+        gram = reduce_fn(gram)
+    norms = None
+    if use_clip:
+        if factors is None:
+            norms = jnp.sqrt(jnp.maximum(jnp.diagonal(gram), 0.0))
+            factors = clip_factor(norms, radius).astype(F32)
+        else:
+            factors = factors.astype(F32)
+    else:
+        factors = jnp.ones((n,), F32)
+
+    x32 = xs.astype(F32)
+    if bucket_s >= 2:
+        mask_f, factors, bucket_idx, pad_rows = _pad_bucket_aux(
+            mask_f, factors, bucket_idx, n, bucket_s
+        )
+        n_p = n + pad_rows
+        if pad_rows:
+            gram = jnp.pad(gram, ((0, pad_rows), (0, pad_rows)))
+        m_op, cnt = _bucket_operator(bucket_idx, mask_f, factors, n_p, bucket_s)
+        g_eff = m_op @ gram @ m_op.T  # Gram of clipped bucket means
+        # the fp triple product is not exactly symmetric; Krum's
+        # argmin-first tie-breaking on symmetric ties (mutual nearest
+        # neighbours) needs d2[i,j] == d2[j,i] exactly
+        g_eff = 0.5 * (g_eff + g_eff.T)
+        mask_eff = cnt > 0.5
+    else:
+        g_eff = gram * (factors[:, None] * factors[None, :])
+        mask_eff = mask_b
+
+    sq_eff = jnp.diagonal(g_eff)
+    d2 = masked_pairwise_d2(g_eff, sq_eff, mask_eff)
+    scores = krum_scores(d2, mask_eff, byz_bound)
+
+    if not multi:
+        winner = jnp.argmin(scores)
+        if bucket_s < 2:
+            out = (x32[winner] * factors[winner]).astype(xs.dtype)
+        else:
+            # reconstruct the winning bucket mean from its s raw rows
+            rows = jax.lax.dynamic_slice(
+                bucket_idx, (winner * bucket_s,), (bucket_s,)
+            )
+            w_r = jnp.take(mask_f, rows) * jnp.take(factors, rows)
+            w_r = w_r / jnp.maximum(cnt[winner], 1.0)
+            xr = jnp.take(x32, jnp.where(rows < n, rows, 0), axis=0)
+            out = jnp.sum(xr * w_r[:, None], axis=0).astype(xs.dtype)
+        return out, norms
+
+    sel = multi_krum_selection(scores, mask_eff, byz_bound, m_select)
+    w_sel = sel.astype(F32)
+    denom = jnp.maximum(jnp.sum(w_sel), 1.0)
+    if bucket_s < 2:
+        w_row = w_sel * factors
+    else:
+        # selected-bucket means as one weighted row-sum over the raw rows
+        w_row = (w_sel @ m_op)[:n]
+    out = (jnp.sum(x32 * w_row[:, None], axis=0) / denom).astype(xs.dtype)
+    return out, norms
+
+
+def krum(xs, mask=None, *, byz_bound: Optional[int] = None,
+         interpret: bool = False):
+    """(n, d) -> (d,) plain (unclipped) kernel-backed Krum."""
+    out, _ = clip_then_krum(
+        xs, 0.0, mask, byz_bound=byz_bound, use_clip=False,
+        interpret=interpret,
+    )
+    return out
+
+
+def multi_krum(xs, mask=None, *, byz_bound: Optional[int] = None,
+               m_select: int = 0, interpret: bool = False):
+    """(n, d) -> (d,) plain kernel-backed multi-Krum (mean of best rows)."""
+    out, _ = clip_then_krum(
+        xs, 0.0, mask, byz_bound=byz_bound, m_select=m_select, multi=True,
+        use_clip=False, interpret=interpret,
+    )
+    return out

@@ -9,12 +9,30 @@ Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
 
 - ``backend="jnp"``    — pure-jnp aggregation everywhere (the reference
   path; always available, used inside vmap/shard_map/pjit freely).
-- ``backend="pallas"`` — the (n, d) -> (d,) hot paths route through these
-  kernels: ``coordinate_median`` / ``trimmed_mean`` for the aggregation
-  itself and ``clip_then_aggregate`` for the fused server-side
-  clip -> aggregate of the difference rounds (2 instead of ~4 HBM streams
-  over the message matrix).  Rules without a kernel (krum, rfa, mean, ...)
-  silently keep the jnp implementation.
+- ``backend="pallas"`` — every registry rule is kernel-backed.  The
+  (aggregator x fused x sharded) coverage matrix:
+
+  =================  ==============  =====================  ============
+  rule               plain kernel    fused clip->aggregate  Bucketing
+  =================  ==============  =====================  ============
+  cm / trimmed_mean  selection net   2-stream 2-pass        resident
+                     (CM/TM tiles)   (clip_aggregate.py)    row-gather
+  mean               TM(t=0) tiles   same 2-stream kernel   row-gather
+  krum / multi_krum  MXU Gram tile   1 stream: factors =    Gram algebra
+                     (krum.py)       f(diag G), G_c=ff^T oG  M G M^T
+  centered_clip      resident or     factors in-register    in-register
+                     d-tiled iters   (no clipped matrix)    bucket means
+  rfa (Weiszfeld)    resident or     factors in-register    in-register
+                     d-tiled iters   (no clipped matrix)    bucket means
+  =================  ==============  =====================  ============
+
+  No rule silently falls back to jnp, and the iterative kernels no longer
+  fall back to the reference for large d — they switch to an explicit
+  coordinate-tiled schedule with a cross-tile norm reduction.  All fused
+  wrappers additionally accept precomputed per-row ``factors`` which skip
+  the norm pass: the sharded trainer (launch/train.py) clips by *global*
+  per-worker tree norms, which a chip-local block cannot compute, so it
+  passes factors into the per-chip fused kernel inside shard_map.
 - ``backend="auto"``   — picks ``pallas`` iff ``jax.default_backend()`` is
   TPU (where the tiling pays off), else ``jnp``.  On CPU the pallas choice
   still *works* (interpret mode) and is what the equivalence tests use.
@@ -33,9 +51,15 @@ import jax
 from . import ref  # noqa: F401  (re-exported for convenience)
 from .bucketing import bucketed_coordinate_median as _bucketed_cm
 from .centered_clip import centered_clip as _centered_clip
+from .centered_clip import clip_then_centered_clip as _clip_then_cclip
 from .clip_aggregate import clip_then_aggregate as _clip_then_aggregate
 from .clipped_diff import clipped_diff as _clipped_diff
 from .coordinate_median import coordinate_median as _coordinate_median
+from .geometric_median import clip_then_geometric_median as _clip_then_gm
+from .geometric_median import geometric_median as _geometric_median
+from .krum import clip_then_krum as _clip_then_krum
+from .krum import krum as _krum
+from .krum import multi_krum as _multi_krum
 
 __all__ = [
     "coordinate_median",
@@ -43,6 +67,12 @@ __all__ = [
     "clipped_diff",
     "clip_then_aggregate",
     "centered_clip",
+    "clip_then_centered_clip",
+    "geometric_median",
+    "clip_then_geometric_median",
+    "krum",
+    "multi_krum",
+    "clip_then_krum",
     "bucketed_coordinate_median",
     "ref",
 ]
@@ -78,22 +108,29 @@ def clip_then_aggregate(
     radius,
     mask=None,
     bucket_idx=None,
+    factors=None,
     *,
     trim_ratio: float = -1.0,
     bucket_s: int = 1,
     use_clip: bool = True,
+    reduce_fn=None,
 ):
     """Fused per-row clip at ``radius`` -> masked CM/TM (optionally over
-    ``bucket_s``-buckets in the ``bucket_idx`` row order).  Returns
+    ``bucket_s``-buckets in the ``bucket_idx`` row order).  ``factors``
+    skips the norm pass and applies the given per-row scales; ``reduce_fn``
+    makes the pass-1 norms global across coordinate shards (see the
+    backend contract above).  Returns
     (aggregated (d,), row_norms (n,) or None)."""
     return _clip_then_aggregate(
         xs,
         radius,
         mask,
         bucket_idx,
+        factors,
         trim_ratio=trim_ratio,
         bucket_s=bucket_s,
         use_clip=use_clip,
+        reduce_fn=reduce_fn,
         interpret=_interpret(),
     )
 
@@ -101,6 +138,116 @@ def clip_then_aggregate(
 def centered_clip(xs, mask=None, *, tau: float = 10.0, iters: int = 5):
     return _centered_clip(
         xs, mask, tau=tau, iters=iters, interpret=_interpret()
+    )
+
+
+def clip_then_centered_clip(
+    xs,
+    radius,
+    mask=None,
+    bucket_idx=None,
+    factors=None,
+    *,
+    tau: float = 10.0,
+    iters: int = 5,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+    reduce_fn=None,
+):
+    """Fused clip -> (Bucketing) -> CenteredClip.  Returns
+    (aggregated (d,), row_norms (n,) or None)."""
+    return _clip_then_cclip(
+        xs,
+        radius,
+        mask,
+        bucket_idx,
+        factors,
+        tau=tau,
+        iters=iters,
+        bucket_s=bucket_s,
+        use_clip=use_clip,
+        reduce_fn=reduce_fn,
+        interpret=_interpret(),
+    )
+
+
+def geometric_median(xs, mask=None, *, iters: int = 8, eps: float = 1e-8):
+    return _geometric_median(
+        xs, mask, iters=iters, eps=eps, interpret=_interpret()
+    )
+
+
+def clip_then_geometric_median(
+    xs,
+    radius,
+    mask=None,
+    bucket_idx=None,
+    factors=None,
+    *,
+    iters: int = 8,
+    eps: float = 1e-8,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+    reduce_fn=None,
+):
+    """Fused clip -> (Bucketing) -> Weiszfeld geometric median.  Returns
+    (aggregated (d,), row_norms (n,) or None)."""
+    return _clip_then_gm(
+        xs,
+        radius,
+        mask,
+        bucket_idx,
+        factors,
+        iters=iters,
+        eps=eps,
+        bucket_s=bucket_s,
+        use_clip=use_clip,
+        reduce_fn=reduce_fn,
+        interpret=_interpret(),
+    )
+
+
+def krum(xs, mask=None, *, byz_bound: Optional[int] = None):
+    return _krum(xs, mask, byz_bound=byz_bound, interpret=_interpret())
+
+
+def multi_krum(xs, mask=None, *, byz_bound: Optional[int] = None,
+               m_select: int = 0):
+    return _multi_krum(
+        xs, mask, byz_bound=byz_bound, m_select=m_select,
+        interpret=_interpret(),
+    )
+
+
+def clip_then_krum(
+    xs,
+    radius,
+    mask=None,
+    bucket_idx=None,
+    factors=None,
+    *,
+    byz_bound: Optional[int] = None,
+    m_select: int = 0,
+    multi: bool = False,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+    reduce_fn=None,
+):
+    """Fused clip -> (Bucketing) -> Krum / multi-Krum via one Gram stream.
+    Returns (aggregated (d,), row_norms (n,) or None)."""
+    return _clip_then_krum(
+        xs,
+        radius,
+        mask,
+        bucket_idx,
+        factors,
+        byz_bound=byz_bound,
+        m_select=m_select,
+        multi=multi,
+        bucket_s=bucket_s,
+        use_clip=use_clip,
+        reduce_fn=reduce_fn,
+        interpret=_interpret(),
     )
 
 

@@ -67,6 +67,47 @@ def centered_clip_ref(xs, tau, iters, mask=None):
     return jax.lax.fori_loop(0, iters, body, v).astype(xs.dtype)
 
 
+def _clip_rows_ref(xs, radius, mask):
+    """Shared oracle front half: per-row clip -> (clipped, norms)."""
+    x32 = xs.astype(F32)
+    norms = jnp.sqrt(jnp.sum(x32 * x32, axis=1))
+    factors = jnp.minimum(1.0, radius / jnp.maximum(norms, 1e-30))
+    return (x32 * factors[:, None]).astype(xs.dtype), norms
+
+
+def _bucket_means_ref(vals, mask, bucket_idx, s):
+    """Explicit-order mask-weighted bucket means (aggregators._bucketing
+    semantics: empty buckets masked out).  Returns (means, bucket_mask)."""
+    n = vals.shape[0]
+    if bucket_idx is None:
+        bucket_idx = jnp.arange(n, dtype=jnp.int32)
+    m = mask.astype(F32)
+    xp = jnp.take(vals.astype(F32), bucket_idx, axis=0)
+    mp = jnp.take(m, bucket_idx, axis=0)
+    pad = (-n) % s
+    if pad:
+        xp = jnp.pad(xp, ((0, pad), (0, 0)))
+        mp = jnp.pad(mp, (0, pad))
+    nb = xp.shape[0] // s
+    xb = xp.reshape(nb, s, -1)
+    mb = mp.reshape(nb, s, 1)
+    cnt = jnp.sum(mb, axis=1)
+    means = jnp.sum(xb * mb, axis=1) / jnp.maximum(cnt, 1.0)
+    return means.astype(vals.dtype), cnt[:, 0] > 0.5
+
+
+def _clip_bucket_then_ref(inner, xs, radius, mask, bucket_idx, bucket_s):
+    """clip rows -> optional Bucketing -> ``inner(vals, mask)`` oracle."""
+    n = xs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    clipped, norms = _clip_rows_ref(xs, radius, mask)
+    if bucket_s < 2:
+        return inner(clipped, mask), norms
+    means, bucket_ok = _bucket_means_ref(clipped, mask, bucket_idx, bucket_s)
+    return inner(means, bucket_ok), norms
+
+
 def clip_then_aggregate_ref(
     xs, radius, mask=None, bucket_idx=None, *, trim_ratio=-1.0, bucket_s=1
 ):
@@ -78,37 +119,115 @@ def clip_then_aggregate_ref(
     masked out — the aggregators._bucketing semantics).
     Returns (aggregated (d,), row_norms (n,)).
     """
-    n = xs.shape[0]
-    if mask is None:
-        mask = jnp.ones((n,), bool)
-    x32 = xs.astype(F32)
-    norms = jnp.sqrt(jnp.sum(x32 * x32, axis=1))
-    factors = jnp.minimum(1.0, radius / jnp.maximum(norms, 1e-30))
-    clipped = (x32 * factors[:, None]).astype(xs.dtype)
 
     def inner(vals, m):
         if trim_ratio < 0:
             return coordinate_median_ref(vals, m)
         return trimmed_mean_ref(vals, m, trim_ratio=trim_ratio)
 
-    if bucket_s < 2:
-        return inner(clipped, mask), norms
+    return _clip_bucket_then_ref(inner, xs, radius, mask, bucket_idx, bucket_s)
 
-    if bucket_idx is None:
-        bucket_idx = jnp.arange(n, dtype=jnp.int32)
+
+def geometric_median_ref(xs, iters=8, eps=1e-8, mask=None):
+    """Smoothed Weiszfeld fixed point (repro.core semantics: eps inside the
+    sqrt, eps-guarded weight sum)."""
+    if mask is None:
+        mask = jnp.ones((xs.shape[0],), bool)
     m = mask.astype(F32)
-    xp = jnp.take(clipped.astype(F32), bucket_idx, axis=0)
-    mp = jnp.take(m, bucket_idx, axis=0)
-    pad = (-n) % bucket_s
-    if pad:
-        xp = jnp.pad(xp, ((0, pad), (0, 0)))
-        mp = jnp.pad(mp, (0, pad))
-    nb = xp.shape[0] // bucket_s
-    xb = xp.reshape(nb, bucket_s, -1)
-    mb = mp.reshape(nb, bucket_s, 1)
-    cnt = jnp.sum(mb, axis=1)
-    means = jnp.sum(xb * mb, axis=1) / jnp.maximum(cnt, 1.0)
-    return inner(means.astype(xs.dtype), cnt[:, 0] > 0.5), norms
+    x32 = xs.astype(F32)
+    z = jnp.sum(x32 * m[:, None], axis=0) / jnp.maximum(jnp.sum(m), 1.0)
+
+    def body(_, z):
+        dist = jnp.sqrt(jnp.sum((x32 - z[None]) ** 2, axis=1) + eps)
+        w = m / dist
+        return jnp.sum(x32 * w[:, None], axis=0) / jnp.maximum(
+            jnp.sum(w), eps
+        )
+
+    return jax.lax.fori_loop(0, iters, body, z).astype(xs.dtype)
+
+
+def _krum_scores_ref(xs, mask, byz_bound):
+    """Krum scores via EXPLICIT pairwise distances — deliberately
+    independent of the Gram decomposition and shared selection helpers
+    the kernels use, so it can serve as their oracle.  Returns
+    (scores, bool mask)."""
+    n = xs.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    m = mask.astype(bool)
+    big = jnp.asarray(3.4e37, F32)
+    x32 = xs.astype(F32)
+    d2 = jnp.sum((x32[:, None, :] - x32[None, :, :]) ** 2, axis=-1)
+    pair_ok = m[:, None] & m[None, :] & ~jnp.eye(n, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, big)
+    cnt = jnp.sum(m)
+    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
+    d2_sorted = jnp.sort(d2, axis=1)
+    csum = jnp.cumsum(jnp.where(d2_sorted >= big, 0.0, d2_sorted), axis=1)
+    k_nb = jnp.clip(cnt - b - 2, 1, n - 1)
+    return jnp.where(m, csum[:, k_nb - 1], big), m
+
+
+def krum_ref(xs, mask=None, byz_bound=None):
+    """Krum (Blanchard et al., 2017): the row minimizing the summed squared
+    distance to its cnt-B-2 nearest sampled neighbours."""
+    scores, _ = _krum_scores_ref(xs, mask, byz_bound)
+    return xs[jnp.argmin(scores)]
+
+
+def multi_krum_ref(xs, mask=None, byz_bound=None, m_select=0):
+    """Multi-Krum: the average of the best-Krum-scored sampled rows."""
+    n = xs.shape[0]
+    scores, m = _krum_scores_ref(xs, mask, byz_bound)
+    cnt = jnp.sum(m)
+    b = jnp.asarray(byz_bound if byz_bound is not None else 0, jnp.int32)
+    m_sel = jnp.clip(
+        jnp.asarray(m_select, jnp.int32) if m_select else cnt - b - 2, 1, n
+    )
+    order = jnp.argsort(scores)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    w = ((rank < m_sel) & m).astype(F32)
+    return (
+        jnp.sum(xs.astype(F32) * w[:, None], axis=0)
+        / jnp.maximum(jnp.sum(w), 1.0)
+    ).astype(xs.dtype)
+
+
+def clip_then_centered_clip_ref(
+    xs, radius, mask=None, bucket_idx=None, *, tau=10.0, iters=5, bucket_s=1
+):
+    """Oracle for the fused clip -> (Bucketing) -> CenteredClip kernel."""
+    return _clip_bucket_then_ref(
+        lambda vals, m: centered_clip_ref(vals, tau, iters, mask=m),
+        xs, radius, mask, bucket_idx, bucket_s,
+    )
+
+
+def clip_then_geometric_median_ref(
+    xs, radius, mask=None, bucket_idx=None, *, iters=8, eps=1e-8, bucket_s=1
+):
+    """Oracle for the fused clip -> (Bucketing) -> Weiszfeld GM kernel."""
+    return _clip_bucket_then_ref(
+        lambda vals, m: geometric_median_ref(vals, iters, eps, mask=m),
+        xs, radius, mask, bucket_idx, bucket_s,
+    )
+
+
+def clip_then_krum_ref(
+    xs, radius, mask=None, bucket_idx=None, *, byz_bound=None, m_select=0,
+    multi=False, bucket_s=1
+):
+    """Oracle for the fused clip -> (Bucketing) -> Krum/multi-Krum kernel."""
+
+    def inner(vals, m):
+        if multi:
+            return multi_krum_ref(vals, m, byz_bound, m_select)
+        return krum_ref(vals, m, byz_bound)
+
+    return _clip_bucket_then_ref(inner, xs, radius, mask, bucket_idx, bucket_s)
 
 
 def bucketed_cm_ref(xs, perm, mask=None, s=2):

@@ -14,18 +14,30 @@ aggregated ACROSS the worker axes with one of two collective schedules:
              coordinates, aggregate locally, all_gather the result.
              Collective bytes per chip ~ 2 * |shard|; peak memory W× lower.
 
-Both schedules compute the identical (delta, c)-robust aggregation.
+Both schedules compute the identical (delta, c)-robust aggregation for
+the WHOLE aggregator registry: coordinate-wise rules shard trivially, and
+the non-coordinate-wise ones (krum, centered-clip, Weiszfeld GM) get
+their global row statistics via a per-leaf psum hook (``reduce_fn``)
+threaded into the per-chip aggregation.  The server-side clip (Alg.1
+l.10) is fused into the aggregation: ``robust_aggregate(radius=...)``
+computes per-worker global tree norms in one batched pass and the
+per-chip ``Aggregator.clip_then_aggregate`` applies the factors
+in-register (2 HBM streams instead of ~4; with ``cfg.backend="pallas"``
+the per-chip step is the fused Pallas kernel on the all_to_all's
+(W, d/W) block).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.aggregators import make_aggregator
+from repro.core.clipping import clip_factor
 from repro.core.tree_utils import tree_norm
 from repro.models.model import ModelConfig, apply_train, init_params
 from repro.sharding import constraints as cons
@@ -46,9 +58,17 @@ class ByzTrainConfig:
     C: int = 0  # sampled cohort size (0 => all workers)
     clip_alpha: float = 2.0  # lambda = clip_alpha * ||x+ - x||
     use_clipping: bool = True
-    aggregator: str = "cm"  # "cm" | "tm" | "bucket_cm" | "cclip" | "mean"
+    # any core-registry rule: "cm" | "tm" | "mean" | "cclip" | "rfa" |
+    # "krum" | "multi_krum", optionally "bucket_"-prefixed ("bucket_cm",
+    # "bucket_krum", ...) for the Bucketing composition with bucket_s
+    aggregator: str = "cm"
     trim_ratio: float = 0.25
     bucket_s: int = 2
+    # aggregation backend: "jnp" | "pallas" | "auto" (pallas iff on TPU).
+    # Threads through _make_leaf_agg into the per-chip aggregation of both
+    # collective schedules; the sharded schedule then runs the fused
+    # clip->aggregate kernel on its chip-local (W, d/W) block.
+    backend: str = "auto"
     agg_schedule: str = "sharded"  # "naive" | "sharded"
     attack: str = "bf"  # "none" | "bf" | "gauss"
     compress_frac: float = 0.0  # leafwise RandK fraction (0 = off)
@@ -73,102 +93,123 @@ class MeshTrainState(NamedTuple):
 # masked aggregation over the worker axis (axis 0 of every leaf)
 # ---------------------------------------------------------------------------
 
-def _bcast_mask(mask, leaf):
-    return mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
-
-
-def _masked_cm_axis0(leaf, mask):
-    W = leaf.shape[0]
-    vals = jnp.where(_bcast_mask(mask, leaf), leaf.astype(F32), _BIG)
-    s = jnp.sort(vals, axis=0)
-    cnt = jnp.sum(mask.astype(jnp.int32))
-    lo = jnp.take(s, (cnt - 1) // 2, axis=0)
-    hi = jnp.take(s, cnt // 2, axis=0)
-    return (0.5 * (lo + hi)).astype(leaf.dtype)
-
-
-def _masked_tm_axis0(leaf, mask, trim_ratio):
-    W = leaf.shape[0]
-    vals = jnp.where(_bcast_mask(mask, leaf), leaf.astype(F32), _BIG)
-    s = jnp.sort(vals, axis=0)
-    cnt = jnp.sum(mask.astype(jnp.int32))
-    t = jnp.minimum(jnp.ceil(trim_ratio * cnt).astype(jnp.int32), (cnt - 1) // 2)
-    idx = jnp.arange(W).reshape((W,) + (1,) * (leaf.ndim - 1))
-    keep = (idx >= t) & (idx < cnt - t)
-    denom = jnp.maximum(cnt - 2 * t, 1).astype(F32)
-    return (jnp.sum(jnp.where(keep, s, 0.0), axis=0) / denom).astype(leaf.dtype)
-
-
-def _masked_mean_axis0(leaf, mask):
-    m = _bcast_mask(mask, leaf).astype(F32)
-    denom = jnp.maximum(jnp.sum(mask.astype(F32)), 1.0)
-    return (jnp.sum(leaf.astype(F32) * m, axis=0) / denom).astype(leaf.dtype)
-
-
-def _bucketed_cm_axis0(leaf, mask, key, s):
-    """Bucketing o CM over the worker axis (mask-weighted bucket means)."""
-    W = leaf.shape[0]
-    perm = jax.random.permutation(key, W)
-    lp = jnp.take(leaf, perm, axis=0)
-    mp = jnp.take(mask, perm, axis=0)
-    nb = -(-W // s)
-    pad = nb * s - W
-    if pad:
-        lp = jnp.concatenate([lp, jnp.zeros_like(lp[:pad])], axis=0)
-        mp = jnp.concatenate([mp, jnp.zeros_like(mp[:pad])], axis=0)
-    lb = lp.reshape((nb, s) + lp.shape[1:]).astype(F32)
-    mb = mp.reshape(nb, s).astype(F32)
-    cnt = jnp.sum(mb, axis=1)
-    mbb = mb.reshape((nb, s) + (1,) * (leaf.ndim - 1))
-    means = jnp.sum(lb * mbb, axis=1) / jnp.maximum(cnt, 1.0).reshape(
-        (nb,) + (1,) * (leaf.ndim - 1)
-    )
-    return _masked_cm_axis0(means.astype(leaf.dtype), cnt > 0)
-
-
-def _masked_cclip_axis0(leaf, mask, tau=10.0, iters=5):
-    """CenteredClip over the worker axis (leaf flattened locally)."""
-    W = leaf.shape[0]
-    flat = leaf.reshape(W, -1).astype(F32)
-    m = mask.astype(F32)
-    denom = jnp.maximum(jnp.sum(m), 1.0)
-    v0 = jnp.sum(flat * m[:, None], axis=0) / denom
-
-    def body(_, v):
-        diff = flat - v[None]
-        nrm = jnp.sqrt(jnp.sum(diff * diff, axis=1) + 1e-30)
-        scale = jnp.minimum(1.0, tau / nrm) * m
-        return v + jnp.sum(diff * scale[:, None], axis=0) / denom
-
-    v = jax.lax.fori_loop(0, iters, body, v0)
-    return v.reshape(leaf.shape[1:]).astype(leaf.dtype)
+# mesh-config name -> core-registry name (legacy spellings kept)
+_AGG_NAMES = {
+    "cm": "cm",
+    "tm": "trimmed_mean",
+    "mean": "mean",
+    "cclip": "centered_clip",
+    "rfa": "rfa",
+    "gm": "rfa",
+    "krum": "krum",
+    "multi_krum": "multi_krum",
+}
 
 
 def _make_leaf_agg(cfg: ByzTrainConfig):
-    if cfg.aggregator == "cclip":
-        return lambda leaf, mask, key: _masked_cclip_axis0(leaf, mask)
-    if cfg.aggregator == "cm":
-        return lambda leaf, mask, key: _masked_cm_axis0(leaf, mask)
-    if cfg.aggregator == "tm":
-        return lambda leaf, mask, key: _masked_tm_axis0(leaf, mask, cfg.trim_ratio)
-    if cfg.aggregator == "mean":
-        return lambda leaf, mask, key: _masked_mean_axis0(leaf, mask)
-    if cfg.aggregator == "bucket_cm":
-        return lambda leaf, mask, key: _bucketed_cm_axis0(leaf, mask, key, cfg.bucket_s)
-    raise ValueError(f"unknown mesh aggregator {cfg.aggregator!r}")
+    """Per-chip aggregation over the worker axis, built on the core
+    dispatch layer so every registry rule (and the pallas kernels, under
+    ``cfg.backend``) is available on the mesh.
+
+    The returned ``leaf_agg(leaf, mask, key, factors=None)`` flattens the
+    (W, ...) leaf to the kernels' (n, d) shape; with ``factors`` it routes
+    through ``Aggregator.clip_then_aggregate`` — the fused server step —
+    instead of clip-then-plain-aggregate (no clipped matrix in HBM).
+
+    NOTE the mesh trainer aggregates LEAFWISE (one rule application per
+    parameter tensor, both schedules — longstanding design: the stacked
+    whole-model message never exists as one (W, d) buffer at scale).
+    For selection rules (krum/multi_krum) this means the winner is chosen
+    per leaf, a per-tensor-robust estimator that differs from the
+    simulation engine's whole-message Krum (which ravels the tree); clip
+    factors, by contrast, are whole-tree-global, matching Algorithm 1.
+    Whole-tree selection via cross-leaf Gram accumulation is a ROADMAP
+    item.
+    """
+    name = cfg.aggregator
+    bucket_s = 0
+    if name.startswith("bucket_"):
+        name = name[len("bucket_"):]
+        bucket_s = cfg.bucket_s
+    if name not in _AGG_NAMES:
+        raise ValueError(
+            f"unknown mesh aggregator {cfg.aggregator!r}; have "
+            f"{sorted(_AGG_NAMES)} (optionally 'bucket_'-prefixed)"
+        )
+    name = _AGG_NAMES[name]
+    kwargs = {}
+    if name == "trimmed_mean":
+        kwargs["trim_ratio"] = cfg.trim_ratio
+    if name in ("krum", "multi_krum"):
+        kwargs["byz_bound"] = cfg.n_byz
+    agg = make_aggregator(
+        name, bucket_s=bucket_s, backend=cfg.backend, **kwargs
+    )
+
+    def leaf_agg(leaf, mask, key, factors=None, reduce_fn=None):
+        mat = leaf.reshape(leaf.shape[0], -1)
+        if factors is None:
+            out = agg(mat, mask=mask, key=key, reduce_fn=reduce_fn)
+        else:
+            out = agg.clip_then_aggregate(
+                mat, _BIG, mask=mask, key=key, factors=factors,
+                reduce_fn=reduce_fn,
+            )
+        return out.reshape(leaf.shape[1:])
+
+    return leaf_agg
+
+
+def _spec_axes(spec):
+    """Mesh axes a PartitionSpec shards over (flattened)."""
+    axes = []
+    for entry in spec:
+        if isinstance(entry, (tuple, list)):
+            axes.extend(a for a in entry if a is not None)
+        elif entry is not None:
+            axes.append(entry)
+    return tuple(axes)
+
+
+@lru_cache(maxsize=None)
+def _psum_reduce(axis_names: tuple):
+    """One partial per axes tuple: ``reduce_fn`` is a *static* jit arg of
+    the kernel wrappers and partials hash by identity, so a fresh partial
+    per leaf/trace would defeat their jit caches (per-leaf re-lowering
+    and unbounded cache growth)."""
+    return partial(jax.lax.psum, axis_name=axis_names)
+
+
+def _worker_message_norms(tree_w):
+    """Per-worker *global* message norms (worker axis 0): the tree_norm
+    each worker's whole message would report, batched — single source of
+    truth with the lam = alpha*gamma*tree_norm(g) radius."""
+    return jax.vmap(tree_norm)(tree_w)
 
 
 def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
-                     base_specs=None):
+                     base_specs=None, radius=None):
     """Aggregate a worker-stacked pytree (leaves (W, ...)) into the
     aggregated pytree (leaves (...)) with the configured schedule.
+
+    ``radius``: when set, every worker message is l2-clipped at ``radius``
+    by its *global* tree norm before aggregation — the Algorithm-1 server
+    re-clip, as a 2-stream fused step: one batched norm reduction over the
+    stacked tree (pass 1), then per-chip ``Aggregator.clip_then_aggregate``
+    with the precomputed factors applied in-register during the
+    aggregation read (pass 2).  The clipped message tree is never
+    materialized, unlike the former clip-tree-then-aggregate path (~4
+    streams).
 
     ``base_specs``: PartitionSpec pytree of the UNSTACKED leaves (the grad
     sharding).  The sharded schedule runs a fully-manual shard_map matching
     the exact grad sharding so the in-kernel flatten is chip-local —
     flattening a model-sharded dim under auto propagation silently
     all-gathers it (found and fixed during §Perf pair (a): the naive
-    schedule was beating the "optimized" one before this).
+    schedule was beating the "optimized" one before this).  The
+    all_to_all lands a chip-local (W, d/W) block on every chip — exactly
+    the fused kernel's input shape, so with ``backend="pallas"`` the mesh
+    trainer gets the same 2-stream server step as the simulation engine.
     """
     leaf_agg = _make_leaf_agg(cfg)
     waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
@@ -176,8 +217,20 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     for a in waxes:
         W *= mesh.shape[a]
 
+    n_rows = jax.tree_util.tree_leaves(tree_w)[0].shape[0]
+    use_factors = radius is not None
+    if use_factors:
+        factors = clip_factor(_worker_message_norms(tree_w), radius).astype(F32)
+    else:
+        factors = jnp.ones((n_rows,), F32)
+
     if cfg.agg_schedule == "naive" or not waxes:
-        return jax.tree_util.tree_map(lambda l: leaf_agg(l, mask, key), tree_w)
+        return jax.tree_util.tree_map(
+            lambda l: leaf_agg(
+                l, mask, key, factors=factors if use_factors else None
+            ),
+            tree_w,
+        )
 
     wspec = waxes if len(waxes) > 1 else waxes[0]
     if base_specs is None:
@@ -188,7 +241,7 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         lambda s: P(wspec, *s), base_specs, is_leaf=lambda x: isinstance(x, P)
     )
 
-    def inner(leaf, mask_in, key_in):
+    def inner(leaf, mask_in, key_in, factors_in, spec):
         # fully-manual: leaf is the true per-chip block (1, local dims...)
         x = leaf[0]
         shape = x.shape
@@ -202,7 +255,19 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
             sw = sw.reshape(n_ax, -1, sw.shape[-1])
             sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
             sw = sw.reshape(-1, sw.shape[-1])
-        agg = leaf_agg(sw, mask_in, key_in)  # (flat/W,)
+        # (W, local/W) block: the fused kernel's exact input shape.  This
+        # leaf's coordinates are spread over the worker axes (the chunks)
+        # plus whatever axes its grad spec shards — a psum over exactly
+        # those gives the non-coordinate-wise rules (krum/gm/cclip) their
+        # global row statistics, making the sharded schedule equal to the
+        # naive full-vector semantics for the whole registry.
+        stat_axes = tuple(waxes) + _spec_axes(spec)
+        reduce_fn = _psum_reduce(stat_axes)
+        agg = leaf_agg(
+            sw, mask_in, key_in,
+            factors=factors_in if use_factors else None,
+            reduce_fn=reduce_fn,
+        )  # (flat/W,)
         out = agg
         for ax in reversed(waxes):
             out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
@@ -223,14 +288,24 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     all_axes = referenced | (
         {"model"} if "model" in mesh.axis_names else set()
     )
+    def body(t, m, k, f):
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        spec_leaves = jax.tree_util.tree_leaves(
+            base_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        outs = [
+            inner(l, m, k, f, sp) for l, sp in zip(leaves, spec_leaves)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
     smapped = _shard_map(
-        lambda t, m, k: jax.tree_util.tree_map(lambda l: inner(l, m, k), t),
+        body,
         mesh=mesh,
-        in_specs=(in_specs, P(), P()),
+        in_specs=(in_specs, P(), P(), P()),
         out_specs=base_specs,
         axis_names=all_axes,
     )
-    return smapped(tree_w, mask, key)
+    return smapped(tree_w, mask, key, factors)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, axis_names):
@@ -268,12 +343,6 @@ def _leafwise_randk(key, tree, frac):
         mask = (scores >= thresh).reshape(leaf.shape)
         out.append(leaf * mask.astype(leaf.dtype) * jnp.asarray(d / kk, leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def _clip_tree_by(tree, radius):
-    norm = tree_norm(tree)
-    factor = jnp.minimum(1.0, radius / jnp.maximum(norm, 1e-30))
-    return jax.tree_util.tree_map(lambda l: (l * factor).astype(l.dtype), tree)
 
 
 def _attack_payload(cfg: ByzTrainConfig, key, honest_tree):
@@ -406,15 +475,19 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
                 if cfg.compress_frac > 0.0:
                     d_i = _leafwise_randk(mk, d_i, cfg.compress_frac)
                 payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), d_i)
-                d_i = jax.tree_util.tree_map(
+                return jax.tree_util.tree_map(
                     lambda h, a: jnp.where(byz[i], a, h), d_i, payload
                 )
-                return _clip_tree_by(d_i, lam)  # server-side clip (Alg.1 l.10)
 
             msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), diff)
             msgs = grad_constraint(msgs)
+            # server-side clip (Alg.1 l.10) fused into the aggregation:
+            # one batched norm pass + factors applied in-register by the
+            # per-chip clip_then_aggregate, never materializing the
+            # clipped message tree
             agg = robust_aggregate(msgs, sampled, k_agg, mesh=mesh, cfg=cfg,
-                                   base_specs=base_specs_of(msgs))
+                                   base_specs=base_specs_of(msgs),
+                                   radius=lam if cfg.use_clipping else None)
             return jax.tree_util.tree_map(
                 lambda g, a: (g.astype(F32) + a.astype(F32)).astype(g.dtype),
                 state.g,
@@ -493,6 +566,9 @@ def main():
     ap.add_argument("--attack", default="bf")
     ap.add_argument("--aggregator", default="cm")
     ap.add_argument("--agg-schedule", default="sharded")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="aggregation backend (auto = pallas iff on TPU)")
     ap.add_argument("--shard-mode", default="tp")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
@@ -511,7 +587,7 @@ def main():
     tc = ByzTrainConfig(
         gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
         aggregator=args.aggregator, agg_schedule=args.agg_schedule,
-        shard_mode=args.shard_mode,
+        shard_mode=args.shard_mode, backend=args.backend,
     )
     W = num_workers(mesh)
     print(f"[train] {model_cfg.name} on mesh {dict(mesh.shape)} "

@@ -207,21 +207,24 @@ def test_backend_auto_resolves_to_jnp_on_cpu():
 @pytest.mark.parametrize("name,kw", [
     ("cm", {}), ("trimmed_mean", {}),
     ("trimmed_mean", {"trim_ratio": 0.2}), ("centered_clip", {}),
+    ("mean", {}), ("rfa", {}), ("krum", {"byz_bound": 2}),
+    ("multi_krum", {"byz_bound": 2}), ("multi_krum", {"m_select": 4}),
 ])
 @pytest.mark.parametrize("bucket_s", [0, 2])
 @pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
 def test_backend_pallas_matches_jnp(name, kw, bucket_s, masked):
     """The pallas backend must reproduce the jnp rules exactly (same
-    bucketing permutation semantics, same median tie handling) — this is
-    what makes a backend swap trajectory-preserving."""
-    if name == "centered_clip" and bucket_s:
-        pytest.skip("bucketed centered-clip has no kernel (jnp fallback)")
+    bucketing permutation semantics, same median/Krum tie handling) —
+    this is what makes a backend swap trajectory-preserving.  Every
+    registry rule is kernel-backed (no silent jnp fallbacks)."""
     rng = np.random.RandomState(11)
     xs = jnp.asarray(rng.randn(13, 257).astype(np.float32))
     mask = jnp.asarray(rng.rand(13) > 0.3) if masked else None
     key = jax.random.PRNGKey(4)
     aj = make_aggregator(name, bucket_s=bucket_s, backend="jnp", **kw)
     ap = make_aggregator(name, bucket_s=bucket_s, backend="pallas", **kw)
+    assert aj.backend == "jnp" and ap.backend == "pallas"
+    assert ap.fused_clip_fn is not None  # fused server step everywhere
     np.testing.assert_allclose(
         np.asarray(aj(xs, mask=mask, key=key)),
         np.asarray(ap(xs, mask=mask, key=key)),
@@ -230,6 +233,17 @@ def test_backend_pallas_matches_jnp(name, kw, bucket_s, masked):
     np.testing.assert_allclose(
         np.asarray(aj.clip_then_aggregate(xs, 1.3, mask=mask, key=key)),
         np.asarray(ap.clip_then_aggregate(xs, 1.3, mask=mask, key=key)),
+        atol=2e-5,
+    )
+    # precomputed-factors form (the sharded trainer's entry point)
+    factors = jnp.asarray(rng.rand(13).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(
+            aj.clip_then_aggregate(xs, 0.0, mask=mask, key=key, factors=factors)
+        ),
+        np.asarray(
+            ap.clip_then_aggregate(xs, 0.0, mask=mask, key=key, factors=factors)
+        ),
         atol=2e-5,
     )
 

@@ -13,13 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.train import (
-    ByzTrainConfig,
-    _bucketed_cm_axis0,
-    _masked_cm_axis0,
-    _masked_mean_axis0,
-    _masked_tm_axis0,
-)
+from repro.launch.train import ByzTrainConfig, _make_leaf_agg
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(
@@ -31,50 +25,77 @@ ENV = dict(
 
 
 # ---------------------------------------------------------------------------
-# leaf-aggregation semantics (in process)
+# leaf-aggregation semantics (in process) — _make_leaf_agg routes through
+# the core dispatch layer, so these pin the mesh-trainer-visible behavior
 # ---------------------------------------------------------------------------
 
-def test_masked_cm_axis0_matches_numpy_any_rank():
+def _leaf_agg(name, backend="jnp", **cfg_kw):
+    return _make_leaf_agg(
+        ByzTrainConfig(aggregator=name, backend=backend, **cfg_kw)
+    )
+
+
+def test_leaf_agg_cm_matches_numpy_any_rank():
     rng = np.random.RandomState(0)
     leaf = rng.randn(9, 3, 4).astype(np.float32)
     mask = np.array([1, 1, 0, 1, 0, 1, 1, 0, 1], bool)
-    out = _masked_cm_axis0(jnp.asarray(leaf), jnp.asarray(mask))
+    out = _leaf_agg("cm")(
+        jnp.asarray(leaf), jnp.asarray(mask), jax.random.PRNGKey(0)
+    )
+    assert out.shape == (3, 4)
     np.testing.assert_allclose(np.asarray(out), np.median(leaf[mask], axis=0), atol=1e-6)
 
 
-def test_masked_tm_axis0_subset():
+def test_leaf_agg_tm_subset():
     rng = np.random.RandomState(1)
     leaf = rng.randn(10, 5).astype(np.float32)
     mask = np.ones(10, bool)
-    out = _masked_tm_axis0(jnp.asarray(leaf), jnp.asarray(mask), 0.2)
+    out = _leaf_agg("tm", trim_ratio=0.2)(
+        jnp.asarray(leaf), jnp.asarray(mask), jax.random.PRNGKey(0)
+    )
     s = np.sort(leaf, axis=0)
     expected = s[2:8].mean(axis=0)
     np.testing.assert_allclose(np.asarray(out), expected, atol=1e-5)
 
 
-def test_masked_mean_axis0():
+def test_leaf_agg_mean():
     leaf = jnp.arange(12.0).reshape(4, 3)
     mask = jnp.asarray([True, False, True, False])
-    out = _masked_mean_axis0(leaf, mask)
+    out = _leaf_agg("mean")(leaf, mask, jax.random.PRNGKey(0))
     np.testing.assert_allclose(np.asarray(out), np.asarray((leaf[0] + leaf[2]) / 2))
 
 
-def test_bucketed_cm_reduces_to_cm_with_s1():
+def test_leaf_agg_full_registry_backends_agree():
+    """Every mesh aggregator name resolves on both backends and agrees,
+    with and without precomputed clip factors (the fused server step)."""
     rng = np.random.RandomState(2)
-    leaf = jnp.asarray(rng.randn(8, 6).astype(np.float32))
-    mask = jnp.ones(8, bool)
-    out = _bucketed_cm_axis0(leaf, mask, jax.random.PRNGKey(0), 1)
-    np.testing.assert_allclose(
-        np.asarray(out), np.median(np.asarray(leaf), axis=0), atol=1e-6
-    )
+    leaf = jnp.asarray(rng.randn(8, 3, 5).astype(np.float32))
+    mask = jnp.asarray([1, 1, 1, 0, 1, 1, 0, 1], bool)
+    key = jax.random.PRNGKey(7)
+    factors = jnp.asarray(rng.rand(8).astype(np.float32))
+    for name in ("cm", "tm", "mean", "cclip", "rfa", "krum", "multi_krum",
+                 "bucket_cm", "bucket_krum", "bucket_rfa"):
+        aj = _leaf_agg(name, backend="jnp", n_byz=1)
+        ap = _leaf_agg(name, backend="pallas", n_byz=1)
+        np.testing.assert_allclose(
+            np.asarray(aj(leaf, mask, key)), np.asarray(ap(leaf, mask, key)),
+            atol=2e-5, err_msg=name,
+        )
+        np.testing.assert_allclose(
+            np.asarray(aj(leaf, mask, key, factors=factors)),
+            np.asarray(ap(leaf, mask, key, factors=factors)),
+            atol=2e-5, err_msg=f"{name} factors",
+        )
 
 
-def test_bucketed_cm_resists_outlier_minority():
+def test_leaf_agg_bucketed_cm_resists_outlier_minority():
     rng = np.random.RandomState(3)
     good = rng.randn(10, 4).astype(np.float32)
     byz = 1e6 * np.ones((2, 4), np.float32)
     leaf = jnp.asarray(np.concatenate([good, byz]))
-    out = _bucketed_cm_axis0(leaf, jnp.ones(12, bool), jax.random.PRNGKey(1), 2)
+    out = _leaf_agg("bucket_cm", bucket_s=2)(
+        leaf, jnp.ones(12, bool), jax.random.PRNGKey(1)
+    )
     assert np.abs(np.asarray(out)).max() < 10.0
 
 
@@ -120,8 +141,11 @@ def test_dryrun_smoke_single_and_multipod_mesh():
 
 @pytest.mark.slow
 def test_sharded_vs_naive_aggregation_equivalence():
-    """The beyond-paper all_to_all schedule must produce bit-identical
-    aggregates to the paper-faithful naive schedule (multi-device)."""
+    """The beyond-paper all_to_all schedule must produce aggregates equal
+    to the paper-faithful naive schedule (multi-device) — for EVERY
+    registry rule, on both backends, with and without the fused server
+    clip.  Non-coordinate-wise rules rely on the cross-shard psum of row
+    statistics threaded through ``reduce_fn``."""
     script = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -140,20 +164,91 @@ mask = jnp.asarray([True, True, False, True])
 key = jax.random.PRNGKey(0)
 with set_mesh(mesh):
     tree = jax.device_put(tree, NamedSharding(mesh, P("data")))
-    outs = {}
-    for sched in ("naive", "sharded"):
-        cfg = ByzTrainConfig(aggregator="cm", agg_schedule=sched)
-        outs[sched] = jax.jit(
-            lambda t, m, k: robust_aggregate(t, m, k, mesh=mesh, cfg=cfg)
-        )(tree, mask, key)
-for la, lb in zip(jax.tree_util.tree_leaves(outs["naive"]),
-                  jax.tree_util.tree_leaves(outs["sharded"])):
-    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+    for agg in ("cm", "tm", "mean", "cclip", "rfa", "krum", "multi_krum",
+                "bucket_cm", "bucket_krum"):
+        for radius in (jnp.float32(3.0), None):
+            outs = {}
+            for backend in ("jnp", "pallas"):
+                for sched in ("naive", "sharded"):
+                    cfg = ByzTrainConfig(aggregator=agg, agg_schedule=sched,
+                                         backend=backend, n_byz=1)
+                    outs[(backend, sched)] = jax.jit(
+                        lambda t, m, k: robust_aggregate(
+                            t, m, k, mesh=mesh, cfg=cfg, radius=radius)
+                    )(tree, mask, key)
+            ref = outs[("jnp", "naive")]
+            for which, v in outs.items():
+                for la, lb in zip(jax.tree_util.tree_leaves(ref),
+                                  jax.tree_util.tree_leaves(v)):
+                    np.testing.assert_allclose(
+                        np.asarray(la), np.asarray(lb), atol=3e-5,
+                        err_msg=f"{agg} clip={radius is not None} {which}")
 print("EQUIV_OK")
 """
     r = _run([sys.executable, "-c", script])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "EQUIV_OK" in r.stdout
+
+
+def _iter_eqns_outside_kernels(jaxpr):
+    """All eqns reachable from ``jaxpr`` WITHOUT descending into
+    pallas_call bodies (whose in-register ops never touch HBM)."""
+    import jax.extend.core as jex_core
+
+    core_types = (jex_core.Jaxpr, jex_core.ClosedJaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        stack = list(eqn.params.values())
+        while stack:
+            v = stack.pop()
+            if isinstance(v, core_types):
+                inner = v.jaxpr if hasattr(v, "jaxpr") else v
+                yield from _iter_eqns_outside_kernels(inner)
+            elif isinstance(v, (list, tuple)):
+                stack.extend(v)
+
+
+def test_sharded_fused_path_jaxpr_no_standalone_clipped_matrix():
+    """With backend="pallas" the sharded schedule's server clip must run
+    INSIDE the fused clip_then_aggregate kernel: the jaxpr contains the
+    fused kernel launch and no elementwise multiply materializing the
+    clipped (W, chunk) message block outside a kernel."""
+    from repro.launch.mesh import make_debug_mesh, set_mesh
+    from repro.launch.train import robust_aggregate
+
+    mesh = make_debug_mesh(1, 1)  # single-device mesh: tracing only
+    rng = np.random.RandomState(0)
+    tree = {"a": jnp.asarray(rng.randn(1, 8, 64).astype(np.float32))}
+    mask = jnp.ones((1,), bool)
+    key = jax.random.PRNGKey(0)
+    with set_mesh(mesh):
+        cfg = ByzTrainConfig(
+            aggregator="cm", agg_schedule="sharded", backend="pallas"
+        )
+        jaxpr = jax.make_jaxpr(
+            lambda t, m, k: robust_aggregate(
+                t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(2.0)
+            )
+        )(tree, mask, key)
+    text = str(jaxpr)
+    # the fused kernel is launched ...
+    assert "pallas_call" in text
+    assert "_clip_agg_kernel" in text or "clip_aggregate" in text
+    # ... and no multiply outside a kernel produces the (W, chunk) clipped
+    # message block (W = 1 worker, chunk = the full 8*64 flat block here)
+    w, chunk = 1, 8 * 64
+    bad = [
+        eqn
+        for eqn in _iter_eqns_outside_kernels(jaxpr.jaxpr)
+        if eqn.primitive.name == "mul"
+        and any(
+            getattr(v.aval, "shape", None) == (w, chunk)
+            for v in eqn.outvars
+        )
+    ]
+    assert not bad, f"clipped matrix materialized outside kernel: {bad}"
 
 
 def test_train_cfg_validation():
@@ -169,12 +264,11 @@ def test_cclip_leaf_agg_matches_core():
     import numpy as np
 
     from repro.core.aggregators import centered_clip as core_cclip
-    from repro.launch.train import _masked_cclip_axis0
 
     rng = np.random.RandomState(11)
     leaf = jnp.asarray(rng.randn(8, 3, 5).astype(np.float32))
     mask = jnp.asarray([1, 1, 1, 0, 1, 1, 0, 1], bool)
-    out = _masked_cclip_axis0(leaf, mask, tau=10.0, iters=5)
+    out = _leaf_agg("cclip")(leaf, mask, jax.random.PRNGKey(0))
     ref = core_cclip(tau=10.0, iters=5)(
         jnp.reshape(leaf, (8, -1)), mask=mask
     ).reshape(3, 5)
