@@ -88,14 +88,18 @@ def traffic_model(n: int, d: int, itemsize: int = 4) -> dict:
 
 
 def traffic_model_krum(n: int, d: int, itemsize: int = 4) -> dict:
-    """Clip -> Krum server step.  Unfused: norm read + clip read/write +
-    Gram matmul read (4 streams).  Fused: ONE Gram stream — clip factors
-    and distances are (n, n) algebra on diag(G) — plus the (d,) winner
-    row read back."""
+    """Clip -> Krum / multi-Krum server step.  Unfused: norm read + clip
+    read/write (materializing the clipped matrix) + Gram matmul read +
+    winner-reconstruction read of the clipped matrix (multi-Krum's
+    weighted row-sum / the bucketed winner gather) = 5 streams.  Fused:
+    TWO streams — the Gram pass (clip factors and distances are (n, n)
+    algebra on diag(G)) and the tile-wise winner row-sum pass that
+    reconstructs any selection outcome in-register — plus the (d,)
+    output."""
     nd = n * d * itemsize
     out = d * itemsize
-    unfused = 4 * nd + out
-    fused = 1 * nd + out
+    unfused = 5 * nd + out
+    fused = 2 * nd + out
     return {
         "n": n, "d": d,
         "unfused_bytes": unfused, "fused_bytes": fused,
@@ -258,6 +262,35 @@ def run(quick: bool = False, out_json: str = BENCH_JSON):
             us_fk,
             f"tpu_floor_us={tmk['fused_tpu_floor_us']:.1f};"
             f"traffic_x{tmk['traffic_reduction']:.2f}",
+        )
+    )
+    # multi-krum exercises the weighted-average winner reconstruction —
+    # since PR 3 a tile-wise kernel pass, not a host full-matrix gather
+    us_fmk = _time(
+        lambda x, m: clip_then_krum(
+            x, lam, m, byz_bound=1, m_select=3, multi=True
+        )[0],
+        xs, mask,
+    )
+    rows.append(
+        (
+            "kernel_clipmultikrum_fused_pallas_interp",
+            us_fmk,
+            f"tpu_floor_us={tmk['fused_tpu_floor_us']:.1f};"
+            f"traffic_x{tmk['traffic_reduction']:.2f}",
+        )
+    )
+    # the on-chip winner gather pass in isolation (one matrix stream);
+    # jitted here — in production it is traced inside the fused pipeline
+    from repro.kernels.ops import weighted_row_sum
+
+    w_row = jnp.asarray(rng.rand(n).astype(np.float32))
+    us_apply = _time(jax.jit(weighted_row_sum), xs, w_row)
+    rows.append(
+        (
+            "kernel_krumapply_pallas_interp",
+            us_apply,
+            f"tpu_floor_us={_floor_us(n * d * 4 + d * 4):.1f}",
         )
     )
 

@@ -14,7 +14,10 @@ interpret mode and writes ``BENCH_kernels.json`` for the perf trajectory
 ``--check-regression`` additionally diffs the freshly written
 ``BENCH_kernels.json`` against the committed one BEFORE overwriting it
 and exits non-zero on a >20% per-kernel slowdown
-(benchmarks/check_regression.py).
+(benchmarks/check_regression.py; exit 1 = regression, exit 2 = no usable
+baseline).  ``--timing-warn-only`` demotes the noisy wall-clock tier to
+warnings (shared CI runners) — the deterministic modeled-traffic tier
+still hard-fails.
 """
 from __future__ import annotations
 
@@ -34,6 +37,10 @@ def main() -> None:
     ap.add_argument("--check-regression", action="store_true",
                     help="gate: fail on >20%% per-kernel slowdown vs the "
                          "committed BENCH_kernels.json")
+    ap.add_argument("--timing-warn-only", action="store_true",
+                    help="with --check-regression: timing regressions "
+                         "warn instead of failing (modeled traffic still "
+                         "hard-fails)")
     args = ap.parse_args()
     if args.smoke:
         args.quick = True
@@ -55,15 +62,33 @@ def main() -> None:
                 mode="r", suffix=".json", delete=False
             )
             tmp.close()
+            verdict_tmp = tempfile.NamedTemporaryFile(
+                mode="r", suffix=".json", delete=False
+            )
+            verdict_tmp.close()
             try:
                 rows = bench_kernels.run(quick=quick, out_json=tmp.name)
-                rc = check_regression.main(["--fresh", tmp.name])
+                gate_args = ["--fresh", tmp.name,
+                             "--json-out", verdict_tmp.name]
+                if args.timing_warn_only:
+                    gate_args.append("--timing-warn-only")
+                rc = check_regression.main(gate_args)
                 if rc:
                     raise SystemExit(rc)
-                # gate passed: promote the fresh numbers to the baseline
+                verdict = json.load(open(verdict_tmp.name))
                 payload = json.load(open(tmp.name))
             finally:
                 os.unlink(tmp.name)
+                os.unlink(verdict_tmp.name)
+            if verdict.get("timing_regressions"):
+                # warn-only pass WITH demoted regressions: keep the old
+                # baseline — promoting the slower numbers would silently
+                # ratchet the gate down and hide the slowdown next run
+                print("[run] timing regressions demoted to warnings; "
+                      "NOT promoting the fresh numbers to "
+                      f"{bench_kernels.BENCH_JSON}")
+                return rows
+            # clean pass: promote the fresh numbers to the baseline
             with open(bench_kernels.BENCH_JSON, "w") as f:
                 json.dump(payload, f, indent=2)
             return rows

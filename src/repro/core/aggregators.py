@@ -31,6 +31,24 @@ tie-breaking) are shared helpers in repro.kernels.krum used by BOTH
 backends, so exact ties resolve identically under a backend swap (see
 kernels/krum.py for the ulp-level caveat on near-ties of distinct
 scores).
+
+Selection rules (krum/multi_krum, plain or bucketed) additionally expose
+a TWO-PHASE contract so callers that loop over several coordinate blocks
+sharing the same rows (the mesh trainer's per-parameter-leaf loop) can
+make ONE whole-message decision without materializing the stacked
+matrix:
+
+    stats  = sum(agg.accumulate_stats(block) for block in blocks)
+    sel    = agg.finalize(stats, mask=..., key=..., factors=...)
+    outs   = [agg.apply_selection(block, sel) for block in blocks]
+
+``accumulate_stats`` returns the (n, n) Gram contribution of a block
+(additive over any coordinate partition), ``finalize`` runs the shared
+selection algebra once on the total, and ``apply_selection`` applies the
+resulting row combination to each block (on the pallas backend: the
+tile-wise winner row-sum kernel).  ``Aggregator.supports_two_phase``
+reports availability; ``clip_then_aggregate`` remains the one-shot
+equivalent for a single matrix.
 """
 from __future__ import annotations
 
@@ -44,7 +62,9 @@ import jax.numpy as jnp
 
 from ..kernels import ops as _kops
 from ..kernels.krum import (
+    RowSelection,
     krum_scores as _krum_scores,
+    krum_select_from_gram as _krum_select_from_gram,
     masked_pairwise_d2 as _masked_pairwise_d2,
     multi_krum_selection as _multi_krum_selection,
 )
@@ -53,6 +73,7 @@ from .tree_utils import tree_batch_ravel
 
 __all__ = [
     "Aggregator",
+    "RowSelection",
     "mean",
     "coordinate_median",
     "trimmed_mean",
@@ -277,6 +298,11 @@ class Aggregator:
     ``xs`` may be an (n, d) matrix or a pytree whose leaves carry a leading
     worker axis; pytrees are flattened into ONE contiguous (n, d) buffer
     (single kernel launch) and the result is unflattened.
+
+    ``stats_fn``/``finalize_fn``/``apply_fn``: the two-phase selection
+    contract (module docstring) for rules that can defer their decision
+    across several coordinate blocks of one logical message; None for
+    rules without a deferred form (coordinate-wise and iterative rules).
     """
 
     name: str
@@ -286,6 +312,14 @@ class Aggregator:
     c_const: float  # the c in (delta, c)-RAgg (literature values)
     backend: str = "jnp"
     fused_clip_fn: Optional[Callable] = None
+    stats_fn: Optional[Callable] = None
+    finalize_fn: Optional[Callable] = None
+    apply_fn: Optional[Callable] = None
+
+    @property
+    def supports_two_phase(self) -> bool:
+        """Whether accumulate_stats/finalize/apply_selection are usable."""
+        return self.stats_fn is not None
 
     def __call__(self, xs, mask=None, key=None, reduce_fn=None):
         """``reduce_fn`` reduces row statistics (norms, distances, Gram)
@@ -326,6 +360,46 @@ class Aggregator:
         else:
             clipped = jax.vmap(lambda v: _clip(v, radius))(xs)
         return self.fn(clipped, mask=mask, key=key, reduce_fn=reduce_fn)
+
+    # -- two-phase selection (whole-message decision over many blocks) --
+
+    def _require_two_phase(self):
+        if self.stats_fn is None:
+            raise NotImplementedError(
+                f"aggregator {self.name!r} has no two-phase selection form"
+            )
+
+    def accumulate_stats(self, xs, reduce_fn=None):
+        """Phase 1: the selection statistics contribution of one (n, d)
+        coordinate block — for Krum rules the (n, n) Gram, which is
+        additive over any coordinate partition of the message, so the
+        caller sums the returns across its blocks.  ``reduce_fn`` (a psum
+        inside shard_map) makes a chip-local block's contribution
+        global."""
+        self._require_two_phase()
+        return self.stats_fn(xs, reduce_fn=reduce_fn)
+
+    def finalize(self, stats, mask=None, key=None, radius=None,
+                 factors=None):
+        """Phase 2: run the selection once on the accumulated stats.
+
+        Clipping semantics match ``clip_then_aggregate``: ``factors``
+        supplies precomputed per-row scales (the sharded trainer's global
+        tree norms); else ``radius`` clips by the row norms recovered
+        from the stats (diag of the Gram); neither -> no clipping.
+        Returns an opaque selection (a RowSelection pytree for Krum) to
+        feed ``apply_selection``."""
+        self._require_two_phase()
+        return self.finalize_fn(
+            stats, mask=mask, key=key, radius=radius, factors=factors
+        )
+
+    def apply_selection(self, xs, selection):
+        """Phase 3: apply the finalized row combination to one (n, d)
+        coordinate block (pallas: the tile-wise winner row-sum kernel).
+        Whole-message aggregate = concat over blocks of the returns."""
+        self._require_two_phase()
+        return self.apply_fn(xs, selection)
 
 
 def mean() -> Aggregator:
@@ -475,6 +549,54 @@ def _make_pallas_cm_fns(trim_ratio: float, bucket_s: int):
     return aggregate, fused_clip
 
 
+def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
+                        pallas: bool):
+    """(stats_fn, finalize_fn, apply_fn) for krum/multi-krum on either
+    backend.  The finalize algebra is the single shared
+    ``krum_select_from_gram`` — masking, neighbour counting, Bucketing
+    and tie-breaking live in ONE place — so the two backends (and the
+    one-shot ``clip_then_krum``) can never select different rows.  Only
+    the Gram computation and the apply pass differ: jnp matmul / exact
+    dynamic row-take vs the MXU Gram kernel and the tile-wise winner
+    row-sum kernel."""
+    bs = max(bucket_s, 1)
+
+    if pallas:
+        stats_fn = _kops.krum_gram
+        apply_fn = _kops.krum_apply
+    else:
+        def stats_fn(xs, reduce_fn=None):
+            x32 = xs.astype(jnp.float32)
+            gram = x32 @ x32.T
+            return reduce_fn(gram) if reduce_fn is not None else gram
+
+        def apply_fn(xs, sel):
+            x32 = xs.astype(jnp.float32)
+            if not multi and bs < 2:
+                # exact dynamic row-take: bitwise-identical to the
+                # one-shot jnp rule's clipped[winner]
+                take = jnp.take(x32, sel.winner, axis=0) * sel.scale
+                return take.astype(xs.dtype)
+            w = sel.weights[:, None]
+            # match the kernel: zero-weight rows contribute exactly 0 so
+            # a non-finite unselected payload cannot NaN the combination
+            out = jnp.sum(jnp.where(w != 0.0, x32 * w, 0.0), axis=0)
+            return (out / sel.denom).astype(xs.dtype)
+
+    def finalize_fn(stats, mask=None, key=None, radius=None, factors=None):
+        n = stats.shape[0]
+        bucket_idx = _bucket_order(key, mask, n) if bs >= 2 else None
+        use_clip = factors is not None or radius is not None
+        sel, _ = _krum_select_from_gram(
+            stats, mask, radius, factors, bucket_idx,
+            byz_bound=byz_bound, m_select=m_select, multi=multi,
+            bucket_s=bs, use_clip=use_clip,
+        )
+        return sel
+
+    return stats_fn, finalize_fn, apply_fn
+
+
 def make_aggregator(
     name: str, bucket_s: int = 0, backend: str = "jnp", **kwargs
 ) -> Aggregator:
@@ -487,8 +609,18 @@ def make_aggregator(
     agg = _FACTORY[name](**kwargs)
     if bucket_s and bucket_s >= 2:
         agg = bucketing(agg, s=bucket_s)
+    two_phase = {}
+    if name in ("krum", "multi_krum"):
+        sfn, ffn, afn = _krum_two_phase_fns(
+            byz_bound=kwargs.get("byz_bound"),
+            m_select=int(kwargs.get("m_select", 0)),
+            multi=(name == "multi_krum"),
+            bucket_s=bucket_s if bucket_s else 0,
+            pallas=(resolved == "pallas"),
+        )
+        two_phase = dict(stats_fn=sfn, finalize_fn=ffn, apply_fn=afn)
     if resolved != "pallas":
-        return agg
+        return dataclasses.replace(agg, **two_phase) if two_phase else agg
     bs = bucket_s if bucket_s else 0
     if name in ("cm", "trimmed_mean", "mean"):
         # mean == trimmed mean with t = ceil(0 * cnt) = 0 dropped rows
@@ -521,5 +653,5 @@ def make_aggregator(
     else:  # pragma: no cover — registry and dispatch lists must agree
         raise AssertionError(f"no pallas dispatch for {name!r}")
     return dataclasses.replace(
-        agg, fn=fn, fused_clip_fn=fused, backend="pallas"
+        agg, fn=fn, fused_clip_fn=fused, backend="pallas", **two_phase
     )

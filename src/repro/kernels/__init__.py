@@ -2,6 +2,7 @@
 interpret mode on CPU; see ops.py for the public wrappers and the
 backend contract)."""
 from .ops import (  # noqa: F401
+    RowSelection,
     bucketed_coordinate_median,
     centered_clip,
     clip_then_aggregate,
@@ -12,6 +13,10 @@ from .ops import (  # noqa: F401
     coordinate_median,
     geometric_median,
     krum,
+    krum_apply,
+    krum_gram,
+    krum_select_from_gram,
     multi_krum,
     trimmed_mean,
+    weighted_row_sum,
 )

@@ -18,8 +18,19 @@ compositions the server step needs are Gram algebra, not extra streams:
                    bucket-mean operator over the resident ``bucket_idx``
                    row order (aggregators._bucketing semantics).
 
-Only the winner reconstruction touches xs again: one dynamic row gather
-(Krum) or one weighted row-sum (multi-Krum / bucketed winners).
+Only the winner reconstruction touches xs again, and it too is a kernel:
+every selection outcome (Krum winner, multi-Krum average, bucketed winner
+means) is a weighted row-sum over the original rows, so one tile-wise
+``weighted_row_sum`` pass streams (n, TILE_D) blocks and combines them
+in-register — no host-level full-matrix row gather on the fused path.
+
+The selection itself is exposed as a two-phase contract so callers can
+defer the decision across *several* matrices sharing the same rows (the
+mesh trainer's per-parameter-leaf loop): ``gram_matrix`` per block, sum
+the (n, n) Grams (the Gram is additive over the coordinate axis), then
+``krum_select_from_gram`` once on the total and ``apply_row_selection``
+per block.  ``clip_then_krum`` is exactly that pipeline for a single
+matrix.
 
 Distance masking / neighbour counting / tie-breaking live in the pure-jnp
 helpers below, which ``repro.core.aggregators`` imports for its jnp
@@ -35,7 +46,7 @@ engine runs in.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -126,8 +137,66 @@ def gram_matrix(xs, *, interpret: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# public entry points
+# the winner-gather kernel: tile-wise weighted row-sum
 # ---------------------------------------------------------------------------
+
+def _row_combine_kernel(w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(F32)  # (n, td)
+    w = w_ref[...].astype(F32)  # (n, 1)
+    # zero-weight rows contribute exactly 0, not 0 * x: a non-finite
+    # payload in an unselected/unsampled row (byzantines may send inf)
+    # must not poison the combination with 0 * inf = NaN — the row-take
+    # this pass replaces never read those rows at all
+    contrib = jnp.where(w != 0.0, x * w, 0.0)
+    o_ref[...] = jnp.sum(contrib, axis=0, keepdims=True)  # (1, td)
+
+
+def weighted_row_sum(xs, w_row, *, interpret: bool = False):
+    """(n, d), (n,) -> (d,) f32: sum_i w_i * x_i as one tile-wise
+    streaming pass — the winner-reconstruction kernel.  Every Krum
+    outcome is such a combination (Krum: one-hot(winner) * factor;
+    multi-Krum: the selection weights; bucketed winners: the winning
+    rows of the bucket-mean operator), so no path gathers rows on the
+    host or materializes a weighted copy of the matrix."""
+    n = xs.shape[0]
+    xp, pad = _pad_to(xs, TILE_D, axis=1)
+    grid = xp.shape[1] // TILE_D
+    out = pl.pallas_call(
+        _row_combine_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # weights: resident
+            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, xp.shape[1]), F32),
+        interpret=interpret,
+    )(w_row.astype(F32).reshape(n, 1), xp)
+    out = out[0]
+    return out[: xs.shape[1]] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# selection as (n, n) algebra — phase 2 of the two-phase contract
+# ---------------------------------------------------------------------------
+
+class RowSelection(NamedTuple):
+    """The outcome of a Krum/multi-Krum selection, decoupled from the
+    message coordinates so it can be applied to any matrix sharing the
+    row space (each parameter leaf, each coordinate shard).
+
+    ``weights``/``denom``: the row combination sum_i w_i x_i / denom that
+    reconstructs the aggregate (clip factors and bucket means folded in).
+    ``winner``/``scale``: the argmin row and its clip factor — equivalent
+    information for plain (unbucketed) Krum, letting reference backends
+    keep an exact dynamic row-take instead of the weighted sum.
+    """
+
+    weights: jax.Array  # (n,) f32
+    denom: jax.Array  # () f32
+    winner: jax.Array  # () int32
+    scale: jax.Array  # () f32
+
 
 def _bucket_operator(bucket_idx, mask_f, factors, n_p, s):
     """The (nb, n_p) mask-weighted bucket-mean matrix M (clip factors
@@ -141,6 +210,114 @@ def _bucket_operator(bucket_idx, mask_f, factors, n_p, s):
     m_op = e * factors[None, :] / jnp.maximum(cnt, 1.0)[:, None]
     return m_op, cnt
 
+
+def krum_select_from_gram(
+    gram,
+    mask=None,
+    radius=None,
+    factors=None,
+    bucket_idx=None,
+    *,
+    byz_bound: Optional[int] = None,
+    m_select: int = 0,
+    multi: bool = False,
+    bucket_s: int = 1,
+    use_clip: bool = True,
+):
+    """Krum/multi-Krum selection given the (n, n) Gram matrix of the
+    messages — pure row-space algebra, no d-sized operand.
+
+    ``gram`` may be the Gram of one matrix or the SUM of Grams over any
+    partition of the coordinates (parameter leaves, shards): the Gram is
+    additive, so the selection is then the whole-message decision.  Clip
+    factors come from ``factors`` if given, else from ``diag(gram)`` at
+    ``radius`` (``use_clip=False``: no clipping); Bucketing is the
+    ``M G M^T`` triple product over the resident ``bucket_idx`` order.
+    Returns ``(RowSelection, row_norms (n,) or None)``.
+    """
+    n = gram.shape[0]
+    mask_b = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    mask_f = mask_b.astype(F32)
+    norms = None
+    if use_clip:
+        if factors is None:
+            norms = jnp.sqrt(jnp.maximum(jnp.diagonal(gram), 0.0))
+            factors = clip_factor(norms, radius).astype(F32)
+        else:
+            factors = factors.astype(F32)
+    else:
+        factors = jnp.ones((n,), F32)
+
+    if bucket_s >= 2:
+        mask_f, factors_p, bucket_idx, pad_rows = _pad_bucket_aux(
+            mask_f, factors, bucket_idx, n, bucket_s
+        )
+        n_p = n + pad_rows
+        if pad_rows:
+            gram = jnp.pad(gram, ((0, pad_rows), (0, pad_rows)))
+        m_op, cnt = _bucket_operator(
+            bucket_idx, mask_f, factors_p, n_p, bucket_s
+        )
+        g_eff = m_op @ gram @ m_op.T  # Gram of clipped bucket means
+        # the fp triple product is not exactly symmetric; Krum's
+        # argmin-first tie-breaking on symmetric ties (mutual nearest
+        # neighbours) needs d2[i,j] == d2[j,i] exactly
+        g_eff = 0.5 * (g_eff + g_eff.T)
+        mask_eff = cnt > 0.5
+    else:
+        g_eff = gram * (factors[:, None] * factors[None, :])
+        mask_eff = mask_b
+
+    sq_eff = jnp.diagonal(g_eff)
+    d2 = masked_pairwise_d2(g_eff, sq_eff, mask_eff)
+    scores = krum_scores(d2, mask_eff, byz_bound)
+
+    if not multi:
+        winner = jnp.argmin(scores)
+        scale = factors[jnp.minimum(winner, n - 1)]
+        if bucket_s < 2:
+            # one-hot * factor: the weighted row-sum reproduces the
+            # direct row-take bitwise (zero terms are exact)
+            w_row = (
+                jnp.arange(n, dtype=jnp.int32) == winner
+            ).astype(F32) * scale
+        else:
+            # the winning bucket mean IS a row of the bucket operator
+            w_row = m_op[winner][:n]
+        sel = RowSelection(
+            weights=w_row, denom=jnp.asarray(1.0, F32),
+            winner=winner.astype(jnp.int32), scale=scale,
+        )
+        return sel, norms
+
+    msel = multi_krum_selection(scores, mask_eff, byz_bound, m_select)
+    w_sel = msel.astype(F32)
+    denom = jnp.maximum(jnp.sum(w_sel), 1.0)
+    if bucket_s < 2:
+        w_row = w_sel * factors
+    else:
+        # selected-bucket means as one weighted row-sum over the raw rows
+        w_row = (w_sel @ m_op)[:n]
+    sel = RowSelection(
+        weights=w_row, denom=denom,
+        winner=jnp.argmin(scores).astype(jnp.int32),
+        scale=jnp.asarray(1.0, F32),
+    )
+    return sel, norms
+
+
+def apply_row_selection(xs, selection: RowSelection, *,
+                        interpret: bool = False):
+    """Apply a RowSelection to a coordinate block sharing its row space:
+    the final tile-wise kernel pass of the fused Krum path (one streaming
+    read of ``xs``, combination in-register)."""
+    out = weighted_row_sum(xs, selection.weights, interpret=interpret)
+    return (out / selection.denom).astype(xs.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit,
@@ -167,79 +344,26 @@ def clip_then_krum(
     """Fused Krum/multi-Krum over per-row l2-clipped messages.
 
     One Gram streaming pass; clip factors (from diag G, or precomputed
-    ``factors``) and Bucketing are applied as (n, n) algebra.
-    ``reduce_fn`` (static) sums the (n, n) Gram across coordinate shards
-    (a psum inside shard_map): distances — and therefore the selection —
-    then match the full-vector semantics exactly even though each chip
-    only streams its own (n, d/W) block.  Returns
+    ``factors``) and Bucketing are applied as (n, n) algebra
+    (``krum_select_from_gram``); the winner/weighted-average is
+    reconstructed by the tile-wise ``weighted_row_sum`` kernel — a second
+    streaming pass, never a host-level row gather.  ``reduce_fn``
+    (static) sums the (n, n) Gram across coordinate shards (a psum
+    inside shard_map): distances — and therefore the selection — then
+    match the full-vector semantics exactly even though each chip only
+    streams its own (n, d/W) block.  Returns
     ``(aggregated (d,), row_norms (n,) or None)``; ``use_clip=False``
     gives the plain aggregation (factors = 1, norms = None).
     """
-    n, d = xs.shape
-    mask_b = (
-        jnp.ones((n,), bool) if mask is None else mask.astype(bool)
-    )
-    mask_f = mask_b.astype(F32)
     gram = gram_matrix(xs, interpret=interpret)
     if reduce_fn is not None:
         gram = reduce_fn(gram)
-    norms = None
-    if use_clip:
-        if factors is None:
-            norms = jnp.sqrt(jnp.maximum(jnp.diagonal(gram), 0.0))
-            factors = clip_factor(norms, radius).astype(F32)
-        else:
-            factors = factors.astype(F32)
-    else:
-        factors = jnp.ones((n,), F32)
-
-    x32 = xs.astype(F32)
-    if bucket_s >= 2:
-        mask_f, factors, bucket_idx, pad_rows = _pad_bucket_aux(
-            mask_f, factors, bucket_idx, n, bucket_s
-        )
-        n_p = n + pad_rows
-        if pad_rows:
-            gram = jnp.pad(gram, ((0, pad_rows), (0, pad_rows)))
-        m_op, cnt = _bucket_operator(bucket_idx, mask_f, factors, n_p, bucket_s)
-        g_eff = m_op @ gram @ m_op.T  # Gram of clipped bucket means
-        # the fp triple product is not exactly symmetric; Krum's
-        # argmin-first tie-breaking on symmetric ties (mutual nearest
-        # neighbours) needs d2[i,j] == d2[j,i] exactly
-        g_eff = 0.5 * (g_eff + g_eff.T)
-        mask_eff = cnt > 0.5
-    else:
-        g_eff = gram * (factors[:, None] * factors[None, :])
-        mask_eff = mask_b
-
-    sq_eff = jnp.diagonal(g_eff)
-    d2 = masked_pairwise_d2(g_eff, sq_eff, mask_eff)
-    scores = krum_scores(d2, mask_eff, byz_bound)
-
-    if not multi:
-        winner = jnp.argmin(scores)
-        if bucket_s < 2:
-            out = (x32[winner] * factors[winner]).astype(xs.dtype)
-        else:
-            # reconstruct the winning bucket mean from its s raw rows
-            rows = jax.lax.dynamic_slice(
-                bucket_idx, (winner * bucket_s,), (bucket_s,)
-            )
-            w_r = jnp.take(mask_f, rows) * jnp.take(factors, rows)
-            w_r = w_r / jnp.maximum(cnt[winner], 1.0)
-            xr = jnp.take(x32, jnp.where(rows < n, rows, 0), axis=0)
-            out = jnp.sum(xr * w_r[:, None], axis=0).astype(xs.dtype)
-        return out, norms
-
-    sel = multi_krum_selection(scores, mask_eff, byz_bound, m_select)
-    w_sel = sel.astype(F32)
-    denom = jnp.maximum(jnp.sum(w_sel), 1.0)
-    if bucket_s < 2:
-        w_row = w_sel * factors
-    else:
-        # selected-bucket means as one weighted row-sum over the raw rows
-        w_row = (w_sel @ m_op)[:n]
-    out = (jnp.sum(x32 * w_row[:, None], axis=0) / denom).astype(xs.dtype)
+    selection, norms = krum_select_from_gram(
+        gram, mask, radius, factors, bucket_idx,
+        byz_bound=byz_bound, m_select=m_select, multi=multi,
+        bucket_s=bucket_s, use_clip=use_clip,
+    )
+    out = apply_row_selection(xs, selection, interpret=interpret)
     return out, norms
 
 

@@ -18,8 +18,11 @@ Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
   cm / trimmed_mean  selection net   2-stream 2-pass        resident
                      (CM/TM tiles)   (clip_aggregate.py)    row-gather
   mean               TM(t=0) tiles   same 2-stream kernel   row-gather
-  krum / multi_krum  MXU Gram tile   1 stream: factors =    Gram algebra
-                     (krum.py)       f(diag G), G_c=ff^T oG  M G M^T
+  krum / multi_krum  MXU Gram tile   2 streams: Gram pass   Gram algebra
+                     (krum.py)       (factors = f(diag G),  M G M^T
+                                     G_c = ff^T o G) +
+                                     tile-wise winner
+                                     row-sum pass
   centered_clip      resident or     factors in-register    in-register
                      d-tiled iters   (no clipped matrix)    bucket means
   rfa (Weiszfeld)    resident or     factors in-register    in-register
@@ -33,6 +36,14 @@ Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
   the norm pass: the sharded trainer (launch/train.py) clips by *global*
   per-worker tree norms, which a chip-local block cannot compute, so it
   passes factors into the per-chip fused kernel inside shard_map.
+
+  Krum/multi-Krum additionally export the TWO-PHASE selection contract
+  (whole-tree selection across a per-leaf loop): ``krum_gram`` per
+  coordinate block, SUM the (n, n) Grams (the Gram is additive over any
+  coordinate partition — leaves, shards), ``krum_select_from_gram`` once
+  on the total, then ``krum_apply`` (the tile-wise winner row-sum
+  kernel) per block.  ``clip_then_krum`` is that pipeline for a single
+  matrix; winner reconstruction never gathers rows on the host.
 - ``backend="auto"``   — picks ``pallas`` iff ``jax.default_backend()`` is
   TPU (where the tiling pays off), else ``jnp``.  On CPU the pallas choice
   still *works* (interpret mode) and is what the equivalence tests use.
@@ -57,9 +68,14 @@ from .clipped_diff import clipped_diff as _clipped_diff
 from .coordinate_median import coordinate_median as _coordinate_median
 from .geometric_median import clip_then_geometric_median as _clip_then_gm
 from .geometric_median import geometric_median as _geometric_median
+from .krum import RowSelection  # noqa: F401  (re-exported)
+from .krum import apply_row_selection as _apply_row_selection
 from .krum import clip_then_krum as _clip_then_krum
+from .krum import gram_matrix as _gram_matrix
 from .krum import krum as _krum
+from .krum import krum_select_from_gram  # noqa: F401  (pure row-space jnp)
 from .krum import multi_krum as _multi_krum
+from .krum import weighted_row_sum as _weighted_row_sum
 
 __all__ = [
     "coordinate_median",
@@ -73,6 +89,11 @@ __all__ = [
     "krum",
     "multi_krum",
     "clip_then_krum",
+    "krum_gram",
+    "krum_select_from_gram",
+    "krum_apply",
+    "weighted_row_sum",
+    "RowSelection",
     "bucketed_coordinate_median",
     "ref",
 ]
@@ -249,6 +270,27 @@ def clip_then_krum(
         reduce_fn=reduce_fn,
         interpret=_interpret(),
     )
+
+
+def krum_gram(xs, reduce_fn=None):
+    """(n, d) -> (n, n) f32 Gram block via the tile-accumulated MXU
+    kernel — phase 1 of the two-phase Krum contract.  ``reduce_fn`` (a
+    psum inside shard_map) turns a chip-local block Gram into the global
+    one; summing the results over parameter leaves gives the whole-tree
+    Gram (the Gram is additive over any coordinate partition)."""
+    gram = _gram_matrix(xs, interpret=_interpret())
+    return reduce_fn(gram) if reduce_fn is not None else gram
+
+
+def krum_apply(xs, selection):
+    """Apply a RowSelection to a coordinate block: the final tile-wise
+    winner row-sum kernel pass (one streaming read, no host gather)."""
+    return _apply_row_selection(xs, selection, interpret=_interpret())
+
+
+def weighted_row_sum(xs, w_row):
+    """(n, d), (n,) -> (d,) f32 tile-wise weighted row-sum kernel."""
+    return _weighted_row_sum(xs, w_row, interpret=_interpret())
 
 
 def bucketed_coordinate_median(xs, key, mask=None, *, s: int = 2):

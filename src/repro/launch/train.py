@@ -25,10 +25,21 @@ per-chip ``Aggregator.clip_then_aggregate`` applies the factors
 in-register (2 HBM streams instead of ~4; with ``cfg.backend="pallas"``
 the per-chip step is the fused Pallas kernel on the all_to_all's
 (W, d/W) block).
+
+Selection rules (krum/multi_krum, plain or bucketed) are WHOLE-TREE on
+the mesh: Algorithm 1 applies the aggregator to the whole message, so a
+per-leaf winner would be a different (per-tensor-robust) estimator.  The
+mesh trainer instead accumulates ONE (W, W) Gram matrix across the
+per-leaf loop via the aggregator's two-phase contract — the Gram is
+additive over leaves, and each leaf's contribution is psum-reduced over
+exactly the axes its coordinates shard over — then selects once and
+applies the winner (or multi-Krum weights) leafwise.  The stacked
+(W, d_total) message never exists as one buffer on any schedule.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import lru_cache, partial
 from typing import NamedTuple, Optional
 
@@ -106,26 +117,10 @@ _AGG_NAMES = {
 }
 
 
-def _make_leaf_agg(cfg: ByzTrainConfig):
-    """Per-chip aggregation over the worker axis, built on the core
-    dispatch layer so every registry rule (and the pallas kernels, under
-    ``cfg.backend``) is available on the mesh.
-
-    The returned ``leaf_agg(leaf, mask, key, factors=None)`` flattens the
-    (W, ...) leaf to the kernels' (n, d) shape; with ``factors`` it routes
-    through ``Aggregator.clip_then_aggregate`` — the fused server step —
-    instead of clip-then-plain-aggregate (no clipped matrix in HBM).
-
-    NOTE the mesh trainer aggregates LEAFWISE (one rule application per
-    parameter tensor, both schedules — longstanding design: the stacked
-    whole-model message never exists as one (W, d) buffer at scale).
-    For selection rules (krum/multi_krum) this means the winner is chosen
-    per leaf, a per-tensor-robust estimator that differs from the
-    simulation engine's whole-message Krum (which ravels the tree); clip
-    factors, by contrast, are whole-tree-global, matching Algorithm 1.
-    Whole-tree selection via cross-leaf Gram accumulation is a ROADMAP
-    item.
-    """
+def _make_mesh_aggregator(cfg: ByzTrainConfig):
+    """Resolve a mesh config to a core-registry ``Aggregator`` (the
+    dispatch layer: every registry rule, pallas kernels under
+    ``cfg.backend``, 'bucket_'-prefixed Bucketing composition)."""
     name = cfg.aggregator
     bucket_s = 0
     if name.startswith("bucket_"):
@@ -142,10 +137,33 @@ def _make_leaf_agg(cfg: ByzTrainConfig):
         kwargs["trim_ratio"] = cfg.trim_ratio
     if name in ("krum", "multi_krum"):
         kwargs["byz_bound"] = cfg.n_byz
-    agg = make_aggregator(
+    return make_aggregator(
         name, bucket_s=bucket_s, backend=cfg.backend, **kwargs
     )
 
+
+def _make_leaf_agg(cfg: ByzTrainConfig):
+    """Per-chip aggregation over the worker axis, built on the core
+    dispatch layer so every registry rule (and the pallas kernels, under
+    ``cfg.backend``) is available on the mesh.
+
+    The returned ``leaf_agg(leaf, mask, key, factors=None)`` flattens the
+    (W, ...) leaf to the kernels' (n, d) shape; with ``factors`` it routes
+    through ``Aggregator.clip_then_aggregate`` — the fused server step —
+    instead of clip-then-plain-aggregate (no clipped matrix in HBM).
+
+    Non-selection rules apply this leafwise (one rule application per
+    parameter tensor — exact for the whole registry given the psum'd row
+    statistics).  Selection rules do NOT go through this per-leaf path in
+    ``robust_aggregate``: they defer the decision across leaves via the
+    aggregator's two-phase contract so the winner is whole-tree (module
+    docstring); ``leaf_agg`` remains the single-leaf semantics used by
+    direct callers and tests.
+    """
+    return _leaf_agg_of(_make_mesh_aggregator(cfg))
+
+
+def _leaf_agg_of(agg):
     def leaf_agg(leaf, mask, key, factors=None, reduce_fn=None):
         mat = leaf.reshape(leaf.shape[0], -1)
         if factors is None:
@@ -210,8 +228,17 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     all_to_all lands a chip-local (W, d/W) block on every chip — exactly
     the fused kernel's input shape, so with ``backend="pallas"`` the mesh
     trainer gets the same 2-stream server step as the simulation engine.
+
+    Selection rules route through the aggregator's two-phase contract
+    instead of the per-leaf rule application: one (W, W) Gram accumulated
+    across the leaf loop (per-leaf psum over each leaf's own shard axes),
+    one whole-tree selection, then the winner/weights applied leafwise —
+    sharded krum matches the engine's whole-message Krum without ever
+    materializing the stacked (W, d_total) message.
     """
-    leaf_agg = _make_leaf_agg(cfg)
+    agg_rule = _make_mesh_aggregator(cfg)
+    leaf_agg = _leaf_agg_of(agg_rule)
+    two_phase = agg_rule.supports_two_phase
     waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
     W = 1
     for a in waxes:
@@ -225,6 +252,22 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         factors = jnp.ones((n_rows,), F32)
 
     if cfg.agg_schedule == "naive" or not waxes:
+        if two_phase:
+            leaves, treedef = jax.tree_util.tree_flatten(tree_w)
+            mats = [l.reshape(l.shape[0], -1) for l in leaves]
+            stats = None
+            for mat in mats:
+                g = agg_rule.accumulate_stats(mat)
+                stats = g if stats is None else stats + g
+            sel = agg_rule.finalize(
+                stats, mask=mask, key=key,
+                factors=factors if use_factors else None,
+            )
+            outs = [
+                agg_rule.apply_selection(mat, sel).reshape(l.shape[1:])
+                for mat, l in zip(mats, leaves)
+            ]
+            return jax.tree_util.tree_unflatten(treedef, outs)
         return jax.tree_util.tree_map(
             lambda l: leaf_agg(
                 l, mask, key, factors=factors if use_factors else None
@@ -241,39 +284,46 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         lambda s: P(wspec, *s), base_specs, is_leaf=lambda x: isinstance(x, P)
     )
 
-    def inner(leaf, mask_in, key_in, factors_in, spec):
-        # fully-manual: leaf is the true per-chip block (1, local dims...)
+    def scatter(leaf):
+        """(1, local dims...) chip block -> the (W, local/W) all_to_all
+        block (the fused kernel's exact input shape)."""
         x = leaf[0]
         shape = x.shape
         flat = x.reshape(-1)  # chip-local: no hidden resharding
         pad = (-flat.shape[0]) % W
         flat = jnp.pad(flat, (0, pad))
-        chunks = flat.reshape(W, -1)
-        sw = chunks
+        sw = flat.reshape(W, -1)
         for ax in waxes:  # all_to_all over each worker axis in turn
             n_ax = mesh.shape[ax]  # static (jax.lax.axis_size needs >= 0.5)
             sw = sw.reshape(n_ax, -1, sw.shape[-1])
             sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
             sw = sw.reshape(-1, sw.shape[-1])
-        # (W, local/W) block: the fused kernel's exact input shape.  This
-        # leaf's coordinates are spread over the worker axes (the chunks)
-        # plus whatever axes its grad spec shards — a psum over exactly
-        # those gives the non-coordinate-wise rules (krum/gm/cclip) their
-        # global row statistics, making the sharded schedule equal to the
-        # naive full-vector semantics for the whole registry.
+        return sw, shape, pad
+
+    def gather(aggd, shape, pad):
+        out = aggd
+        for ax in reversed(waxes):
+            out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+        if pad:
+            out = out[: math.prod(shape)]
+        return out.reshape(shape)
+
+    def inner(leaf, mask_in, key_in, factors_in, spec):
+        # fully-manual: leaf is the true per-chip block (1, local dims...)
+        sw, shape, pad = scatter(leaf)
+        # This leaf's coordinates are spread over the worker axes (the
+        # chunks) plus whatever axes its grad spec shards — a psum over
+        # exactly those gives the non-coordinate-wise rules (gm/cclip)
+        # their global row statistics, making the sharded schedule equal
+        # to the naive full-vector semantics for the whole registry.
         stat_axes = tuple(waxes) + _spec_axes(spec)
         reduce_fn = _psum_reduce(stat_axes)
-        agg = leaf_agg(
+        aggd = leaf_agg(
             sw, mask_in, key_in,
             factors=factors_in if use_factors else None,
             reduce_fn=reduce_fn,
         )  # (flat/W,)
-        out = agg
-        for ax in reversed(waxes):
-            out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
-        if pad:
-            out = out[: x.size]
-        return out.reshape(shape)
+        return gather(aggd, shape, pad)
 
     # every axis referenced by the specs must be marked manual
     referenced = set(waxes)
@@ -293,9 +343,30 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         spec_leaves = jax.tree_util.tree_leaves(
             base_specs, is_leaf=lambda x: isinstance(x, P)
         )
-        outs = [
-            inner(l, m, k, f, sp) for l, sp in zip(leaves, spec_leaves)
-        ]
+        if two_phase:
+            # whole-tree selection: scatter every leaf, accumulate ONE
+            # (W, W) Gram across the leaf loop (additive; per-leaf psum
+            # over that leaf's own shard axes makes each term global),
+            # select once, apply the winner/weights leafwise.
+            scat = [scatter(l) for l in leaves]
+            stats = None
+            for (sw, _, _), sp in zip(scat, spec_leaves):
+                g = agg_rule.accumulate_stats(
+                    sw,
+                    reduce_fn=_psum_reduce(tuple(waxes) + _spec_axes(sp)),
+                )
+                stats = g if stats is None else stats + g
+            sel = agg_rule.finalize(
+                stats, mask=m, key=k, factors=f if use_factors else None
+            )
+            outs = [
+                gather(agg_rule.apply_selection(sw, sel), shape, pad)
+                for (sw, shape, pad) in scat
+            ]
+        else:
+            outs = [
+                inner(l, m, k, f, sp) for l, sp in zip(leaves, spec_leaves)
+            ]
         return jax.tree_util.tree_unflatten(treedef, outs)
 
     smapped = _shard_map(

@@ -81,6 +81,28 @@ def settings(max_examples: int = 10, **_kw):
     return decorate
 
 
+# Profile API subset (hypothesis.settings.register_profile/load_profile):
+# conftest derandomizes property tests under CI=true through it.  The shim
+# draws from a fixed-seed PRNG already — every run is derandomized — so
+# profiles only need to be accepted and recorded, never applied.
+_PROFILES: dict = {}
+_ACTIVE_PROFILE = [None]
+
+
+def _register_profile(name: str, parent=None, **kwargs) -> None:
+    _PROFILES[name] = dict(kwargs)
+
+
+def _load_profile(name: str) -> None:
+    if name not in _PROFILES:
+        raise KeyError(f"hypothesis profile {name!r} was never registered")
+    _ACTIVE_PROFILE[0] = name
+
+
+settings.register_profile = _register_profile
+settings.load_profile = _load_profile
+
+
 def install() -> None:
     """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
     mod = sys.modules[__name__]

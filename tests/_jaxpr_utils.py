@@ -1,0 +1,21 @@
+"""Shared jaxpr-inspection helper for the kernel/mesh structure tests."""
+import jax.extend.core as jex_core
+
+_CORE_TYPES = (jex_core.Jaxpr, jex_core.ClosedJaxpr)
+
+
+def iter_eqns_outside_kernels(jaxpr):
+    """All eqns reachable from ``jaxpr`` WITHOUT descending into
+    pallas_call bodies (whose in-register ops never touch HBM)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        stack = list(eqn.params.values())
+        while stack:
+            v = stack.pop()
+            if isinstance(v, _CORE_TYPES):
+                inner = v.jaxpr if hasattr(v, "jaxpr") else v
+                yield from iter_eqns_outside_kernels(inner)
+            elif isinstance(v, (list, tuple)):
+                stack.extend(v)

@@ -1,0 +1,233 @@
+"""Unit tests for the benchmark regression gate (both tiers), its exit
+codes, the machine-readable JSON verdict and the step-summary markdown —
+the contract the CI workflow's perf-gate job runs on."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.check_regression import (  # noqa: E402
+    EXIT_NO_BASELINE,
+    EXIT_OK,
+    EXIT_REGRESSION,
+    compare,
+    main,
+)
+
+
+def _payload(rows=(), quick=True, **traffic_blocks):
+    p = {
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": ""} for n, us in rows
+        ],
+        "quick": quick,
+    }
+    p.update(traffic_blocks)
+    return p
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / name
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+GATE_KW = dict(tolerance=0.2, noise_ratio=3.0, min_us=500.0)
+
+
+# ---------------------------------------------------------------------------
+# compare(): the two tiers in isolation
+# ---------------------------------------------------------------------------
+
+def test_timing_tier_flags_slowdown_beyond_noise_floor():
+    committed = _payload(rows=[("kernel_a", 1000.0)])
+    fresh = _payload(rows=[("kernel_a", 3500.0)])  # 3.5x > max(1.2, 3.0)
+    timing, traffic = compare(committed, fresh, **GATE_KW)
+    assert [t[0] for t in timing] == ["kernel_a"]
+    assert not traffic
+
+
+def test_timing_tier_tolerates_noise_and_fast_rows():
+    committed = _payload(rows=[("kernel_a", 1000.0), ("kernel_b", 100.0)])
+    # a: 2.5x — above tolerance but under the 3x noise floor
+    # b: 4x but still under the 500us absolute noise floor
+    fresh = _payload(rows=[("kernel_a", 2500.0), ("kernel_b", 400.0)])
+    timing, traffic = compare(committed, fresh, **GATE_KW)
+    assert not timing and not traffic
+
+
+def test_timing_tier_fails_on_vanished_or_zero_rows():
+    committed = _payload(rows=[("kernel_gone", 900.0), ("kernel_zero", 900.0)])
+    fresh = _payload(rows=[("kernel_zero", 0.0)])
+    timing, _ = compare(committed, fresh, **GATE_KW)
+    assert {t[0] for t in timing} == {"kernel_gone", "kernel_zero"}
+
+
+def test_timing_tier_ignores_ref_rows():
+    committed = _payload(rows=[("kernel_a_ref_jnp", 1000.0)])
+    fresh = _payload(rows=[("kernel_a_ref_jnp", 9000.0)])
+    timing, _ = compare(committed, fresh, **GATE_KW)
+    assert not timing
+
+
+def test_traffic_tier_is_deterministic_one_percent():
+    committed = _payload(traffic_model={"fused_bytes": 1000.0})
+    ok = _payload(traffic_model={"fused_bytes": 1009.0})  # within 1%
+    bad = _payload(traffic_model={"fused_bytes": 1020.0})  # 2% growth
+    assert compare(committed, ok, **GATE_KW) == ([], [])
+    _, traffic = compare(committed, bad, **GATE_KW)
+    assert [t[0] for t in traffic] == ["traffic_model.fused_bytes"]
+
+
+def test_traffic_tier_walks_nested_blocks():
+    committed = _payload(
+        traffic_model_iterative={"gm8": {"fused_resident_bytes": 100.0}}
+    )
+    fresh = _payload(
+        traffic_model_iterative={"gm8": {"fused_resident_bytes": 200.0}}
+    )
+    _, traffic = compare(committed, fresh, **GATE_KW)
+    assert [t[0] for t in traffic] == [
+        "traffic_model_iterative.gm8.fused_resident_bytes"
+    ]
+
+
+# ---------------------------------------------------------------------------
+# main(): exit codes, JSON verdict, step summary
+# ---------------------------------------------------------------------------
+
+def test_exit_ok_and_json_verdict(tmp_path):
+    base = _write(tmp_path, "base.json", _payload(rows=[("kernel_a", 1000.0)]))
+    fresh = _write(tmp_path, "fresh.json", _payload(rows=[("kernel_a", 1100.0)]))
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_OK
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "ok"
+    assert v["timing_regressions"] == [] and v["traffic_regressions"] == []
+
+
+def test_exit_regression_on_timing(tmp_path):
+    base = _write(tmp_path, "base.json", _payload(rows=[("kernel_a", 1000.0)]))
+    fresh = _write(tmp_path, "fresh.json", _payload(rows=[("kernel_a", 9000.0)]))
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_REGRESSION
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "regression"
+    assert v["timing_regressions"][0]["name"] == "kernel_a"
+    assert v["timing_regressions"][0]["ratio"] == pytest.approx(9.0)
+
+
+def test_timing_warn_only_demotes_timing_but_not_traffic(tmp_path):
+    base = _write(
+        tmp_path, "base.json",
+        _payload(rows=[("kernel_a", 1000.0)],
+                 traffic_model={"fused_bytes": 1000.0}),
+    )
+    slow = _write(
+        tmp_path, "slow.json",
+        _payload(rows=[("kernel_a", 9000.0)],
+                 traffic_model={"fused_bytes": 1000.0}),
+    )
+    rc = main(["--baseline", base, "--fresh", slow, "--timing-warn-only"])
+    assert rc == EXIT_OK  # timing demoted to a warning
+    unfused = _write(
+        tmp_path, "unfused.json",
+        _payload(rows=[("kernel_a", 1000.0)],
+                 traffic_model={"fused_bytes": 2000.0}),
+    )
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", unfused, "--timing-warn-only",
+               "--json-out", str(verdict)])
+    assert rc == EXIT_REGRESSION  # modeled traffic always hard-fails
+    assert json.loads(verdict.read_text())["status"] == "regression"
+
+
+def test_broken_rows_hard_fail_even_with_timing_warn_only(tmp_path):
+    """A vanished or zeroed committed row is deterministic breakage (a
+    kernel/bench path broke), not timer noise — --timing-warn-only must
+    not demote it, or CI would stay green on a silently broken bench."""
+    base = _write(
+        tmp_path, "base.json",
+        _payload(rows=[("kernel_gone", 900.0), ("kernel_zero", 900.0)]),
+    )
+    fresh = _write(tmp_path, "fresh.json", _payload(rows=[("kernel_zero", 0.0)]))
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh, "--timing-warn-only",
+               "--json-out", str(verdict)])
+    assert rc == EXIT_REGRESSION
+    assert json.loads(verdict.read_text())["status"] == "regression"
+
+
+def test_exit_no_baseline_is_distinct(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", str(tmp_path / "nope.json"), "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_NO_BASELINE
+    assert rc != EXIT_REGRESSION
+    assert json.loads(verdict.read_text())["status"] == "no-baseline"
+
+
+def test_exit_no_baseline_on_corrupt_json(tmp_path):
+    """A truncated/merge-conflicted baseline is 'no usable baseline'
+    (exit 2 + verdict written), never a bare traceback that CI would
+    misread as exit-1 'perf regression'."""
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text('{"rows": [truncated')
+    fresh = _write(tmp_path, "fresh.json", _payload())
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", str(corrupt), "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_NO_BASELINE
+    assert json.loads(verdict.read_text())["status"] == "no-baseline"
+    base = _write(tmp_path, "base.json", _payload())
+    rc = main(["--baseline", base, "--fresh", str(corrupt)])
+    assert rc == EXIT_NO_BASELINE
+
+
+def test_exit_no_baseline_on_size_mismatch(tmp_path):
+    base = _write(tmp_path, "base.json", _payload(quick=False))
+    fresh = _write(tmp_path, "fresh.json", _payload(quick=True))
+    rc = main(["--baseline", base, "--fresh", fresh])
+    assert rc == EXIT_NO_BASELINE
+
+
+def test_step_summary_markdown_table(tmp_path):
+    base = _write(
+        tmp_path, "base.json",
+        _payload(rows=[("kernel_a", 1000.0), ("kernel_b", 1000.0)]),
+    )
+    fresh = _write(
+        tmp_path, "fresh.json",
+        _payload(rows=[("kernel_a", 1100.0), ("kernel_b", 9000.0),
+                       ("kernel_new", 50.0)]),
+    )
+    summary = tmp_path / "summary.md"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--summary-out", str(summary)])
+    assert rc == EXIT_REGRESSION
+    text = summary.read_text()
+    assert "## Kernel perf gate" in text and "**FAIL**" in text
+    assert "| kernel_b | 1000.0 | 9000.0 | 9.00x | **REGRESSION** |" in text
+    assert "new (not gated)" in text
+    # appended, not truncated (GitHub step-summary semantics)
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--summary-out", str(summary)])
+    assert summary.read_text().count("## Kernel perf gate") == 2
+
+
+def test_github_step_summary_env_is_default(tmp_path, monkeypatch):
+    summary = tmp_path / "gh_summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    base = _write(tmp_path, "base.json", _payload(rows=[("kernel_a", 1000.0)]))
+    fresh = _write(tmp_path, "fresh.json", _payload(rows=[("kernel_a", 1000.0)]))
+    assert main(["--baseline", base, "--fresh", fresh]) == EXIT_OK
+    assert "**OK**" in summary.read_text()

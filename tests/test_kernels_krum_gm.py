@@ -9,6 +9,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from _jaxpr_utils import iter_eqns_outside_kernels as _eqns_outside_kernels
+
 from repro.kernels import (
     centered_clip,
     clip_then_centered_clip,
@@ -103,6 +105,125 @@ def test_fused_clip_krum_bucketed_sweep(n, d, s, multi):
         xs, 1.2, mask, idx, byz_bound=1, bucket_s=s, multi=multi
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the on-chip winner gather: tile-wise weighted row-sum pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+def test_weighted_row_sum_sweep(shape, dtype):
+    from repro.kernels.ops import weighted_row_sum
+
+    rng = np.random.RandomState(9 + hash(shape) % 2**31)
+    xs = jnp.asarray(rng.randn(*shape), dtype)
+    w = jnp.asarray(rng.rand(shape[0]).astype(np.float32))
+    out = weighted_row_sum(xs, w)
+    ref = jnp.sum(xs.astype(jnp.float32) * w[:, None], axis=0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref),
+        **(dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16
+           else dict(atol=0, rtol=0)),
+    )
+
+
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+@pytest.mark.parametrize("bucket_s", [1, 3], ids=["flat", "bucketed"])
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("multi", [False, True], ids=["krum", "multikrum"])
+def test_two_phase_selection_matches_fused_one_shot(
+    masked, bucket_s, dtype, multi
+):
+    """gram -> select -> tile-wise apply over SPLIT coordinate blocks must
+    reproduce the one-shot fused kernel on the concatenated matrix — the
+    whole-tree contract the mesh trainer runs on (masks, bucketing, bf16)."""
+    from repro.kernels.ops import (
+        krum_apply, krum_gram, krum_select_from_gram,
+    )
+
+    n, d1, d2 = 9, 130, 517
+    rng = np.random.RandomState(17 * bucket_s + multi)
+    a = jnp.asarray(rng.randn(n, d1), dtype)
+    b = jnp.asarray(rng.randn(n, d2), dtype)
+    xs = jnp.concatenate([a, b], axis=1)
+    mask = _mask(rng, n) if masked else None
+    idx = (
+        jnp.asarray(rng.permutation(n).astype(np.int32))
+        if bucket_s >= 2 else None
+    )
+    factors = jnp.asarray(rng.rand(n).astype(np.float32))
+
+    one, _ = clip_then_krum(
+        xs, 1.2, mask, idx, factors, byz_bound=1, bucket_s=bucket_s,
+        multi=multi,
+    )
+    gram = krum_gram(a) + krum_gram(b)  # Gram is additive over blocks
+    sel, _ = krum_select_from_gram(
+        gram, mask, None, factors, idx, byz_bound=1, bucket_s=bucket_s,
+        multi=multi,
+    )
+    two = jnp.concatenate([krum_apply(a, sel), krum_apply(b, sel)])
+    # identical factors -> identical selection algebra -> identical
+    # per-coordinate apply arithmetic: bitwise, even in bf16
+    np.testing.assert_array_equal(
+        np.asarray(one, np.float32), np.asarray(two, np.float32)
+    )
+
+
+@pytest.mark.parametrize("multi", [False, True], ids=["krum", "multikrum"])
+def test_nonfinite_unsampled_row_cannot_poison_apply_pass(multi):
+    """A byzantine/unsampled row sending inf must not NaN the winner
+    reconstruction: zero-weight rows contribute exactly 0 in the
+    row-combine kernel, never 0 * inf (the row-take this pass replaced
+    never read those rows)."""
+    rng = np.random.RandomState(11)
+    xs = np.asarray(rng.randn(6, 200), np.float32)
+    xs[2] = np.inf  # unsampled row
+    mask = jnp.asarray([1, 1, 0, 1, 1, 1], bool)
+    out, _ = clip_then_krum(
+        jnp.asarray(xs), 1.5, mask, byz_bound=1, multi=multi
+    )
+    assert np.isfinite(np.asarray(out)).all()
+    ref, _ = clip_then_krum_ref(
+        jnp.asarray(xs)[np.asarray(mask)], 1.5, None, byz_bound=1,
+        multi=multi,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("multi", [False, True], ids=["krum", "multikrum"])
+@pytest.mark.parametrize("bucket_s", [1, 2], ids=["flat", "bucketed"])
+def test_winner_reconstruction_is_kernel_pass_not_host_gather(multi, bucket_s):
+    """The fused path's winner reconstruction must be the tile-wise
+    row-sum kernel: outside pallas bodies the jaxpr contains no gather /
+    dynamic-slice producing a d-sized operand (the old host-level row
+    gather), and there are exactly two kernel launches (Gram + apply)."""
+    n, d = 8, 1100
+    rng = np.random.RandomState(0)
+    xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(n).astype(np.int32))
+    jaxpr = jax.make_jaxpr(
+        lambda x, i: clip_then_krum(
+            x, 1.2, None, i, byz_bound=1, bucket_s=bucket_s, multi=multi
+        )[0]
+    )(xs, idx)
+    launches = sum(
+        1
+        for eqn in _eqns_outside_kernels(jaxpr.jaxpr)
+        if eqn.primitive.name == "pallas_call"
+    )
+    assert launches == 2, f"expected Gram + apply launches, got {launches}"
+    bad = [
+        eqn
+        for eqn in _eqns_outside_kernels(jaxpr.jaxpr)
+        if eqn.primitive.name in ("gather", "dynamic_slice")
+        and any(
+            max(getattr(v.aval, "shape", (0,)) or (0,)) >= d
+            for v in eqn.outvars
+        )
+    ]
+    assert not bad, f"host-level d-sized row gather on the fused path: {bad}"
 
 
 def test_fused_krum_lambda_inf_recovers_plain():

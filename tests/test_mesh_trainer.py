@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _jaxpr_utils import iter_eqns_outside_kernels as _iter_eqns_outside_kernels
 from repro.launch.train import ByzTrainConfig, _make_leaf_agg
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -190,24 +191,170 @@ print("EQUIV_OK")
     assert "EQUIV_OK" in r.stdout
 
 
-def _iter_eqns_outside_kernels(jaxpr):
-    """All eqns reachable from ``jaxpr`` WITHOUT descending into
-    pallas_call bodies (whose in-register ops never touch HBM)."""
-    import jax.extend.core as jex_core
+@pytest.mark.slow
+def test_whole_tree_mesh_krum_matches_engine_whole_message_bitwise():
+    """Algorithm 1 applies the robust aggregator to the WHOLE message.
+    The sharded mesh schedule must therefore select ONE whole-tree
+    krum/multi-Krum winner: iterating the server recursion g += Agg(msgs)
+    on an 8-device mesh must reproduce the engine-style whole-message
+    aggregation (Aggregator on the raveled tree) with BITWISE-equal
+    trajectory traces, on both backends, with and without the fused
+    server clip — and the jaxpr must never materialize the stacked
+    (W, d_total) message."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.aggregators import make_aggregator
+from repro.core.clipping import clip_factor
+from repro.core.tree_utils import tree_norm
+from repro.launch.mesh import make_debug_mesh, set_mesh
+from repro.launch.train import ByzTrainConfig, robust_aggregate
 
-    core_types = (jex_core.Jaxpr, jex_core.ClosedJaxpr)
-    for eqn in jaxpr.eqns:
-        yield eqn
-        if eqn.primitive.name == "pallas_call":
-            continue
-        stack = list(eqn.params.values())
-        while stack:
-            v = stack.pop()
-            if isinstance(v, core_types):
-                inner = v.jaxpr if hasattr(v, "jaxpr") else v
-                yield from _iter_eqns_outside_kernels(inner)
-            elif isinstance(v, (list, tuple)):
-                stack.extend(v)
+mesh = make_debug_mesh(4, 2)
+W = 4
+rng = np.random.RandomState(0)
+base = {
+    "a": jnp.asarray(rng.randn(W, 6, 32).astype(np.float32)),
+    "b": {"c": jnp.asarray(rng.randn(W, 17).astype(np.float32))},
+}
+d_total = 6 * 32 + 17
+mask = jnp.asarray([True, True, False, True])
+key = jax.random.PRNGKey(0)
+byz = jnp.arange(W) == 1  # a sampled byzantine sending -3x
+
+@jax.jit
+def messages(g, k):
+    # deterministic worker messages depending on the running estimate so
+    # a single selection mismatch compounds through the whole trace
+    honest = jax.tree_util.tree_map(
+        lambda b, gg: b + 0.3 * gg[None].astype(np.float32), base, g)
+    return jax.tree_util.tree_map(
+        lambda h: jnp.where(
+            byz.reshape((-1,) + (1,) * (h.ndim - 1)), -3.0 * h, h),
+        honest)
+
+@jax.jit
+def gfactors(msgs):
+    # same global per-worker tree-norm clip factors the mesh path
+    # computes (single source of truth with robust_aggregate)
+    return clip_factor(
+        jax.vmap(tree_norm)(msgs), jnp.float32(2.5)
+    ).astype(jnp.float32)
+
+# The aggregation operators are jitted in isolation and the (shared)
+# g += agg recursion runs op-by-op: the claim under test is that the
+# sharded whole-tree aggregation IS the whole-message operator, and
+# jitting whole divergent step programs would let XLA contract the
+# winner-scale multiply into the update add (an fma) differently per
+# program — a 1-ulp artifact of the test harness, not of the operator.
+for backend in ("jnp", "pallas"):
+    for agg_name in ("krum", "multi_krum"):
+        for clip in (True, False):
+            cfg = ByzTrainConfig(aggregator=agg_name, agg_schedule="sharded",
+                                 backend=backend, n_byz=1)
+            eng = make_aggregator(agg_name, backend=backend, byz_bound=1)
+            radius = jnp.float32(2.5) if clip else None
+            jmesh = jax.jit(lambda t, m, k: robust_aggregate(
+                t, m, k, mesh=mesh, cfg=cfg, radius=radius))
+            if clip:
+                jeng = jax.jit(lambda t, m, k, f: eng.clip_then_aggregate(
+                    t, jnp.float32(2.5), mask=m, key=k, factors=f))
+            else:
+                jeng = jax.jit(lambda t, m, k, f: eng(t, mask=m, key=k))
+
+            g1 = jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape[1:]),
+                                        base)
+            g2 = g1
+            tr1, tr2 = [], []
+            with set_mesh(mesh):
+                for t in range(8):
+                    k = jax.random.fold_in(key, t)
+                    m1, m2 = messages(g1, k), messages(g2, k)
+                    a1 = jmesh(m1, mask, k)
+                    a2 = jeng(m2, mask, k, gfactors(m2))
+                    g1 = jax.tree_util.tree_map(lambda a, b: a + b, g1, a1)
+                    g2 = jax.tree_util.tree_map(lambda a, b: a + b, g2, a2)
+                    for g, tr in ((g1, tr1), (g2, tr2)):
+                        tr.append(np.concatenate([
+                            np.asarray(l).ravel()
+                            for l in jax.tree_util.tree_leaves(g)]))
+            assert np.array_equal(np.stack(tr1), np.stack(tr2)), (
+                backend, agg_name, clip,
+                np.abs(np.stack(tr1) - np.stack(tr2)).max())
+            print("BITWISE", backend, agg_name, "clip" if clip else "plain")
+
+# the sharded whole-tree path must never build the stacked message
+cfg = ByzTrainConfig(aggregator="krum", agg_schedule="sharded",
+                     backend="pallas", n_byz=1)
+with set_mesh(mesh):
+    jaxpr = jax.make_jaxpr(
+        lambda t, m, k: robust_aggregate(t, m, k, mesh=mesh, cfg=cfg,
+                                         radius=jnp.float32(2.5))
+    )(base, mask, key)
+bad = [str(v.aval) for eqn in jaxpr.jaxpr.eqns for v in eqn.outvars
+       if getattr(v.aval, "shape", None) == (W, d_total)]
+assert not bad, f"stacked (W, d_total) message materialized: {bad}"
+print("NO_STACKED_BUFFER")
+print("WHOLE_TREE_OK")
+"""
+    r = _run([sys.executable, "-c", script], timeout=540)
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2000:])
+    assert "WHOLE_TREE_OK" in r.stdout
+    assert "NO_STACKED_BUFFER" in r.stdout
+    assert r.stdout.count("BITWISE") == 8  # 2 backends x 2 rules x 2 clip
+
+
+def test_whole_tree_selection_in_process_naive_matches_engine():
+    """Single-device fast check of the same contract: the naive schedule's
+    whole-tree two-phase path equals the engine's whole-message krum on a
+    multi-leaf tree, bitwise, both backends (the sharded variant is the
+    slow subprocess test above)."""
+    from repro.core.aggregators import make_aggregator
+    from repro.core.clipping import clip_factor
+    from repro.core.tree_utils import tree_norm
+    from repro.launch.mesh import make_debug_mesh, set_mesh
+    from repro.launch.train import robust_aggregate
+
+    mesh = make_debug_mesh(1, 1)
+    rng = np.random.RandomState(7)
+    tree = {
+        "a": jnp.asarray(rng.randn(6, 3, 8).astype(np.float32)),
+        "b": {"c": jnp.asarray(rng.randn(6, 17).astype(np.float32))},
+    }
+    mask = jnp.asarray([1, 1, 0, 1, 1, 1], bool)
+    key = jax.random.PRNGKey(0)
+    radius = jnp.float32(2.0)
+    factors = clip_factor(jax.vmap(tree_norm)(tree), radius).astype(
+        jnp.float32
+    )
+    with set_mesh(mesh):
+        for backend in ("jnp", "pallas"):
+            for name in ("krum", "multi_krum", "bucket_krum"):
+                cfg = ByzTrainConfig(
+                    aggregator=name, agg_schedule="naive", backend=backend,
+                    n_byz=1,
+                )
+                got = robust_aggregate(
+                    tree, mask, key, mesh=mesh, cfg=cfg, radius=radius
+                )
+                eng = make_aggregator(
+                    name.replace("bucket_", ""),
+                    bucket_s=2 if name.startswith("bucket_") else 0,
+                    backend=backend, byz_bound=1,
+                )
+                want = eng.clip_then_aggregate(
+                    tree, radius, mask=mask, key=key, factors=factors
+                )
+                for la, lb in zip(
+                    jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want),
+                ):
+                    np.testing.assert_array_equal(
+                        np.asarray(la), np.asarray(lb),
+                        err_msg=f"{backend} {name}",
+                    )
 
 
 def test_sharded_fused_path_jaxpr_no_standalone_clipped_matrix():
