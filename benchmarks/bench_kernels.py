@@ -43,7 +43,20 @@ from repro.kernels.ref import (
 )
 
 HBM_BW = 819e9  # bytes/s (TPU v5e)
+ICI_BW = 90e9  # bytes/s per-chip interconnect (TPU v5e, ~2 usable links)
 BENCH_JSON = "BENCH_kernels.json"
+
+# the 8-fake-device robust_aggregate rows and the gated
+# traffic_model_pipeline block share one problem size (W workers, d
+# coordinates cut into PIPE_BLOCKS superleaf chunks) — a single source
+# of truth so the modeled fused_bytes always corresponds to the
+# measured robust_agg_pipelined row
+PAIR_W = 4
+PIPE_BLOCKS = 4
+
+
+def _pair_d(quick: bool) -> int:
+    return 1 << (12 if quick else 15)
 
 
 def _time(fn, *args, iters=5):
@@ -106,6 +119,70 @@ def traffic_model_krum(n: int, d: int, itemsize: int = 4) -> dict:
         "traffic_reduction": unfused / fused,
         "unfused_tpu_floor_us": _floor_us(unfused),
         "fused_tpu_floor_us": _floor_us(fused),
+    }
+
+
+def traffic_model_krum_apply(n: int, d: int, itemsize: int = 4) -> dict:
+    """The Krum winner-reconstruction (apply) pass in isolation.
+
+    full:   the tile-wise weighted row-sum streams ALL n rows — required
+            for multi-Krum weights and bucketed winner means.
+    onehot: plain (unbucketed) Krum's combination is one-hot, so the
+            scalar-prefetch ``select_row`` kernel streams ONLY the winner
+            row's tiles — d bytes read instead of n*d, plus the (d,)
+            output either way.
+    """
+    out = d * itemsize
+    full = n * d * itemsize + out
+    onehot = d * itemsize + out
+    return {
+        "n": n, "d": d,
+        "full_bytes": full,
+        "fused_bytes": onehot,  # gated: losing the fast path grows this
+        "traffic_reduction": full / onehot,
+        "full_tpu_floor_us": _floor_us(full),
+        "onehot_tpu_floor_us": _floor_us(onehot),
+    }
+
+
+def traffic_model_pipeline(n_blocks: int, chunk: int, W: int,
+                           itemsize: int = 4,
+                           rule_streams: int = 2) -> dict:
+    """Modeled steady-state cost of the sharded server step's block loop
+    (launch/train.py ``robust_aggregate``), per chip.
+
+    Per uniform superleaf block of ``chunk`` coordinates: the all_to_all
+    scatter + all_gather move ~2 * chunk * (W-1)/W words over the
+    interconnect, and the fused clip->aggregate kernel streams the
+    (W, chunk/W) block ``rule_streams`` times from HBM (2 for the
+    CM/TM/Krum fused paths).
+
+    sequential: every block pays comm + compute back to back —
+                n_blocks * (comm + compute).
+    pipelined:  the double-buffered schedule issues block i+1's scatter
+                while block i's kernel runs: prologue comm + (n_blocks-1)
+                * max(comm, compute) steady state + epilogue compute.
+                Steady-state block cost ~ max(comm, compute) instead of
+                comm + compute.
+    """
+    comm_bytes = 2.0 * chunk * (W - 1) / W * itemsize
+    compute_bytes = float(rule_streams) * chunk * itemsize
+    comm_us = comm_bytes / ICI_BW * 1e6
+    compute_us = compute_bytes / HBM_BW * 1e6
+    seq = n_blocks * (comm_us + compute_us)
+    pipe = comm_us + (n_blocks - 1) * max(comm_us, compute_us) + compute_us
+    return {
+        "n_blocks": n_blocks, "chunk": chunk, "W": W,
+        "comm_bytes_per_block": comm_bytes,
+        "compute_bytes_per_block": compute_bytes,
+        "fused_bytes": n_blocks * compute_bytes,  # gated: un-fusing grows it
+        "comm_us_per_block": comm_us,
+        "compute_us_per_block": compute_us,
+        "sequential_block_us": comm_us + compute_us,
+        "steady_state_block_us": max(comm_us, compute_us),
+        "sequential_step_us": seq,
+        "pipelined_step_us": pipe,
+        "overlap_speedup": seq / pipe,
     }
 
 
@@ -282,7 +359,7 @@ def run(quick: bool = False, out_json: str = BENCH_JSON):
     )
     # the on-chip winner gather pass in isolation (one matrix stream);
     # jitted here — in production it is traced inside the fused pipeline
-    from repro.kernels.ops import weighted_row_sum
+    from repro.kernels.ops import select_row, weighted_row_sum
 
     w_row = jnp.asarray(rng.rand(n).astype(np.float32))
     us_apply = _time(jax.jit(weighted_row_sum), xs, w_row)
@@ -291,6 +368,20 @@ def run(quick: bool = False, out_json: str = BENCH_JSON):
             "kernel_krumapply_pallas_interp",
             us_apply,
             f"tpu_floor_us={_floor_us(n * d * 4 + d * 4):.1f}",
+        )
+    )
+    # plain Krum's one-hot apply: the scalar-prefetch select_row kernel
+    # streams only the winner row's tiles — d bytes instead of n*d
+    tma = traffic_model_krum_apply(n, d)
+    us_onehot = _time(
+        jax.jit(select_row), xs, jnp.int32(3), jnp.float32(0.5)
+    )
+    rows.append(
+        (
+            "kernel_krumapply_onehot_pallas_interp",
+            us_onehot,
+            f"tpu_floor_us={tma['onehot_tpu_floor_us']:.1f};"
+            f"traffic_x{tma['traffic_reduction']:.2f}",
         )
     )
 
@@ -343,7 +434,14 @@ def run(quick: bool = False, out_json: str = BENCH_JSON):
         ],
         "traffic_model": tm,
         "traffic_model_krum": tmk,
+        "traffic_model_krum_apply": tma,
         "traffic_model_iterative": {"cclip5": tmc, "gm8": tmi},
+        # the mesh trainer's block loop, at the exact problem size the
+        # robust_agg_*_8dev subprocess rows measure
+        "traffic_model_pipeline": traffic_model_pipeline(
+            n_blocks=PIPE_BLOCKS, chunk=_pair_d(quick) // PIPE_BLOCKS,
+            W=PAIR_W,
+        ),
         "quick": quick,
     }
     with open(out_json, "w") as f:
@@ -367,11 +465,21 @@ tree = {"g": jnp.asarray(rng.randn(4, d).astype(np.float32))}
 mask = jnp.asarray([True, True, False, True])
 key = jax.random.PRNGKey(0)
 rows = []
+configs = [
+    ("naive", ByzTrainConfig(aggregator="cm", agg_schedule="naive",
+                             backend="pallas")),
+    ("sharded", ByzTrainConfig(aggregator="cm", agg_schedule="sharded",
+                               backend="pallas")),
+    # the double-buffered schedule over uniform superleaf chunks — the
+    # perf gate exercises the pipelined path on every PR
+    ("pipelined", ByzTrainConfig(aggregator="cm", agg_schedule="sharded",
+                                 schedule="pipelined",
+                                 superleaf_elems=d // 4,
+                                 backend="pallas")),
+]
 with set_mesh(mesh):
     tree = jax.device_put(tree, NamedSharding(mesh, P("data")))
-    for sched in ("naive", "sharded"):
-        cfg = ByzTrainConfig(aggregator="cm", agg_schedule=sched,
-                             backend="pallas")
+    for sched, cfg in configs:
         fn = jax.jit(lambda t, m, k: robust_aggregate(
             t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(1.5)))
         jax.block_until_ready(fn(tree, mask, key))  # compile
@@ -392,7 +500,7 @@ def _sharded_pair_rows(quick: bool):
     import subprocess
     import sys
 
-    d = 1 << (12 if quick else 15)
+    d = _pair_d(quick)
     env = dict(os.environ)
     env["PYTHONPATH"] = "src" + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
@@ -413,15 +521,28 @@ def _sharded_pair_rows(quick: bool):
         # silently-skipped rename
         return [
             (f"robust_agg_{sched}_fused_8dev", 0.0, "SKIP(subprocess failed)")
-            for sched in ("naive", "sharded")
+            for sched in ("naive", "sharded", "pipelined")
         ]
-    W, shard = 4, d // 8
-    coll = {"naive": W * shard * 4, "sharded": 2 * shard * 4}
+    W, shard = PAIR_W, d // 8
+    coll = {
+        "naive": W * shard * 4,
+        "sharded": 2 * shard * 4,
+        "pipelined": 2 * shard * 4,
+    }
+    tmp = traffic_model_pipeline(n_blocks=PIPE_BLOCKS,
+                                 chunk=d // PIPE_BLOCKS, W=W)
+    derived = {
+        sched: f"W=4;d={d};coll_bytes_per_chip={coll[sched]}"
+        for sched in coll
+    }
+    # the pipelined row carries the modeled overlap: steady-state block
+    # cost max(comm, compute) vs the sequential comm + compute
+    derived["pipelined"] += (
+        f";model_seq_us={tmp['sequential_step_us']:.2f}"
+        f";model_pipe_us={tmp['pipelined_step_us']:.2f}"
+        f";model_overlap_x{tmp['overlap_speedup']:.2f}"
+    )
     return [
-        (
-            f"robust_agg_{sched}_fused_8dev",
-            us,
-            f"W=4;d={d};coll_bytes_per_chip={coll[sched]}",
-        )
+        (f"robust_agg_{sched}_fused_8dev", us, derived[sched])
         for sched, us in pairs
     ]

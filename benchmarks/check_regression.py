@@ -4,9 +4,19 @@ Runs a fresh ``--smoke``-sized kernel benchmark and diffs it against the
 committed ``BENCH_kernels.json``.  Two tiers:
 
 - **traffic models** (deterministic): any >1% increase in modeled fused
-  HBM bytes — someone un-fused a path — fails immediately.  This is the
-  trustworthy PR-over-PR perf trajectory on a CPU-only container, so it
-  always hard-fails, even under ``--timing-warn-only``.
+  HBM bytes — someone un-fused a path — fails immediately, as does a
+  committed traffic-model key VANISHING from the fresh run (the
+  protection it encoded would otherwise evaporate silently).  This is
+  the trustworthy PR-over-PR perf trajectory on a CPU-only container,
+  so it always hard-fails, even under ``--timing-warn-only``.
+Rows (and traffic-model blocks) present in the fresh run but absent
+from the committed baseline are NEWLY ADDED — they are reported as
+informational (``new_rows`` / ``new_traffic_models`` in the JSON
+verdict, "new (not gated)" in the summary) and never fail the gate:
+a PR that adds a bench row must not need a chicken-and-egg baseline
+update to go green.  They start being gated once the baseline is
+regenerated with them in it.
+
 - **wall-clock rows**: fail on a per-kernel slowdown beyond
   ``--tolerance`` (default 20%).  Interpret-mode timings on this
   container's shared vCPU jitter up to ~2.5x between processes, so the
@@ -115,11 +125,18 @@ def compare(committed: dict, fresh: dict, *, tolerance: float,
         for name in sorted(set(t_old) & set(t_new))
         if t_new[name] > t_old[name] * 1.01
     ]
+    # a committed traffic-model key that vanishes from the fresh run is
+    # the same deterministic breakage as a vanished timing row: the
+    # un-fusing protection it encoded would otherwise evaporate silently
+    traffic += [
+        (name, t_old[name], 0.0, 0.0)
+        for name in sorted(set(t_old) - set(t_new))
+    ]
     return timing, traffic
 
 
 def _verdict_payload(status, *, timing=(), traffic=(), timing_warn_only=False,
-                     detail=""):
+                     detail="", new_rows=(), new_traffic=()):
     """The machine-readable verdict written by --json-out."""
     return {
         "status": status,  # "ok" | "regression" | "no-baseline"
@@ -133,6 +150,11 @@ def _verdict_payload(status, *, timing=(), traffic=(), timing_warn_only=False,
             {"name": n, "committed_bytes": o, "fresh_bytes": f, "ratio": r}
             for n, o, f, r in traffic
         ],
+        # newly-added rows/blocks with no baseline counterpart:
+        # informational only, never a failure (they become gated once
+        # the baseline is regenerated with them)
+        "new_rows": list(new_rows),
+        "new_traffic_models": list(new_traffic),
     }
 
 
@@ -334,7 +356,13 @@ def main(argv=None) -> int:
                   "intentional kernel removal)")
     added = sorted(set(new) - set(old))
     if added:
-        print(f"[check_regression] new rows (not gated): {added}")
+        print(f"[check_regression] new rows (informational, not gated): "
+              f"{added}")
+    t_old, t_new = _traffic_models(committed), _traffic_models(fresh)
+    added_traffic = sorted(set(t_new) - set(t_old))
+    if added_traffic:
+        print("[check_regression] new traffic models (informational, not "
+              f"gated): {added_traffic}")
 
     # vanished/zeroed rows are deterministic breakage (a kernel or bench
     # path broke) — never demotable to a warning, unlike noisy slowdowns
@@ -347,6 +375,7 @@ def main(argv=None) -> int:
     _write_json(args.json_out, _verdict_payload(
         status, timing=timing, traffic=traffic,
         timing_warn_only=args.timing_warn_only,
+        new_rows=added, new_traffic=added_traffic,
     ))
     _write_summary(args.summary_out, _summary_markdown(
         committed, fresh, slow, broken, traffic, tolerance=args.tolerance,

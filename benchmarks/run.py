@@ -7,9 +7,11 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
 ``--smoke`` (CI entry) is shorthand for ``--quick --only kernels``: it
 exercises every Pallas kernel — including the fused clip->aggregate server
 step for the whole aggregator registry (CM/TM/mean, Krum, centered-clip,
-Weiszfeld GM) and the sharded-vs-naive robust_aggregate pair — in
-interpret mode and writes ``BENCH_kernels.json`` for the perf trajectory
-(rendered by benchmarks/report.py).
+Weiszfeld GM), the one-hot winner-row fast path, and the
+naive/sharded/PIPELINED robust_aggregate triple (so the double-buffered
+schedule is compiled and timed on every PR) — in interpret mode and
+writes ``BENCH_kernels.json`` for the perf trajectory (rendered by
+benchmarks/report.py).
 
 ``--check-regression`` additionally diffs the freshly written
 ``BENCH_kernels.json`` against the committed one BEFORE overwriting it

@@ -65,6 +65,15 @@ def main():
     # clip never materializes a clipped message tree in HBM.
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "jnp", "pallas"])
+    # Inner block schedule of the sharded aggregation: "pipelined" is the
+    # double-buffered scatter/aggregate pipeline (block i+1's all_to_all
+    # in flight while block i's kernel runs) — bitwise-equal to
+    # "sequential".  --superleaf-elems > 0 packs the message pytree into
+    # uniform chunks of that many coordinates so the pipeline runs over
+    # same-shape blocks (one uniform kernel dispatch per chunk).
+    ap.add_argument("--schedule", default="sequential",
+                    choices=["sequential", "pipelined"])
+    ap.add_argument("--superleaf-elems", type=int, default=0)
     args = ap.parse_args()
 
     cfg = build_config(args.smoke)
@@ -83,6 +92,8 @@ def main():
         use_clipping=True,
         clip_alpha=2.0,
         backend=args.backend,
+        schedule=args.schedule,
+        superleaf_elems=args.superleaf_elems,
     )
     step_fn = make_train_step(cfg, mesh, tc)
 

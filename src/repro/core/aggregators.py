@@ -46,9 +46,15 @@ matrix:
 (additive over any coordinate partition), ``finalize`` runs the shared
 selection algebra once on the total, and ``apply_selection`` applies the
 resulting row combination to each block (on the pallas backend: the
-tile-wise winner row-sum kernel).  ``Aggregator.supports_two_phase``
-reports availability; ``clip_then_aggregate`` remains the one-shot
-equivalent for a single matrix.
+tile-wise winner row-sum kernel, or — for plain unbucketed Krum, whose
+combination is one-hot — the scalar-prefetch single-row kernel that
+streams only the winner row).  Both phases also consume PACKED CHUNK
+LISTS (``tree_utils.tree_superleaf_pack``): ``accumulate_stats`` of a
+list sums the chunks' Grams in order, ``apply_selection`` of a list
+returns the per-chunk outputs — the layout the pipelined mesh schedule
+runs on.  ``Aggregator.supports_two_phase`` reports availability;
+``clip_then_aggregate`` remains the one-shot equivalent for a single
+matrix.
 """
 from __future__ import annotations
 
@@ -373,11 +379,15 @@ class Aggregator:
         """Phase 1: the selection statistics contribution of one (n, d)
         coordinate block — for Krum rules the (n, n) Gram, which is
         additive over any coordinate partition of the message, so the
-        caller sums the returns across its blocks.  ``reduce_fn`` (a psum
-        inside shard_map) makes a chip-local block's contribution
+        caller sums the returns across its blocks.  ``xs`` may also be a
+        LIST of packed chunks (``tree_superleaf_pack``): the chunks'
+        contributions are accumulated in list order.  ``reduce_fn`` (a
+        psum inside shard_map) makes a chip-local block's contribution
         global."""
         self._require_two_phase()
-        return self.stats_fn(xs, reduce_fn=reduce_fn)
+        return _kops.accumulate_stats_blocks(
+            self.stats_fn, xs, reduce_fn=reduce_fn
+        )
 
     def finalize(self, stats, mask=None, key=None, radius=None,
                  factors=None):
@@ -396,10 +406,13 @@ class Aggregator:
 
     def apply_selection(self, xs, selection):
         """Phase 3: apply the finalized row combination to one (n, d)
-        coordinate block (pallas: the tile-wise winner row-sum kernel).
-        Whole-message aggregate = concat over blocks of the returns."""
+        coordinate block (pallas: the tile-wise winner row-sum kernel,
+        or the single-row scalar-prefetch kernel for plain Krum's
+        one-hot combination), or to a LIST of packed chunks (returns the
+        per-chunk outputs).  Whole-message aggregate = concat over
+        blocks of the returns."""
         self._require_two_phase()
-        return self.apply_fn(xs, selection)
+        return _kops.apply_selection_blocks(self.apply_fn, xs, selection)
 
 
 def mean() -> Aggregator:
@@ -561,9 +574,12 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
     row-sum kernel."""
     bs = max(bucket_s, 1)
 
+    onehot = _kops.selection_is_onehot(multi, bs)
     if pallas:
         stats_fn = _kops.krum_gram
-        apply_fn = _kops.krum_apply
+        # plain unbucketed Krum's combination is one-hot: the apply pass
+        # streams only the winner row (scalar-prefetch select_row kernel)
+        apply_fn = partial(_kops.krum_apply, onehot=onehot)
     else:
         def stats_fn(xs, reduce_fn=None):
             x32 = xs.astype(jnp.float32)
@@ -572,7 +588,7 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
 
         def apply_fn(xs, sel):
             x32 = xs.astype(jnp.float32)
-            if not multi and bs < 2:
+            if onehot:
                 # exact dynamic row-take: bitwise-identical to the
                 # one-shot jnp rule's clipped[winner]
                 take = jnp.take(x32, sel.winner, axis=0) * sel.scale

@@ -15,6 +15,7 @@ __all__ = [
     "tree_ravel",
     "tree_unravel",
     "tree_batch_ravel",
+    "tree_superleaf_pack",
     "tree_add",
     "tree_sub",
     "tree_scale",
@@ -100,6 +101,109 @@ def tree_batch_ravel(tree):
         return jax.tree_util.tree_unflatten(treedef, out)
 
     return mat, unravel_row
+
+
+def tree_superleaf_pack(tree, chunk_elems: int, *, group_ids=None):
+    """Pack a worker-stacked pytree into UNIFORM (n, chunk_elems) chunks.
+
+    ``tree_batch_ravel`` flattens the tree into one ragged-width (n, d)
+    buffer; this is its fixed-width sibling for pipelined schedules: the
+    per-leaf coordinate spans are concatenated (per group, see below) and
+    re-cut into equal ``chunk_elems``-column chunks, zero-padding only the
+    final chunk of each group.  Every chunk then has the same shape, so a
+    per-chunk kernel/collective pipeline runs one uniform dispatch per
+    chunk instead of one ragged launch per tensor, and a double-buffered
+    schedule needs exactly one buffer shape.
+
+    Zero-padding is aggregation-neutral for every registry rule: a
+    coordinate where all workers hold 0 aggregates to 0 under the
+    coordinate-wise rules, contributes 0 to Gram/norm/distance row
+    statistics, and is sliced off again by ``unpack``.
+
+    ``group_ids`` (optional, aligned with the flattened leaves) keeps
+    leaves with different ids in different chunks — the mesh trainer
+    groups by shard axes so each chunk has ONE well-defined cross-shard
+    psum.  Leaves sharing an id are packed in flatten order; ``None``
+    packs the whole tree as one group.  Leaves are ALWAYS additionally
+    split by dtype: a bf16 leaf never gets up-cast into an f32 chunk
+    (that would double its streamed bytes and change the reference
+    backend's arithmetic), so every chunk carries exactly one dtype and
+    per-leaf aggregation arithmetic is preserved bit-for-bit.
+
+    Returns ``(chunks, chunk_groups, unpack)``: ``chunks`` is a list of
+    (n, chunk_elems) matrices (one dtype each), ``chunk_groups``
+    the group id of each chunk, and ``unpack(rows)`` maps the list of
+    per-chunk aggregated row vectors (chunk_elems,) back to the pytree
+    of per-leaf shapes (worker axis dropped, original dtypes restored).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("tree_superleaf_pack: empty pytree")
+    if chunk_elems < 1:
+        raise ValueError(f"chunk_elems must be >= 1, got {chunk_elems}")
+    n = leaves[0].shape[0]
+    for l in leaves:
+        if l.shape[0] != n:
+            raise ValueError(
+                f"leading worker axes disagree: {l.shape[0]} != {n}"
+            )
+    if group_ids is None:
+        group_ids = [None] * len(leaves)
+    if len(group_ids) != len(leaves):
+        raise ValueError(
+            f"group_ids length {len(group_ids)} != {len(leaves)} leaves"
+        )
+    shapes = [l.shape[1:] for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+
+    groups = {}  # (id, dtype) -> leaf indices, first-appearance order
+    for i, gid in enumerate(group_ids):
+        groups.setdefault((gid, jnp.dtype(dtypes[i]).name), []).append(i)
+
+    chunks, chunk_groups, metas = [], [], []
+    for (gid, _dt), idxs in groups.items():
+        mat = jnp.concatenate(
+            [leaves[i].reshape(n, -1) for i in idxs], axis=1
+        )
+        width = mat.shape[1]
+        pad = (-width) % chunk_elems
+        if pad:
+            mat = jnp.pad(mat, ((0, 0), (0, pad)))
+        n_chunks = mat.shape[1] // chunk_elems
+        for c in range(n_chunks):
+            chunks.append(mat[:, c * chunk_elems : (c + 1) * chunk_elems])
+        chunk_groups.extend([gid] * n_chunks)
+        metas.append((idxs, width, n_chunks))
+
+    def unpack(rows):
+        if len(rows) != len(chunks):
+            raise ValueError(
+                f"unpack expects {len(chunks)} rows, got {len(rows)}"
+            )
+        out = [None] * len(leaves)
+        off = 0
+        for idxs, width, n_chunks in metas:
+            if n_chunks:
+                flat = jnp.concatenate(
+                    [jnp.ravel(r) for r in rows[off : off + n_chunks]]
+                )[:width]
+            else:
+                # a group whose every leaf is size 0 packs to no chunks;
+                # its leaves unpack to empty arrays
+                flat = jnp.zeros((0,), jnp.float32)
+            off += n_chunks
+            pos = 0
+            for i in idxs:
+                out[i] = (
+                    flat[pos : pos + sizes[i]]
+                    .reshape(shapes[i])
+                    .astype(dtypes[i])
+                )
+                pos += sizes[i]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return chunks, chunk_groups, unpack
 
 
 def tree_add(a, b):

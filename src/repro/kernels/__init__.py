@@ -17,6 +17,7 @@ from .ops import (  # noqa: F401
     krum_gram,
     krum_select_from_gram,
     multi_krum,
+    select_row,
     trimmed_mean,
     weighted_row_sum,
 )

@@ -51,6 +51,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .centered_clip import _pad_bucket_aux
 from .clip_aggregate import clip_factor
@@ -177,6 +178,59 @@ def weighted_row_sum(xs, w_row, *, interpret: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# the single-row fast path: scalar-prefetch winner-row stream
+# ---------------------------------------------------------------------------
+
+def _select_row_kernel(row_ref, scale_ref, x_ref, o_ref):
+    # x_ref's block is (1, TILE_D): the index_map below uses the
+    # scalar-prefetched winner index as the ROW block coordinate, so the
+    # DMA engine only ever streams the winner row's tiles — d bytes
+    # instead of the n*d a full weighted_row_sum pass reads.
+    x = x_ref[...].astype(F32)
+    s = scale_ref[0]
+    # same non-finite guard as _row_combine_kernel: a zero clip factor
+    # must produce exactly 0 even if a byzantine winner row carries inf
+    o_ref[...] = jnp.where(s != 0.0, x * s, 0.0)
+
+
+def select_row(xs, winner, scale, *, interpret: bool = False):
+    """(n, d), () int32, () f32 -> (d,) f32: stream ONLY row ``winner``'s
+    tiles (scaled by ``scale``) via a scalar-prefetch index_map.
+
+    This is the plain (unbucketed) Krum apply pass: the selection is a
+    one-hot row combination, so streaming the other n-1 rows through
+    ``weighted_row_sum`` just multiplies them by zero.  The winner index
+    is prefetched into SMEM before the grid runs and used as the row
+    block coordinate, cutting the apply pass from n*d to d streamed
+    bytes.  Bitwise-equal to the one-hot ``weighted_row_sum`` (both
+    compute x[winner] * scale in f32 with the same zero-factor guard).
+    """
+    n = xs.shape[0]
+    xp, pad = _pad_to(xs, TILE_D, axis=1)
+    grid = xp.shape[1] // TILE_D
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_D), lambda i, row, scale: (row[0], i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_D), lambda i, row, scale: (0, i)),
+    )
+    out = pl.pallas_call(
+        _select_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, xp.shape[1]), F32),
+        interpret=interpret,
+    )(
+        jnp.clip(winner, 0, n - 1).astype(jnp.int32).reshape(1),
+        scale.astype(F32).reshape(1),
+        xp,
+    )
+    out = out[0]
+    return out[: xs.shape[1]] if pad else out
+
+
+# ---------------------------------------------------------------------------
 # selection as (n, n) algebra — phase 2 of the two-phase contract
 # ---------------------------------------------------------------------------
 
@@ -209,6 +263,15 @@ def _bucket_operator(bucket_idx, mask_f, factors, n_p, s):
     cnt = jnp.sum(e, axis=1)  # (nb,)
     m_op = e * factors[None, :] / jnp.maximum(cnt, 1.0)[:, None]
     return m_op, cnt
+
+
+def selection_is_onehot(multi: bool, bucket_s: int) -> bool:
+    """Whether ``krum_select_from_gram``'s row combination is one-hot —
+    plain (unbucketed, non-multi) Krum.  THE static predicate gating the
+    ``select_row`` single-row fast path; every caller must use it so a
+    future selection variant cannot leave a stale copy claiming a
+    multi-row combination is one-hot."""
+    return (not multi) and bucket_s < 2
 
 
 def krum_select_from_gram(
@@ -307,11 +370,22 @@ def krum_select_from_gram(
 
 
 def apply_row_selection(xs, selection: RowSelection, *,
-                        interpret: bool = False):
+                        onehot: bool = False, interpret: bool = False):
     """Apply a RowSelection to a coordinate block sharing its row space:
     the final tile-wise kernel pass of the fused Krum path (one streaming
-    read of ``xs``, combination in-register)."""
-    out = weighted_row_sum(xs, selection.weights, interpret=interpret)
+    read of ``xs``, combination in-register).
+
+    ``onehot=True`` (valid exactly when the selection is plain unbucketed
+    Krum's one-hot combination — the caller knows this statically from
+    ``multi``/``bucket_s``) takes the single-row fast path: the
+    scalar-prefetch ``select_row`` kernel streams only the winner row's
+    tiles, d bytes instead of n*d, with bitwise-identical output."""
+    if onehot:
+        out = select_row(
+            xs, selection.winner, selection.scale, interpret=interpret
+        )
+    else:
+        out = weighted_row_sum(xs, selection.weights, interpret=interpret)
     return (out / selection.denom).astype(xs.dtype)
 
 
@@ -363,7 +437,12 @@ def clip_then_krum(
         byz_bound=byz_bound, m_select=m_select, multi=multi,
         bucket_s=bucket_s, use_clip=use_clip,
     )
-    out = apply_row_selection(xs, selection, interpret=interpret)
+    # plain unbucketed Krum's combination is one-hot: stream only the
+    # winner row (d bytes) instead of all n rows
+    out = apply_row_selection(
+        xs, selection, onehot=selection_is_onehot(multi, bucket_s),
+        interpret=interpret,
+    )
     return out, norms
 
 

@@ -40,10 +40,17 @@ Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
   Krum/multi-Krum additionally export the TWO-PHASE selection contract
   (whole-tree selection across a per-leaf loop): ``krum_gram`` per
   coordinate block, SUM the (n, n) Grams (the Gram is additive over any
-  coordinate partition — leaves, shards), ``krum_select_from_gram`` once
-  on the total, then ``krum_apply`` (the tile-wise winner row-sum
-  kernel) per block.  ``clip_then_krum`` is that pipeline for a single
-  matrix; winner reconstruction never gathers rows on the host.
+  coordinate partition — leaves, shards, superleaf chunks), then
+  ``krum_select_from_gram`` once on the total and ``krum_apply`` (the
+  tile-wise winner row-sum kernel) per block.  Both phases also consume
+  PACKED CHUNK LISTS (the ``tree_superleaf_pack`` layout the pipelined
+  mesh schedule runs on): ``krum_gram`` of a list accumulates the blocks'
+  Grams in order, ``krum_apply`` of a list applies the selection per
+  chunk.  Plain (unbucketed) Krum's apply is a one-hot combination, so
+  ``krum_apply(..., onehot=True)`` takes the scalar-prefetch
+  ``select_row`` kernel that streams ONLY the winner row's tiles — d
+  bytes instead of n*d.  ``clip_then_krum`` is that pipeline for a
+  single matrix; winner reconstruction never gathers rows on the host.
 - ``backend="auto"``   — picks ``pallas`` iff ``jax.default_backend()`` is
   TPU (where the tiling pays off), else ``jnp``.  On CPU the pallas choice
   still *works* (interpret mode) and is what the equivalence tests use.
@@ -75,6 +82,8 @@ from .krum import gram_matrix as _gram_matrix
 from .krum import krum as _krum
 from .krum import krum_select_from_gram  # noqa: F401  (pure row-space jnp)
 from .krum import multi_krum as _multi_krum
+from .krum import select_row as _select_row
+from .krum import selection_is_onehot  # noqa: F401  (re-exported)
 from .krum import weighted_row_sum as _weighted_row_sum
 
 __all__ = [
@@ -92,6 +101,10 @@ __all__ = [
     "krum_gram",
     "krum_select_from_gram",
     "krum_apply",
+    "select_row",
+    "selection_is_onehot",
+    "accumulate_stats_blocks",
+    "apply_selection_blocks",
     "weighted_row_sum",
     "RowSelection",
     "bucketed_coordinate_median",
@@ -272,20 +285,75 @@ def clip_then_krum(
     )
 
 
+def accumulate_stats_blocks(stats_fn, xs, reduce_fn=None):
+    """THE chunk-list adapter for two-phase phase 1: run ``stats_fn``
+    over one (n, d) block, or accumulate it in list order over a packed
+    chunk list (the ``tree_superleaf_pack`` layout).  Shared by the
+    dispatch-layer ``krum_gram`` and ``Aggregator.accumulate_stats`` so
+    the two layers' chunk semantics cannot diverge."""
+    if isinstance(xs, (list, tuple)):
+        stats = None
+        for block in xs:
+            g = stats_fn(block, reduce_fn=reduce_fn)
+            stats = g if stats is None else stats + g
+        if stats is None:
+            raise ValueError("accumulate_stats: empty chunk list")
+        return stats
+    return stats_fn(xs, reduce_fn=reduce_fn)
+
+
+def apply_selection_blocks(apply_fn, xs, selection):
+    """Chunk-list adapter for two-phase phase 3: apply a finalized
+    selection to one block, or per-chunk over a packed list (returns the
+    per-chunk outputs).  Shared by ``krum_apply`` and
+    ``Aggregator.apply_selection``."""
+    if isinstance(xs, (list, tuple)):
+        return [apply_fn(block, selection) for block in xs]
+    return apply_fn(xs, selection)
+
+
+def _krum_gram_one(xs, reduce_fn=None):
+    gram = _gram_matrix(xs, interpret=_interpret())
+    return reduce_fn(gram) if reduce_fn is not None else gram
+
+
 def krum_gram(xs, reduce_fn=None):
     """(n, d) -> (n, n) f32 Gram block via the tile-accumulated MXU
     kernel — phase 1 of the two-phase Krum contract.  ``reduce_fn`` (a
     psum inside shard_map) turns a chip-local block Gram into the global
     one; summing the results over parameter leaves gives the whole-tree
-    Gram (the Gram is additive over any coordinate partition)."""
-    gram = _gram_matrix(xs, interpret=_interpret())
-    return reduce_fn(gram) if reduce_fn is not None else gram
+    Gram (the Gram is additive over any coordinate partition).
+
+    ``xs`` may also be a LIST of packed coordinate chunks (the
+    ``tree_superleaf_pack`` layout): the chunks' Grams are accumulated in
+    list order, one kernel launch per chunk."""
+    return accumulate_stats_blocks(_krum_gram_one, xs, reduce_fn=reduce_fn)
 
 
-def krum_apply(xs, selection):
-    """Apply a RowSelection to a coordinate block: the final tile-wise
-    winner row-sum kernel pass (one streaming read, no host gather)."""
-    return _apply_row_selection(xs, selection, interpret=_interpret())
+def krum_apply(xs, selection, *, onehot: bool = False):
+    """Apply a RowSelection to a coordinate block (or a list of packed
+    chunks — one apply pass per chunk): the final tile-wise winner
+    row-sum kernel pass (one streaming read, no host gather).
+
+    ``onehot=True`` — valid exactly when the caller statically knows the
+    selection is plain unbucketed Krum's one-hot combination
+    (``selection_is_onehot``) — streams only the winner row's tiles via
+    the scalar-prefetch ``select_row`` kernel (d bytes instead of n*d),
+    bitwise-equal to the full pass."""
+    return apply_selection_blocks(
+        lambda block, sel: _apply_row_selection(
+            block, sel, onehot=onehot, interpret=_interpret()
+        ),
+        xs,
+        selection,
+    )
+
+
+def select_row(xs, winner, scale):
+    """(n, d), () int32, () f32 -> (d,) f32: the single-row fast path —
+    stream ONLY the winner row's tiles via a scalar-prefetch index_map
+    (d streamed bytes; ``weighted_row_sum`` of a one-hot reads n*d)."""
+    return _select_row(xs, winner, scale, interpret=_interpret())
 
 
 def weighted_row_sum(xs, w_row):

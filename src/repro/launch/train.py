@@ -35,11 +35,40 @@ additive over leaves, and each leaf's contribution is psum-reduced over
 exactly the axes its coordinates shard over — then selects once and
 applies the winner (or multi-Krum weights) leafwise.  The stacked
 (W, d_total) message never exists as one buffer on any schedule.
+
+The sharded schedule's inner loop itself has two forms
+(``cfg.schedule``):
+
+  sequential — scatter -> aggregate -> gather one block at a time: the
+               interconnect idles while the aggregation kernel runs and
+               vice versa.  The equivalence oracle.
+  pipelined  — a two-stage software pipeline with a prologue / steady
+               state / epilogue: block i+1's all_to_all is issued (and
+               pinned ahead via ``jax.lax.optimization_barrier``) before
+               block i's aggregation kernel consumes its buffer, so
+               XLA's scheduler can keep the next scatter in flight while
+               the MXU works — steady-state step cost ~ max(comm,
+               compute) instead of comm + compute (see
+               ``benchmarks.bench_kernels.traffic_model_pipeline``).
+               Bitwise-equal to sequential: the same per-block ops are
+               emitted, only their issue order differs.
+
+``cfg.superleaf_elems > 0`` additionally packs the message pytree into
+uniform superleaf chunks (``tree_utils.tree_superleaf_pack``, grouped by
+shard axes so each chunk keeps one well-defined cross-shard psum)
+instead of ragged per-tensor leaves: the pipeline then runs over
+same-shape (W, chunk/W) blocks — one uniform dispatch-layer call per
+chunk, one buffer shape for the double buffer.  Exact for
+coordinate-wise rules (per-coordinate math is partition-independent) and
+for two-phase selection rules (the Gram is additive over any coordinate
+partition); for the iterative rules (cclip/rfa) the chunks REPLACE the
+per-tensor leaves as the robust-aggregation block partition — the same
+block-robust semantics the per-leaf path already has, with uniform
+blocks instead of tensor-boundary blocks.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import lru_cache, partial
 from typing import NamedTuple, Optional
 
@@ -49,7 +78,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.aggregators import make_aggregator
 from repro.core.clipping import clip_factor
-from repro.core.tree_utils import tree_norm
+from repro.core.tree_utils import tree_norm, tree_superleaf_pack
 from repro.models.model import ModelConfig, apply_train, init_params
 from repro.sharding import constraints as cons
 from repro.sharding.rules import batch_specs, param_specs, state_sharding
@@ -81,6 +110,19 @@ class ByzTrainConfig:
     # clip->aggregate kernel on its chip-local (W, d/W) block.
     backend: str = "auto"
     agg_schedule: str = "sharded"  # "naive" | "sharded"
+    # inner block schedule of robust_aggregate (module docstring):
+    #   "sequential" — scatter -> aggregate -> gather one block at a time
+    #                  (the equivalence oracle)
+    #   "pipelined"  — double-buffered: block i+1's all_to_all is issued
+    #                  ahead of block i's aggregation kernel so comm and
+    #                  compute overlap; bitwise-equal to "sequential"
+    schedule: str = "sequential"
+    # > 0: pack the message pytree into uniform superleaf chunks of this
+    # many coordinates (chip-local in the sharded schedule) instead of
+    # ragged per-tensor leaves — one uniform dispatch per chunk.  Exact
+    # for coordinate-wise and selection rules; for cclip/rfa the chunks
+    # become the block partition (module docstring).
+    superleaf_elems: int = 0
     attack: str = "bf"  # "none" | "bf" | "gauss"
     compress_frac: float = 0.0  # leafwise RandK fraction (0 = off)
     shard_mode: str = "tp"  # "tp" | "fsdp_tp"
@@ -205,6 +247,35 @@ def _worker_message_norms(tree_w):
     return jax.vmap(tree_norm)(tree_w)
 
 
+def _schedule_map(produce, consume, n, pipelined: bool):
+    """``outs[i] = consume(i, produce(i))`` over ``n`` blocks.
+
+    ``pipelined=False``: strictly in order (produce i, consume i,
+    produce i+1, ...).  ``pipelined=True``: the two-stage software
+    pipeline — prologue issues produce(0); in steady state produce(i+1)
+    is emitted BEFORE consume(i) and schedule-pinned to it with
+    ``jax.lax.optimization_barrier`` (consumers of block i's buffer
+    depend on block i+1's produce having been issued), so XLA keeps the
+    next block's collective in flight while the current block's kernel
+    runs; the epilogue consumes the last buffer.  Identity on values:
+    both orders emit exactly the same per-block ops, so results are
+    bitwise-equal — only the issue order differs."""
+    if n == 0:
+        return []
+    if not pipelined or n == 1:
+        return [consume(i, produce(i)) for i in range(n)]
+    outs = []
+    pending = produce(0)
+    for i in range(n):
+        cur = pending
+        if i + 1 < n:
+            nxt = produce(i + 1)
+            cur, nxt = jax.lax.optimization_barrier((cur, nxt))
+            pending = nxt
+        outs.append(consume(i, cur))
+    return outs
+
+
 def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
                      base_specs=None, radius=None):
     """Aggregate a worker-stacked pytree (leaves (W, ...)) into the
@@ -235,10 +306,24 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     one whole-tree selection, then the winner/weights applied leafwise —
     sharded krum matches the engine's whole-message Krum without ever
     materializing the stacked (W, d_total) message.
+
+    ``cfg.schedule`` picks the inner block schedule ("sequential" |
+    "pipelined" — bitwise-equal, module docstring) and
+    ``cfg.superleaf_elems`` the block partition (ragged per-tensor
+    leaves, or uniform superleaf chunks packed per shard-axes group).
     """
     agg_rule = _make_mesh_aggregator(cfg)
     leaf_agg = _leaf_agg_of(agg_rule)
     two_phase = agg_rule.supports_two_phase
+    if cfg.schedule not in ("sequential", "pipelined"):
+        raise ValueError(
+            f"unknown schedule {cfg.schedule!r}; have 'sequential', "
+            "'pipelined'"
+        )
+    pipelined = cfg.schedule == "pipelined"
+    chunk_elems = int(cfg.superleaf_elems)
+    if chunk_elems < 0:
+        raise ValueError(f"superleaf_elems must be >= 0, got {chunk_elems}")
     waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
     W = 1
     for a in waxes:
@@ -252,13 +337,30 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
         factors = jnp.ones((n_rows,), F32)
 
     if cfg.agg_schedule == "naive" or not waxes:
+        # no collectives to overlap: cfg.schedule is a no-op here, but
+        # superleaf packing still applies (uniform per-chunk dispatch)
+        if chunk_elems > 0:
+            chunks, _, unpack = tree_superleaf_pack(tree_w, chunk_elems)
+            if two_phase:
+                stats = agg_rule.accumulate_stats(chunks)
+                sel = agg_rule.finalize(
+                    stats, mask=mask, key=key,
+                    factors=factors if use_factors else None,
+                )
+                rows = agg_rule.apply_selection(chunks, sel)
+            else:
+                rows = [
+                    leaf_agg(
+                        c, mask, key,
+                        factors=factors if use_factors else None,
+                    )
+                    for c in chunks
+                ]
+            return unpack(rows)
         if two_phase:
             leaves, treedef = jax.tree_util.tree_flatten(tree_w)
             mats = [l.reshape(l.shape[0], -1) for l in leaves]
-            stats = None
-            for mat in mats:
-                g = agg_rule.accumulate_stats(mat)
-                stats = g if stats is None else stats + g
+            stats = agg_rule.accumulate_stats(mats)
             sel = agg_rule.finalize(
                 stats, mask=mask, key=key,
                 factors=factors if use_factors else None,
@@ -275,6 +377,15 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
             tree_w,
         )
 
+    if n_rows != W:
+        # the sharded schedule shards the worker axis over ``waxes``; a
+        # row-count mismatch would silently drop (or duplicate) workers
+        # in the per-chip scatter
+        raise ValueError(
+            f"sharded robust_aggregate needs one row per worker: leaves "
+            f"carry {n_rows} rows but the mesh enumerates {W} workers "
+            f"over {waxes}"
+        )
     wspec = waxes if len(waxes) > 1 else waxes[0]
     if base_specs is None:
         base_specs = jax.tree_util.tree_map(
@@ -283,47 +394,6 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     in_specs = jax.tree_util.tree_map(
         lambda s: P(wspec, *s), base_specs, is_leaf=lambda x: isinstance(x, P)
     )
-
-    def scatter(leaf):
-        """(1, local dims...) chip block -> the (W, local/W) all_to_all
-        block (the fused kernel's exact input shape)."""
-        x = leaf[0]
-        shape = x.shape
-        flat = x.reshape(-1)  # chip-local: no hidden resharding
-        pad = (-flat.shape[0]) % W
-        flat = jnp.pad(flat, (0, pad))
-        sw = flat.reshape(W, -1)
-        for ax in waxes:  # all_to_all over each worker axis in turn
-            n_ax = mesh.shape[ax]  # static (jax.lax.axis_size needs >= 0.5)
-            sw = sw.reshape(n_ax, -1, sw.shape[-1])
-            sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
-            sw = sw.reshape(-1, sw.shape[-1])
-        return sw, shape, pad
-
-    def gather(aggd, shape, pad):
-        out = aggd
-        for ax in reversed(waxes):
-            out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
-        if pad:
-            out = out[: math.prod(shape)]
-        return out.reshape(shape)
-
-    def inner(leaf, mask_in, key_in, factors_in, spec):
-        # fully-manual: leaf is the true per-chip block (1, local dims...)
-        sw, shape, pad = scatter(leaf)
-        # This leaf's coordinates are spread over the worker axes (the
-        # chunks) plus whatever axes its grad spec shards — a psum over
-        # exactly those gives the non-coordinate-wise rules (gm/cclip)
-        # their global row statistics, making the sharded schedule equal
-        # to the naive full-vector semantics for the whole registry.
-        stat_axes = tuple(waxes) + _spec_axes(spec)
-        reduce_fn = _psum_reduce(stat_axes)
-        aggd = leaf_agg(
-            sw, mask_in, key_in,
-            factors=factors_in if use_factors else None,
-            reduce_fn=reduce_fn,
-        )  # (flat/W,)
-        return gather(aggd, shape, pad)
 
     # every axis referenced by the specs must be marked manual
     referenced = set(waxes)
@@ -338,35 +408,98 @@ def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
     all_axes = referenced | (
         {"model"} if "model" in mesh.axis_names else set()
     )
+
     def body(t, m, k, f):
         leaves, treedef = jax.tree_util.tree_flatten(t)
         spec_leaves = jax.tree_util.tree_leaves(
             base_specs, is_leaf=lambda x: isinstance(x, P)
         )
+        # Each block's coordinates are spread over the worker axes (the
+        # all_to_all chunks) plus whatever axes its grad spec shards — a
+        # psum over exactly those gives the non-coordinate-wise rules
+        # their global row statistics, making the sharded schedule equal
+        # to the naive full-vector semantics for the whole registry.
+        stat_axes = [tuple(waxes) + _spec_axes(sp) for sp in spec_leaves]
+        if chunk_elems > 0:
+            # uniform superleaf chunks, grouped by shard axes so every
+            # chunk keeps ONE well-defined cross-shard psum
+            packed, block_axes, unpack = tree_superleaf_pack(
+                t, chunk_elems, group_ids=stat_axes
+            )
+            flats = [p[0] for p in packed]  # chip-local (chunk,) vectors
+            shapes = None
+        else:
+            flats = [l[0].reshape(-1) for l in leaves]  # chip-local
+            block_axes = stat_axes
+            shapes = [l.shape[1:] for l in leaves]
+            unpack = None
+        sizes = [fl.shape[0] for fl in flats]
+        pads = [(-s) % W for s in sizes]
+
+        def scatter(i):
+            """Chip-local flat block i -> the (W, size/W) all_to_all
+            block (the fused kernel's exact input shape)."""
+            flat = flats[i]  # chip-local: no hidden resharding
+            if pads[i]:
+                flat = jnp.pad(flat, (0, pads[i]))
+            sw = flat.reshape(W, -1)
+            for ax in waxes:  # all_to_all over each worker axis in turn
+                n_ax = mesh.shape[ax]  # static (axis_size needs >= 0.5)
+                sw = sw.reshape(n_ax, -1, sw.shape[-1])
+                sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
+                sw = sw.reshape(-1, sw.shape[-1])
+            return sw
+
+        def gather(aggd, i):
+            out = aggd
+            for ax in reversed(waxes):
+                out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+            if pads[i]:
+                out = out[: sizes[i]]
+            return out
+
         if two_phase:
-            # whole-tree selection: scatter every leaf, accumulate ONE
-            # (W, W) Gram across the leaf loop (additive; per-leaf psum
-            # over that leaf's own shard axes makes each term global),
-            # select once, apply the winner/weights leafwise.
-            scat = [scatter(l) for l in leaves]
-            stats = None
-            for (sw, _, _), sp in zip(scat, spec_leaves):
-                g = agg_rule.accumulate_stats(
-                    sw,
-                    reduce_fn=_psum_reduce(tuple(waxes) + _spec_axes(sp)),
+            # whole-tree selection: accumulate ONE (W, W) Gram across the
+            # block loop (additive; per-block psum over that block's own
+            # shard axes makes each term global), select once, apply the
+            # winner/weights blockwise.  Pipelined, the i+1 scatter flies
+            # while block i's Gram kernel runs; the apply phase then
+            # overlaps each block's apply kernel with the previous
+            # block's all_gather.
+            scat = []
+
+            def consume_gram(i, sw):
+                scat.append(sw)
+                return agg_rule.accumulate_stats(
+                    sw, reduce_fn=_psum_reduce(block_axes[i])
                 )
-                stats = g if stats is None else stats + g
+            grams = _schedule_map(scatter, consume_gram, len(flats),
+                                  pipelined)
+            stats = grams[0]
+            for g in grams[1:]:
+                stats = stats + g
             sel = agg_rule.finalize(
                 stats, mask=m, key=k, factors=f if use_factors else None
             )
-            outs = [
-                gather(agg_rule.apply_selection(sw, sel), shape, pad)
-                for (sw, shape, pad) in scat
-            ]
+            rows = _schedule_map(
+                lambda i: agg_rule.apply_selection(scat[i], sel),
+                lambda i, applied: gather(applied, i),
+                len(flats), pipelined,
+            )
         else:
-            outs = [
-                inner(l, m, k, f, sp) for l, sp in zip(leaves, spec_leaves)
-            ]
+            def consume_agg(i, sw):
+                aggd = leaf_agg(
+                    sw, m, k,
+                    factors=f if use_factors else None,
+                    reduce_fn=_psum_reduce(block_axes[i]),
+                )  # (size/W,)
+                return gather(aggd, i)
+            rows = _schedule_map(scatter, consume_agg, len(flats),
+                                 pipelined)
+
+        if unpack is not None:
+            return unpack(rows)
+        outs = [r.reshape(shp) for r, shp in zip(rows, shapes)]
         return jax.tree_util.tree_unflatten(treedef, outs)
 
     smapped = _shard_map(
@@ -637,6 +770,15 @@ def main():
     ap.add_argument("--attack", default="bf")
     ap.add_argument("--aggregator", default="cm")
     ap.add_argument("--agg-schedule", default="sharded")
+    ap.add_argument("--schedule", default="sequential",
+                    choices=["sequential", "pipelined"],
+                    help="inner block schedule of the sharded aggregation "
+                         "(pipelined = double-buffered scatter/aggregate, "
+                         "bitwise-equal to sequential)")
+    ap.add_argument("--superleaf-elems", type=int, default=0,
+                    help="> 0: pack the message pytree into uniform "
+                         "superleaf chunks of this many coordinates "
+                         "instead of ragged per-tensor leaves")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="aggregation backend (auto = pallas iff on TPU)")
@@ -658,6 +800,7 @@ def main():
     tc = ByzTrainConfig(
         gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
         aggregator=args.aggregator, agg_schedule=args.agg_schedule,
+        schedule=args.schedule, superleaf_elems=args.superleaf_elems,
         shard_mode=args.shard_mode, backend=args.backend,
     )
     W = num_workers(mesh)

@@ -1,0 +1,102 @@
+"""bf16 accumulation audit (ROADMAP item).
+
+The pass-1 row-norm reduction and the Krum Gram kernel feed clip factors
+and pairwise distances; their inputs arrive in the message dtype — bf16
+for large models.  Both must accumulate in f32: bf16 has an 8-bit
+mantissa, so a bf16 accumulator saturates after ~256 unit-sized terms
+(256 + 1 rounds back to 256) and a d = 4096 row norm would come out ~4x
+too small, silently un-clipping byzantine messages.
+
+These tests pin the contract from both ends:
+
+- numerically: kernel outputs from bf16 inputs match a float64 oracle
+  (numpy, computed on the exact bf16-rounded values) within f32
+  round-off — orders of magnitude tighter than any bf16-accumulated
+  result could be, as the deterministic saturation case proves;
+- structurally: the pallas_call output avals (the accumulator buffers)
+  are f32 even when the operand is bf16.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.clip_aggregate import _row_norms
+from repro.kernels.coordinate_median import TILE_D, _pad_to
+from repro.kernels.krum import gram_matrix
+
+
+def _kernel_row_norms(xs):
+    xp, _ = _pad_to(xs, TILE_D, axis=1)
+    return _row_norms(xp, xp.shape[1] // TILE_D, xs.shape[0], True)
+
+
+def _as_f64(xs_bf16):
+    """The exact values the bf16 matrix holds, in float64."""
+    return np.asarray(xs_bf16.astype(jnp.float32)).astype(np.float64)
+
+
+def _pallas_out_dtypes(fn, *args):
+    """Output dtypes of every pallas_call in fn's jaxpr (the kernels'
+    HBM-visible accumulator buffers)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    dts = []
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            dts.extend(v.aval.dtype for v in eqn.outvars)
+    return dts
+
+
+def test_bf16_row_norm_saturation_case():
+    """d = 4096 rows of ones: a bf16 accumulator saturates at ssq = 256
+    (norm 16 instead of 64); the f32 accumulator is exact."""
+    n, d = 4, 4096
+    xs = jnp.ones((n, d), jnp.bfloat16)
+    norms = _kernel_row_norms(xs)
+    assert norms.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(norms), np.full(n, 64.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 10),
+    d=st.integers(700, 5000),
+)
+def test_bf16_row_norms_match_f64_oracle(seed, n, d):
+    rng = np.random.RandomState(seed)
+    xs = jnp.asarray(rng.randn(n, d), jnp.bfloat16)
+    norms = np.asarray(_kernel_row_norms(xs))
+    oracle = np.sqrt(np.sum(_as_f64(xs) ** 2, axis=1))
+    assert norms.dtype == np.float32
+    # f32-accumulation round-off; a bf16 accumulator would be ~1e-2 off
+    np.testing.assert_allclose(norms, oracle, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 8),
+    d=st.integers(700, 4000),
+)
+def test_bf16_gram_matches_f64_oracle(seed, n, d):
+    rng = np.random.RandomState(seed)
+    xs = jnp.asarray(rng.randn(n, d), jnp.bfloat16)
+    gram = np.asarray(gram_matrix(xs, interpret=True))
+    x64 = _as_f64(xs)
+    oracle = x64 @ x64.T
+    assert gram.dtype == np.float32
+    scale = np.sqrt(np.outer(np.sum(x64**2, 1), np.sum(x64**2, 1)))
+    np.testing.assert_allclose(gram / scale, oracle / scale, atol=2e-6)
+
+
+def test_bf16_accumulator_buffers_are_f32():
+    """Structural check: the row-norm partials and the tile-accumulated
+    Gram — the buffers the kernels accumulate INTO — are f32 avals even
+    for bf16 operands."""
+    xs = jnp.ones((4, 2 * TILE_D), jnp.bfloat16)
+    for fn in (_kernel_row_norms,
+               lambda x: gram_matrix(x, interpret=True)):
+        dts = _pallas_out_dtypes(fn, xs)
+        assert dts, "no pallas_call in jaxpr"
+        assert all(dt == jnp.float32 for dt in dts), dts

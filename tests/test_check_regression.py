@@ -83,6 +83,16 @@ def test_traffic_tier_is_deterministic_one_percent():
     assert [t[0] for t in traffic] == ["traffic_model.fused_bytes"]
 
 
+def test_traffic_tier_fails_on_vanished_blocks():
+    """A committed traffic-model key missing from the fresh run is
+    deterministic breakage (the un-fusing protection it encoded would
+    silently evaporate), symmetric with vanished timing rows."""
+    committed = _payload(traffic_model={"fused_bytes": 1000.0})
+    fresh = _payload()
+    _, traffic = compare(committed, fresh, **GATE_KW)
+    assert traffic == [("traffic_model.fused_bytes", 1000.0, 0.0, 0.0)]
+
+
 def test_traffic_tier_walks_nested_blocks():
     committed = _payload(
         traffic_model_iterative={"gm8": {"fused_resident_bytes": 100.0}}
@@ -164,6 +174,53 @@ def test_broken_rows_hard_fail_even_with_timing_warn_only(tmp_path):
                "--json-out", str(verdict)])
     assert rc == EXIT_REGRESSION
     assert json.loads(verdict.read_text())["status"] == "regression"
+
+
+def test_new_rows_are_informational_not_a_failure(tmp_path):
+    """Rows and traffic-model blocks added by a PR have no baseline
+    counterpart yet: the gate must stay green (exit 0 — NOT exit-2
+    'no usable baseline', NOT a regression) and surface them in the
+    verdict, so adding a bench row never needs a chicken-and-egg
+    baseline update to pass CI."""
+    base = _write(
+        tmp_path, "base.json",
+        _payload(rows=[("kernel_a", 1000.0)],
+                 traffic_model={"fused_bytes": 1000.0}),
+    )
+    fresh = _write(
+        tmp_path, "fresh.json",
+        _payload(rows=[("kernel_a", 1000.0),
+                       ("kernel_krumapply_onehot_pallas_interp", 50.0),
+                       ("robust_agg_pipelined_fused_8dev", 900.0)],
+                 traffic_model={"fused_bytes": 1000.0},
+                 traffic_model_pipeline={"fused_bytes": 5000.0}),
+    )
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_OK
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "ok"
+    assert v["new_rows"] == ["kernel_krumapply_onehot_pallas_interp",
+                             "robust_agg_pipelined_fused_8dev"]
+    assert v["new_traffic_models"] == ["traffic_model_pipeline.fused_bytes"]
+
+
+def test_all_rows_new_is_ok_not_no_baseline(tmp_path):
+    """A baseline that predates every fresh row (e.g. the first run after
+    a wholesale bench rename that also regenerated nothing) yields ZERO
+    gateable overlap — that is an OK-with-informational-rows pass, not an
+    exit-2 'no usable baseline'."""
+    base = _write(tmp_path, "base.json", _payload(rows=[]))
+    fresh = _write(
+        tmp_path, "fresh.json", _payload(rows=[("kernel_new", 800.0)])
+    )
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_OK
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "ok" and v["new_rows"] == ["kernel_new"]
 
 
 def test_exit_no_baseline_is_distinct(tmp_path):

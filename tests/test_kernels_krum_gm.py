@@ -239,6 +239,99 @@ def test_fused_krum_lambda_inf_recovers_plain():
 
 
 # ---------------------------------------------------------------------------
+# the single-row apply fast path (plain unbucketed Krum)
+# ---------------------------------------------------------------------------
+
+def test_onehot_apply_bitwise_equals_weighted_row_sum():
+    """select_row (the scalar-prefetch winner-row stream) must reproduce
+    the one-hot weighted_row_sum bitwise — including a zero clip factor
+    on an inf-carrying winner row (0, never 0 * inf = NaN)."""
+    from repro.kernels.krum import select_row, weighted_row_sum
+
+    rng = np.random.RandomState(4)
+    n, d = 7, 530
+    xs = np.asarray(rng.randn(n, d), np.float32)
+    xs[5] = np.inf
+    xs = jnp.asarray(xs)
+    for winner, scale in ((2, 0.73), (0, 1.0), (5, 0.0), (6, 1e-8)):
+        w_row = (
+            jnp.arange(n) == winner
+        ).astype(jnp.float32) * jnp.float32(scale)
+        full = weighted_row_sum(xs, w_row, interpret=True)
+        fast = select_row(
+            xs, jnp.int32(winner), jnp.float32(scale), interpret=True
+        )
+        np.testing.assert_array_equal(
+            np.asarray(full), np.asarray(fast),
+            err_msg=f"winner={winner} scale={scale}",
+        )
+        assert np.isfinite(np.asarray(fast)).all() or scale != 0.0
+
+
+@pytest.mark.parametrize(
+    "multi,bucket_s,expect_onehot",
+    [(False, 1, True), (True, 1, False), (False, 2, False)],
+    ids=["krum-flat", "multikrum", "krum-bucketed"],
+)
+def test_onehot_apply_only_streams_winner_row(multi, bucket_s, expect_onehot):
+    """Plain unbucketed Krum's fused apply pass must be the
+    scalar-prefetch select_row kernel with a (1, TILE_D) x-block — the
+    DMA streams d bytes, not n*d; multi-Krum and bucketed selections
+    (genuine multi-row combinations) must keep the full row-sum pass."""
+    n, d = 8, 1100
+    rng = np.random.RandomState(0)
+    xs = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(n).astype(np.int32))
+    jaxpr = jax.make_jaxpr(
+        lambda x, i: clip_then_krum(
+            x, 1.2, None, i, byz_bound=1, bucket_s=bucket_s, multi=multi
+        )[0]
+    )(xs, idx)
+    text = str(jaxpr)
+    if expect_onehot:
+        assert "_select_row_kernel" in text
+        assert "_row_combine_kernel" not in text
+        # structural traffic assertion: the apply kernel's x operand is
+        # mapped in (1, TILE_D) blocks — one row, not the (n, TILE_D)
+        # full-matrix block of the row-sum pass
+        for eqn in jaxpr.jaxpr.eqns:
+            if eqn.primitive.name != "pallas_call":
+                continue
+            if "_select_row_kernel" not in str(
+                eqn.params.get("name_and_src_info", "")
+            ):
+                continue
+            gm = eqn.params.get("grid_mapping")
+            shapes = [
+                tuple(bm.block_shape)
+                for bm in getattr(gm, "block_mappings", ())
+            ]
+            if shapes:  # introspectable on the pinned jax lines
+                assert all(s[0] == 1 for s in shapes), shapes
+    else:
+        assert "_row_combine_kernel" in text
+        assert "_select_row_kernel" not in text
+
+
+def test_onehot_apply_traffic_model():
+    """The modeled apply-pass traffic must show the d-vs-n*d cut the
+    fast path exists for (the bench gate pins fused_bytes)."""
+    import os
+    import sys
+
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    from benchmarks.bench_kernels import traffic_model_krum_apply
+
+    n, d = 16, 1 << 16
+    tm = traffic_model_krum_apply(n, d)
+    assert tm["fused_bytes"] == 2 * d * 4  # winner row in + (d,) out
+    assert tm["full_bytes"] == (n + 1) * d * 4
+    assert tm["traffic_reduction"] == pytest.approx((n + 1) / 2)
+
+
+# ---------------------------------------------------------------------------
 # geometric median
 # ---------------------------------------------------------------------------
 

@@ -306,6 +306,126 @@ print("WHOLE_TREE_OK")
     assert r.stdout.count("BITWISE") == 8  # 2 backends x 2 rules x 2 clip
 
 
+@pytest.mark.slow
+def test_pipelined_schedule_registry_bitwise_8dev():
+    """Acceptance gate for the double-buffered server step: on the
+    8-device mesh the pipelined schedule must be BITWISE-equal to the
+    sequential oracle for the WHOLE aggregator registry — it emits the
+    same per-block ops, only the collective issue order differs — both
+    over ragged per-leaf blocks and packed superleaf chunks."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_debug_mesh, set_mesh
+from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+mesh = make_debug_mesh(4, 2)
+rng = np.random.RandomState(0)
+tree = {
+    "a": jnp.asarray(rng.randn(4, 6, 32).astype(np.float32)),
+    "b": {"c": jnp.asarray(rng.randn(4, 17).astype(np.float32))},
+}
+mask = jnp.asarray([True, True, False, True])
+key = jax.random.PRNGKey(0)
+radius = jnp.float32(3.0)
+with set_mesh(mesh):
+    tree = jax.device_put(tree, NamedSharding(mesh, P("data")))
+    for agg in ("cm", "tm", "mean", "cclip", "rfa", "krum", "multi_krum",
+                "bucket_cm", "bucket_krum", "bucket_rfa"):
+        for sle in (0, 24):
+            outs = {}
+            for sched in ("sequential", "pipelined"):
+                cfg = ByzTrainConfig(aggregator=agg, agg_schedule="sharded",
+                                     schedule=sched, superleaf_elems=sle,
+                                     backend="pallas", n_byz=1)
+                outs[sched] = jax.jit(
+                    lambda t, m, k: robust_aggregate(
+                        t, m, k, mesh=mesh, cfg=cfg, radius=radius)
+                )(tree, mask, key)
+            for la, lb in zip(jax.tree_util.tree_leaves(outs["sequential"]),
+                              jax.tree_util.tree_leaves(outs["pipelined"])):
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                    agg, sle)
+        print("BITWISE", agg, flush=True)
+print("PIPELINE_REGISTRY_OK")
+"""
+    r = _run([sys.executable, "-c", script], timeout=540)
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2000:])
+    assert "PIPELINE_REGISTRY_OK" in r.stdout
+    assert r.stdout.count("BITWISE") == 10
+
+
+@pytest.mark.slow
+def test_trajectory_naive_sharded_pipelined_krum_cclip_8dev():
+    """Multi-step server recursion g += Agg(msgs(g)) on the 8-device
+    mesh: the sharded-sequential and pipelined schedules must produce
+    BITWISE-equal trajectories (selection and iteration rules alike),
+    and both must track the paper-faithful naive schedule."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_debug_mesh, set_mesh
+from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+mesh = make_debug_mesh(4, 2)
+W = 4
+rng = np.random.RandomState(0)
+base = {
+    "a": jnp.asarray(rng.randn(W, 6, 32).astype(np.float32)),
+    "b": {"c": jnp.asarray(rng.randn(W, 17).astype(np.float32))},
+}
+mask = jnp.asarray([True, True, False, True])
+key = jax.random.PRNGKey(0)
+byz = jnp.arange(W) == 1
+
+@jax.jit
+def messages(g, k):
+    honest = jax.tree_util.tree_map(
+        lambda b, gg: b + 0.3 * gg[None].astype(np.float32), base, g)
+    return jax.tree_util.tree_map(
+        lambda h: jnp.where(
+            byz.reshape((-1,) + (1,) * (h.ndim - 1)), -3.0 * h, h),
+        honest)
+
+for agg in ("krum", "centered_clip"):
+    name = {"centered_clip": "cclip"}.get(agg, agg)
+    traces = {}
+    for sched, inner in (("naive", "sequential"),
+                         ("sharded", "sequential"),
+                         ("sharded", "pipelined")):
+        cfg = ByzTrainConfig(aggregator=name, agg_schedule=sched,
+                             schedule=inner, backend="pallas", n_byz=1)
+        jagg = jax.jit(lambda t, m, k: robust_aggregate(
+            t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(2.5)))
+        g = jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape[1:]), base)
+        tr = []
+        with set_mesh(mesh):
+            for t in range(6):
+                k = jax.random.fold_in(key, t)
+                a = jagg(messages(g, k), mask, k)
+                g = jax.tree_util.tree_map(lambda x, y: x + y, g, a)
+                tr.append(np.concatenate([
+                    np.asarray(l).ravel()
+                    for l in jax.tree_util.tree_leaves(g)]))
+        traces[(sched, inner)] = np.stack(tr)
+    assert np.array_equal(traces[("sharded", "sequential")],
+                          traces[("sharded", "pipelined")]), name
+    np.testing.assert_allclose(
+        traces[("naive", "sequential")], traces[("sharded", "sequential")],
+        atol=3e-5, err_msg=name)
+    print("TRAJ_OK", name, flush=True)
+print("TRAJECTORY_OK")
+"""
+    r = _run([sys.executable, "-c", script], timeout=540)
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2000:])
+    assert "TRAJECTORY_OK" in r.stdout
+    assert r.stdout.count("TRAJ_OK") == 2
+
+
 def test_whole_tree_selection_in_process_naive_matches_engine():
     """Single-device fast check of the same contract: the naive schedule's
     whole-tree two-phase path equals the engine's whole-message krum on a
