@@ -455,6 +455,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import AggregatorSpec, ScheduleSpec, ServerPlan
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
 
@@ -465,22 +466,29 @@ tree = {"g": jnp.asarray(rng.randn(4, d).astype(np.float32))}
 mask = jnp.asarray([True, True, False, True])
 key = jax.random.PRNGKey(0)
 rows = []
+
+# the perf-gate rows are NAMED by canonical ServerPlan JSON and the
+# configs rebuilt from it (to_json -> from_json -> ByzTrainConfig
+# .from_plan), so every gate run exercises the public plan entry point
+def plan_json(placement, blocks="sequential", sle=0):
+    return ServerPlan(
+        aggregate=AggregatorSpec("cm"),
+        schedule=ScheduleSpec(placement=placement, blocks=blocks,
+                              superleaf_elems=sle, backend="pallas"),
+    ).to_json()
+
 configs = [
-    ("naive", ByzTrainConfig(aggregator="cm", agg_schedule="naive",
-                             backend="pallas")),
-    ("sharded", ByzTrainConfig(aggregator="cm", agg_schedule="sharded",
-                               backend="pallas")),
+    ("naive", plan_json("naive")),
+    ("sharded", plan_json("sharded")),
     # the double-buffered schedule over uniform superleaf chunks — the
     # perf gate exercises the pipelined path on every PR
-    ("pipelined", ByzTrainConfig(aggregator="cm", agg_schedule="sharded",
-                                 schedule="pipelined",
-                                 superleaf_elems=d // 4,
-                                 backend="pallas")),
+    ("pipelined", plan_json("sharded", "pipelined", d // 4)),
 ]
 with set_mesh(mesh):
     tree = jax.device_put(tree, NamedSharding(mesh, P("data")))
-    for sched, cfg in configs:
-        fn = jax.jit(lambda t, m, k: robust_aggregate(
+    for sched, pj in configs:
+        cfg = ByzTrainConfig.from_plan(ServerPlan.from_json(pj))
+        fn = jax.jit(lambda t, m, k, cfg=cfg: robust_aggregate(
             t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(1.5)))
         jax.block_until_ready(fn(tree, mask, key))  # compile
         t0 = time.time()

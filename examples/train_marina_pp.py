@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save
 from repro.data.pipeline import make_batch_iterator
+from repro.launch.cli import add_plan_args, plan_from_args
 from repro.launch.mesh import make_debug_mesh, num_workers, set_mesh
 from repro.launch.train import (
     ByzTrainConfig,
@@ -57,23 +58,13 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n-byz", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
-    # Aggregation backend ("jnp" | "pallas" | "auto").  "auto" picks the
-    # Pallas kernels iff running on TPU; "pallas" forces them (interpret
-    # mode on CPU — same math, slower, what the equivalence tests use).
-    # The sharded robust-aggregation schedule then runs the fused
-    # clip->aggregate kernel on each chip's (W, d/W) block: the server
-    # clip never materializes a clipped message tree in HBM.
-    ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas"])
-    # Inner block schedule of the sharded aggregation: "pipelined" is the
-    # double-buffered scatter/aggregate pipeline (block i+1's all_to_all
-    # in flight while block i's kernel runs) — bitwise-equal to
-    # "sequential".  --superleaf-elems > 0 packs the message pytree into
-    # uniform chunks of that many coordinates so the pipeline runs over
-    # same-shape blocks (one uniform kernel dispatch per chunk).
-    ap.add_argument("--schedule", default="sequential",
-                    choices=["sequential", "pipelined"])
-    ap.add_argument("--superleaf-elems", type=int, default=0)
+    # The full server-step composition comes from the shared ServerPlan
+    # flag group (repro.launch.cli): --aggregator/--agg-schedule/
+    # --schedule/--superleaf-elems/--backend/--plan-json.  "pallas" on
+    # CPU runs in interpret mode — same math, what the equivalence tests
+    # use; the sharded placement then runs the fused clip->aggregate
+    # kernel on each chip's (W, d/W) block.
+    add_plan_args(ap)
     args = ap.parse_args()
 
     cfg = build_config(args.smoke)
@@ -82,18 +73,13 @@ def main():
     print(f"model {cfg.name}: {param_count(cfg)/1e6:.1f}M params; "
           f"{W} workers ({args.n_byz} byzantine), mesh {dict(mesh.shape)}")
 
-    tc = ByzTrainConfig(
+    plan = plan_from_args(args, byz_bound=args.n_byz, clip_alpha=2.0)
+    tc = ByzTrainConfig.from_plan(
+        plan,
         gamma=0.3 if args.smoke else 0.1,
         p=0.125,
         n_byz=args.n_byz,
-        aggregator="cm",
-        agg_schedule="sharded",
         attack="bf",
-        use_clipping=True,
-        clip_alpha=2.0,
-        backend=args.backend,
-        schedule=args.schedule,
-        superleaf_elems=args.superleaf_elems,
     )
     step_fn = make_train_step(cfg, mesh, tc)
 

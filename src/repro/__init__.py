@@ -4,6 +4,7 @@ Paper: "Byzantine Robustness and Partial Participation Can Be Achieved at
 Once: Just Clip Gradient Differences" (NeurIPS 2024).
 
 Subpackages:
+  api         the declarative ServerPlan server-step specification
   core        the paper's algorithm family (simulation engine + theory)
   models      the 10 assigned architectures
   kernels     Pallas TPU kernels for the aggregation hot-spot
@@ -11,6 +12,38 @@ Subpackages:
   sharding    logical-axis constraints + partition rules
   launch      mesh / distributed trainer / serving / dry-run
   data, optim, checkpoint   substrates
+
+The ServerPlan surface (the one public entry point to the aggregation
+subsystem) is re-exported here lazily, so ``import repro`` stays free of
+jax side effects until a symbol is actually used.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+# the public ServerPlan surface, lazily resolved from repro.api
+_API_EXPORTS = (
+    "ServerPlan",
+    "ServerStep",
+    "ClipSpec",
+    "CompressSpec",
+    "BucketSpec",
+    "AggregatorSpec",
+    "ScheduleSpec",
+    "PlanError",
+    "PlanWarning",
+    "plan_from_legacy",
+)
+
+__all__ = ["__version__", *_API_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from . import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS))

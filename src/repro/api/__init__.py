@@ -1,0 +1,42 @@
+"""Public API layer: the declarative ``ServerPlan`` server-step spec.
+
+See :mod:`repro.api.plan` for the full contract.  Quickstart:
+
+    from repro.api import (ServerPlan, AggregatorSpec, ClipSpec,
+                           BucketSpec, ScheduleSpec)
+
+    plan = ServerPlan(
+        aggregate=AggregatorSpec("krum", byz_bound=1),
+        clip=ClipSpec(alpha=2.0),
+        bucket=BucketSpec(s=2),
+        schedule=ScheduleSpec(placement="sharded", blocks="pipelined",
+                              superleaf_elems=65536),
+    )
+    step = plan.build(mesh)          # or plan.build() for the engine form
+    agg = step(msgs, mask=sampled, key=key, radius=step.radius(x_new, x))
+"""
+from .plan import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    CompressSpec,
+    PlanError,
+    PlanWarning,
+    ScheduleSpec,
+    ServerPlan,
+    ServerStep,
+    plan_from_legacy,
+)
+
+__all__ = [
+    "AggregatorSpec",
+    "BucketSpec",
+    "ClipSpec",
+    "CompressSpec",
+    "PlanError",
+    "PlanWarning",
+    "ScheduleSpec",
+    "ServerPlan",
+    "ServerStep",
+    "plan_from_legacy",
+]

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Callable, Optional
 
@@ -90,6 +91,7 @@ __all__ = [
     "bucketing",
     "make_aggregator",
     "resolve_backend",
+    "RULE_ALIASES",
 ]
 
 _BIG = jnp.float32(3.4e37)  # +inf stand-in that survives arithmetic
@@ -480,6 +482,15 @@ def bucketing(inner: Aggregator, s: int = 2) -> Aggregator:
 
 _DEFAULT_TRIM = 0.1
 
+# legacy mesh-config spellings -> canonical registry names.  The ServerPlan
+# API (repro.api) normalizes through this same table, so the two layers'
+# name spaces cannot diverge.
+RULE_ALIASES = {
+    "tm": "trimmed_mean",
+    "cclip": "centered_clip",
+    "gm": "rfa",
+}
+
 _FACTORY = {
     "mean": lambda **kw: mean(),
     "cm": lambda **kw: coordinate_median(),
@@ -618,7 +629,25 @@ def make_aggregator(
 ) -> Aggregator:
     """Build an aggregator by name, optionally composed with Bucketing
     (``bucket_s >= 2``) and backed by the requested ``backend``
-    ("jnp" | "pallas" | "auto"; see module docstring)."""
+    ("jnp" | "pallas" | "auto"; see module docstring).
+
+    The declarative entry point to the whole composition (clip ->
+    compress -> bucket -> aggregate -> schedule) is
+    ``repro.api.ServerPlan``; this factory is its aggregate+bucket stage.
+    The old "bucket_<rule>" string spelling is still accepted as a
+    deprecated shim (it translates to ``bucket_s >= 2``)."""
+    if name.startswith("bucket_"):
+        warnings.warn(
+            "make_aggregator('bucket_<rule>') is deprecated; pass "
+            "bucket_s >= 2 (or compose a repro.api.ServerPlan with a "
+            "BucketSpec) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        name = name[len("bucket_"):]
+        if not bucket_s or bucket_s < 2:
+            bucket_s = 2
+    name = RULE_ALIASES.get(name, name)
     if name not in _FACTORY:
         raise ValueError(f"unknown aggregator {name!r}; have {sorted(_FACTORY)}")
     resolved = resolve_backend(backend)

@@ -19,9 +19,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aggregators import make_aggregator
+from typing import TYPE_CHECKING
+
 from .attacks import AttackContext, make_attack
 from .problems import FedProblem
+
+if TYPE_CHECKING:  # runtime import is lazy: repro.api imports repro.core
+    from ..api import ServerPlan
 
 __all__ = ["ClippedPPConfig", "ClippedPPState", "ClippedPPMomentum"]
 
@@ -32,6 +36,9 @@ class ClippedPPConfig:
     beta: float = 0.9  # client momentum
     C: int = 4  # sampled cohort per round
     batch: int = 32
+    # the eq.-(10) server-step composition as a repro.api.ServerPlan; when
+    # None the legacy string knobs below are translated (DeprecationWarning)
+    plan: Optional[ServerPlan] = None
     lambda_mult: float = 1.0
     use_clipping: bool = True
     aggregator: str = "cm"
@@ -39,6 +46,20 @@ class ClippedPPConfig:
     attack: str = "none"
     seed: int = 0
     backend: str = "auto"  # aggregation backend: "jnp" | "pallas" | "auto"
+
+    def resolve_plan(self) -> "ServerPlan":
+        from ..api import plan_from_legacy
+
+        if self.plan is not None:
+            return self.plan
+        return plan_from_legacy(
+            self.aggregator,
+            bucket_s=self.bucket_s,
+            bucketed=self.bucket_s >= 2,
+            backend=self.backend,
+            clip_alpha=self.lambda_mult,
+            use_clipping=self.use_clipping,
+        )
 
 
 class ClippedPPState(NamedTuple):
@@ -57,16 +78,17 @@ class ClippedPPMomentum:
     def __init__(self, problem: FedProblem, cfg: ClippedPPConfig):
         self.problem = problem
         self.cfg = cfg
-        self.agg = make_aggregator(
-            cfg.aggregator, bucket_s=cfg.bucket_s, backend=cfg.backend
-        )
+        # ONE compiled server step runs the eq.-(10) composition
+        self.plan = cfg.resolve_plan()
+        self.server = self.plan.build()
+        self.agg = self.server.aggregator
         self.attack = make_attack(cfg.attack)
 
     def init(self, x0: Optional[jnp.ndarray] = None) -> ClippedPPState:
         x = self.problem.x0 if x0 is None else x0
         n = self.problem.n_clients
         grads = self.problem.all_full_grads(x)
-        g0 = self.agg(grads, key=jax.random.PRNGKey(self.cfg.seed))
+        g0 = self.server.aggregate(grads, key=jax.random.PRNGKey(self.cfg.seed))
         return ClippedPPState(
             x=x,
             x_prev=x,
@@ -104,10 +126,15 @@ class ClippedPPMomentum:
         # only sampled workers refresh momentum (the rest are offline)
         momenta = jnp.where(sampled[:, None], momenta, state.momenta)
 
-        lam = cfg.lambda_mult * jnp.linalg.norm(state.x - state.x_prev)
-        # warmup: before the first move, x == x_prev => lambda = 0 would zero
-        # all messages; use +inf radius on step 0 (c.f. Fig.1 setup).
-        lam = jnp.where(state.step == 0, jnp.float32(3.4e37), lam)
+        # lambda_k = alpha * ||x^k - x^{k-1}|| from the plan's ClipSpec
+        # (None when the plan has no clip stage)
+        lam = self.server.radius(state.x, state.x_prev)
+        if lam is not None and self.plan.clip.radius is None:
+            # warmup for the data-dependent radius only: before the first
+            # move, x == x_prev => lambda = 0 would zero all messages; use
+            # +inf on step 0 (c.f. Fig.1 setup).  A static ClipSpec(radius=)
+            # is user-chosen and applies from step 0.
+            lam = jnp.where(state.step == 0, jnp.float32(3.4e37), lam)
 
         ctx = AttackContext(
             honest=momenta,
@@ -125,15 +152,17 @@ class ClippedPPMomentum:
         msgs = jnp.where(good[:, None], momenta, payload)
 
         # eq. (10): aggregate clipped differences to the previous estimate
-        # (fused clip->aggregate on the pallas backend); unclipped configs
-        # skip the norm pass statically
+        # (fused clip->aggregate on the pallas backend); plans without a
+        # clip stage skip the norm pass statically
         diffs = msgs - state.g[None]
-        if cfg.use_clipping:
-            g_new = state.g + self.agg.clip_then_aggregate(
-                diffs, lam, mask=sampled, key=k_agg
+        if lam is not None:
+            g_new = state.g + self.server(
+                diffs, mask=sampled, key=k_agg, radius=lam
             )
         else:
-            g_new = state.g + self.agg(diffs, mask=sampled, key=k_agg)
+            g_new = state.g + self.server.aggregate(
+                diffs, mask=sampled, key=k_agg
+            )
 
         x_new = state.x - cfg.gamma * g_new
         return ClippedPPState(

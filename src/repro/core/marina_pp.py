@@ -27,11 +27,19 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aggregators import Aggregator, make_aggregator
+from typing import TYPE_CHECKING
+
+from .aggregators import Aggregator
 from .attacks import Attack, AttackContext, make_attack
-from .clipping import marina_radius
-from .compressors import Compressor, make_compressor
+from .compressors import (
+    Compressor,
+    identity as _identity_compressor,
+    make_compressor,
+)
 from .problems import FedProblem
+
+if TYPE_CHECKING:  # runtime import is lazy: repro.api imports repro.core
+    from ..api import ServerPlan
 
 __all__ = ["MarinaPPConfig", "MarinaPPState", "ByzVRMarinaPP"]
 
@@ -43,6 +51,12 @@ class MarinaPPConfig:
     C: int  # small cohort size
     C_hat: int  # large cohort size (full-grad rounds)
     batch: int = 32  # minibatch size b for Dhat
+    # the server-step composition (clip / compress / bucket / aggregate):
+    # a repro.api.ServerPlan.  When None, the legacy string knobs below
+    # are translated via plan_from_legacy (DeprecationWarning) — the
+    # translated plan builds the identical aggregation, bitwise.
+    plan: Optional[ServerPlan] = None
+    # -- legacy string knobs (honored when plan=None) ----------------------
     clip_alpha: float = 1.0  # lambda_{k+1} = clip_alpha * ||x+ - x||
     use_clipping: bool = True
     aggregator: str = "cm"
@@ -52,6 +66,22 @@ class MarinaPPConfig:
     attack: str = "none"
     seed: int = 0
     backend: str = "auto"  # aggregation backend: "jnp" | "pallas" | "auto"
+
+    def resolve_plan(self) -> "ServerPlan":
+        from ..api import plan_from_legacy
+
+        if self.plan is not None:
+            return self.plan
+        return plan_from_legacy(
+            self.aggregator,
+            bucket_s=self.bucket_s,
+            bucketed=self.bucket_s >= 2,
+            backend=self.backend,
+            clip_alpha=self.clip_alpha,
+            use_clipping=self.use_clipping,
+            compressor=self.compressor,
+            compressor_kwargs=self.compressor_kwargs,
+        )
 
 
 class MarinaPPState(NamedTuple):
@@ -68,11 +98,13 @@ class ByzVRMarinaPP:
     def __init__(self, problem: FedProblem, cfg: MarinaPPConfig):
         self.problem = problem
         self.cfg = cfg
-        self.agg: Aggregator = make_aggregator(
-            cfg.aggregator, bucket_s=cfg.bucket_s, backend=cfg.backend
-        )
-        self.compressor: Compressor = make_compressor(
-            cfg.compressor, **dict(cfg.compressor_kwargs)
+        # ONE compiled server step runs the whole clip -> compress ->
+        # bucket -> aggregate composition (repro.api.ServerPlan)
+        self.plan: ServerPlan = cfg.resolve_plan()
+        self.server = self.plan.build()
+        self.agg: Aggregator = self.server.aggregator
+        self.compressor: Compressor = (
+            self.server.compressor or _identity_compressor()
         )
         self.attack: Attack = make_attack(cfg.attack)
         if not (1 <= cfg.C <= cfg.C_hat <= problem.n_clients):
@@ -110,7 +142,7 @@ class ByzVRMarinaPP:
         x = self.problem.x0 if x0 is None else x0
         # g^0: aggregate of initial full gradients over ALL clients (honest
         # init, standard for VR methods; byz rows included via aggregation).
-        g0 = self.agg(
+        g0 = self.server.aggregate(
             self.problem.all_full_grads(x), key=jax.random.PRNGKey(self.cfg.seed)
         )
         return MarinaPPState(
@@ -159,7 +191,9 @@ class ByzVRMarinaPP:
         sampled = self._sample_cohort(k_cohort, c_k)
 
         x_new = state.x - cfg.gamma * state.g
-        lam = marina_radius(x_new, state.x, cfg.clip_alpha)
+        # lambda_{k+1} = alpha * ||x^{k+1} - x^k|| from the plan's ClipSpec
+        # (None when the plan has no clip stage)
+        lam = self.server.radius(x_new, state.x)
 
         def full_branch(_):
             grads = prob.all_full_grads(x_new)  # (n, d)
@@ -168,7 +202,7 @@ class ByzVRMarinaPP:
             )
             payload = self.attack(ctx)
             msgs = jnp.where(good[:, None], grads, payload)
-            return self.agg(msgs, mask=sampled, key=k_agg)
+            return self.server.aggregate(msgs, mask=sampled, key=k_agg)
 
         def diff_branch(_):
             diffs = prob.all_minibatch_diffs(k_q, x_new, state.x, cfg.batch)
@@ -179,12 +213,14 @@ class ByzVRMarinaPP:
             )
             payload = self.attack(ctx)
             msgs = jnp.where(good[:, None], qdiffs, payload)
-            if not cfg.use_clipping:  # static: skip the norm pass entirely
-                return state.g + self.agg(msgs, mask=sampled, key=k_agg)
+            if lam is None:  # no clip stage: skip the norm pass entirely
+                return state.g + self.server.aggregate(
+                    msgs, mask=sampled, key=k_agg
+                )
             # server-side re-clip fused into the aggregation (pallas backend
             # streams the message matrix twice instead of ~4 times)
-            return state.g + self.agg.clip_then_aggregate(
-                msgs, lam, mask=sampled, key=k_agg
+            return state.g + self.server(
+                msgs, mask=sampled, key=k_agg, radius=lam
             )
 
         g_new = jax.lax.cond(c_k, full_branch, diff_branch, operand=None)

@@ -5,7 +5,11 @@ On TPU the kernels run compiled; on CPU (this container) they execute in
 semantics, which is what the allclose sweeps in tests/test_kernels.py rely
 on.  Callers never pass ``interpret`` themselves.
 
-Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``):
+Backend contract (``repro.core.aggregators.make_aggregator(backend=...)``;
+the declarative entry point selecting it is
+``repro.api.ServerPlan.schedule.backend`` — plans compile to aggregators
+through this same dispatch, so the coverage matrix below is also the
+plan-level backend contract):
 
 - ``backend="jnp"``    — pure-jnp aggregation everywhere (the reference
   path; always available, used inside vmap/shard_map/pjit freely).

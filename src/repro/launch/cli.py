@@ -1,0 +1,101 @@
+"""Shared CLI plumbing for the ServerPlan flags.
+
+``launch/train.py``, ``examples/train_marina_pp.py`` and the serving
+scorer used to re-declare ``--backend/--schedule/--superleaf-elems``
+independently; this module is the single source of the plan-shaped flags,
+so a new spec field lands in every CLI by editing one place:
+
+    ap = argparse.ArgumentParser()
+    add_plan_args(ap)
+    args = ap.parse_args()
+    plan = plan_from_args(args, byz_bound=args.n_byz, clip_alpha=2.0)
+
+``--plan-json`` takes either an inline ``ServerPlan.to_json()`` document
+or a path to one and overrides the individual flags — the canonical way
+to name a plan (benchmark configs and CI perf-gate rows use the same
+serialization).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.api import ServerPlan, plan_from_legacy
+
+__all__ = ["add_plan_args", "plan_from_args"]
+
+
+def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
+                  backend: str = "auto"):
+    """Register the ServerPlan flags on ``ap`` (one group, shared by every
+    CLI).  Defaults are parameterized so launchers can keep their
+    historical behavior."""
+    g = ap.add_argument_group(
+        "server plan",
+        "the clip -> compress -> bucket -> aggregate -> schedule "
+        "composition (repro.api.ServerPlan)",
+    )
+    g.add_argument("--aggregator", default=aggregator,
+                   help="registry rule, optionally 'bucket_'-prefixed "
+                        "(bucket_cm, bucket_krum, ...) for the Bucketing "
+                        "composition")
+    g.add_argument("--agg-schedule", default=placement,
+                   choices=["naive", "sharded"], dest="agg_schedule",
+                   help="placement: naive (paper parameter-server) or "
+                        "sharded (all_to_all scatter/aggregate/gather)")
+    g.add_argument("--schedule", default="sequential",
+                   choices=["sequential", "pipelined"],
+                   help="inner block schedule of the sharded placement "
+                        "(pipelined = double-buffered scatter/aggregate, "
+                        "bitwise-equal to sequential)")
+    g.add_argument("--superleaf-elems", type=int, default=0,
+                   help="> 0: pack the message pytree into uniform "
+                        "superleaf chunks of this many coordinates "
+                        "instead of ragged per-tensor leaves")
+    g.add_argument("--backend", default=backend,
+                   choices=["auto", "jnp", "pallas"],
+                   help="aggregation backend (auto = pallas iff on TPU)")
+    g.add_argument("--bucket-s", type=int, default=2,
+                   help="bucket size of the Bucketing composition "
+                        "(used when --aggregator is bucket_-prefixed)")
+    g.add_argument("--trim-ratio", type=float, default=0.25,
+                   help="trimmed-mean trim ratio in [0, 0.5)")
+    g.add_argument("--plan-json", default="",
+                   help="inline ServerPlan JSON or a path to one; "
+                        "overrides the individual plan flags")
+    return g
+
+
+def plan_from_args(args, *, byz_bound: Optional[int] = None,
+                   clip_alpha: Optional[float] = None,
+                   clip_radius: Optional[float] = None,
+                   use_clipping: bool = True,
+                   compress_frac: float = 0.0,
+                   cohort: Optional[int] = None) -> ServerPlan:
+    """Build the ServerPlan an ``add_plan_args`` parser describes.
+
+    The clip/compress/cohort stages are launcher-owned (their values come
+    from launcher flags like --n-byz or engine defaults), so they arrive
+    as keyword arguments rather than shared flags."""
+    if args.plan_json:
+        doc = args.plan_json
+        if os.path.exists(doc):
+            with open(doc) as f:
+                doc = f.read()
+        return ServerPlan.from_json(doc)
+    return plan_from_legacy(
+        args.aggregator,
+        bucket_s=args.bucket_s,
+        backend=args.backend,
+        placement=args.agg_schedule,
+        blocks=args.schedule,
+        superleaf_elems=args.superleaf_elems,
+        trim_ratio=args.trim_ratio,
+        byz_bound=byz_bound,
+        clip_alpha=clip_alpha,
+        clip_radius=clip_radius,
+        use_clipping=use_clipping,
+        compress_frac=compress_frac,
+        cohort=cohort,
+        warn=False,  # flags ARE the supported spelling of these stages
+    )

@@ -1,10 +1,24 @@
-"""Serving path: batched prefill and incremental decode on the mesh.
+"""Serving path: two products on the same launcher.
 
-Decode shapes lower ``serve_step`` — ONE new token against a KV cache of
-``seq_len`` (``decode_32k``: batch 128 × cache 32768; ``long_500k``: batch 1
-× 524288 context, sliding-window/SSM cache).  The batch dim shards over the
-worker (data) axes, the cache length dim over "model" (see
-repro.sharding.rules.cache_specs).
+1. **Model serving** — batched prefill and incremental decode on the mesh.
+   Decode shapes lower ``serve_step`` — ONE new token against a KV cache
+   of ``seq_len`` (``decode_32k``: batch 128 × cache 32768; ``long_500k``:
+   batch 1 × 524288 context, sliding-window/SSM cache).  The batch dim
+   shards over the worker (data) axes, the cache length dim over "model"
+   (see repro.sharding.rules.cache_specs).
+
+2. **Robust scoring** — batch-of-clients robustness filtering as a
+   service, built on ``repro.api.ServerPlan.build()``: each request
+   carries an (n, d) matrix of client updates; the endpoint runs the
+   plan's full clip -> bucket -> aggregate composition (the same fused
+   kernels the trainer uses) and returns the robust aggregate plus
+   per-client diagnostics (distance-to-aggregate outlier score, clip
+   factor, message norm).  Because the request is self-contained there is
+   no iterate pair, so plans must clip with a static ``ClipSpec(radius=)``
+   (or not at all) — ``make_scoring_step`` validates this at build time.
+
+    python -m repro.launch.serve --mode score --aggregator krum \
+        --requests 8 --clients 16 --dim 4096 --clip-radius 5.0
 """
 from __future__ import annotations
 
@@ -14,6 +28,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import PlanError, ServerPlan
+from repro.core.clipping import clip_factor
 from repro.models.model import (
     ModelConfig,
     apply_decode,
@@ -22,8 +38,18 @@ from repro.models.model import (
     init_params,
 )
 
-__all__ = ["make_prefill_step", "make_serve_step", "abstract_serve_inputs"]
+__all__ = [
+    "make_prefill_step",
+    "make_serve_step",
+    "abstract_serve_inputs",
+    "make_scoring_step",
+    "abstract_scoring_inputs",
+]
 
+
+# ---------------------------------------------------------------------------
+# model serving (decode path)
+# ---------------------------------------------------------------------------
 
 def make_prefill_step(model_cfg: ModelConfig):
     def prefill_step(params, batch):
@@ -57,22 +83,95 @@ def abstract_serve_inputs(model_cfg: ModelConfig, batch: int, cache_len: int):
 
 
 # ---------------------------------------------------------------------------
-# CLI launcher:  python -m repro.launch.serve --arch jamba_v01_52b --smoke
+# robust scoring (ServerPlan path)
 # ---------------------------------------------------------------------------
 
-def main():
-    import argparse
+def make_scoring_step(plan: ServerPlan):
+    """Compile ``plan`` into a batched robust-scoring endpoint.
+
+    ``scoring_step(batch_xs, batch_mask=None, key=None)`` takes a
+    (B, n, d) batch of requests — B independent cohorts of n client
+    update vectors — and returns a dict of per-request results:
+
+      aggregate   (B, d)  the plan's robust aggregate of each request
+      distance    (B, n)  per-client l2 distance to the aggregate (the
+                          outlier score: byzantine payloads that the rule
+                          rejected land far from it)
+      clip_factor (B, n)  the server-clip scale each client received
+                          (1.0 everywhere for plans without a clip stage)
+      norm        (B, n)  per-client message norms
+
+    ``batch_mask`` (B, n) marks the participating clients of each request
+    (partial participation); None means all.  Requests are mapped with
+    ``lax.map`` so the fused per-request kernels stay exactly the shapes
+    the trainer runs.
+    """
+    if plan.schedule.placement != "naive":
+        raise PlanError(
+            "the scoring endpoint aggregates each request whole-message "
+            "in-process; use ScheduleSpec(placement='naive') — the "
+            "sharded placement is a mesh-trainer schedule"
+        )
+    if plan.clip is not None and plan.clip.radius is None:
+        raise PlanError(
+            "scoring requests carry no iterate pair, so the "
+            "data-dependent ClipSpec(alpha) radius is undefined here; "
+            "use ClipSpec(radius=...) for a static server clip, or drop "
+            "the clip stage"
+        )
+    step = plan.build()
+
+    def score_one(xs, mask, key):
+        x32 = xs.astype(jnp.float32)
+        agg = step(xs, mask=mask, key=key)  # static clip radius applies
+        a32 = agg.astype(jnp.float32)
+        dist = jnp.sqrt(jnp.sum((x32 - a32[None, :]) ** 2, axis=1))
+        norms = jnp.sqrt(jnp.sum(x32 * x32, axis=1))
+        if plan.clip is not None:
+            fac = clip_factor(norms, jnp.float32(plan.clip.radius))
+        else:
+            fac = jnp.ones_like(norms)
+        return {
+            "aggregate": a32,
+            "distance": dist,
+            "clip_factor": fac,
+            "norm": norms,
+        }
+
+    def scoring_step(batch_xs, batch_mask=None, key: Optional[jax.Array] = None):
+        B, n = batch_xs.shape[0], batch_xs.shape[1]
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, B)
+        if batch_mask is None:
+            batch_mask = jnp.ones((B, n), bool)
+        return jax.lax.map(
+            lambda args: score_one(*args), (batch_xs, batch_mask, keys)
+        )
+
+    return scoring_step
+
+
+def abstract_scoring_inputs(batch: int, n_clients: int, dim: int,
+                            dtype=jnp.float32):
+    """ShapeDtypeStructs for (batch_xs, batch_mask, key)."""
+    return (
+        jax.ShapeDtypeStruct((batch, n_clients, dim), dtype),
+        jax.ShapeDtypeStruct((batch, n_clients), jnp.bool_),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI launcher:
+#   python -m repro.launch.serve --arch jamba_v01_52b            (decode)
+#   python -m repro.launch.serve --mode score --aggregator krum  (scoring)
+# ---------------------------------------------------------------------------
+
+def _main_decode(args):
     import time
 
-    import jax.numpy as jnp
-
     from repro.configs.registry import get_smoke_config
-
-    ap = argparse.ArgumentParser(description="batched serving driver")
-    ap.add_argument("--arch", default="minitron_8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=24)
-    args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     if not cfg.causal:
@@ -92,6 +191,66 @@ def main():
         tok = nxt[:, None]
     print(f"[serve] {cfg.name}: {args.tokens} tokens x batch {args.batch} in "
           f"{time.time()-t0:.2f}s")
+
+
+def _main_score(args):
+    import time
+
+    import numpy as np
+
+    from .cli import plan_from_args
+
+    plan = plan_from_args(
+        args, byz_bound=args.n_byz,
+        clip_radius=args.clip_radius if args.clip_radius > 0 else None,
+        use_clipping=args.clip_radius > 0,
+    )
+    scoring = jax.jit(make_scoring_step(plan))
+    B, n, d = args.requests, args.clients, args.dim
+    rng = np.random.RandomState(0)
+    xs = rng.randn(B, n, d).astype(np.float32)
+    # trailing n_byz clients of every request send 100x payloads
+    if args.n_byz:
+        xs[:, n - args.n_byz:, :] *= 100.0
+    key = jax.random.PRNGKey(2)
+    jax.block_until_ready(scoring(jnp.asarray(xs), key=key))  # compile
+    t0 = time.time()
+    # same arg structure as the warm-up call, or jit would retrace here
+    out = jax.block_until_ready(scoring(jnp.asarray(xs), key=key))
+    wall = time.time() - t0
+    dist = np.asarray(out["distance"])
+    flagged = (dist > np.median(dist, axis=1, keepdims=True) * 3.0).sum(1)
+    print(f"[serve] scored {B} requests x {n} clients x d={d} "
+          f"(rule={plan.aggregate.rule}) in {wall*1e3:.1f} ms "
+          f"({wall/B*1e3:.2f} ms/request)")
+    print(f"[serve] outliers flagged per request: {flagged.tolist()}")
+
+
+def main():
+    import argparse
+
+    from .cli import add_plan_args
+
+    ap = argparse.ArgumentParser(description="serving driver")
+    ap.add_argument("--mode", default="decode", choices=["decode", "score"])
+    # decode-mode flags
+    ap.add_argument("--arch", default="minitron_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=24)
+    # scoring-mode flags (+ the shared ServerPlan group)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--n-byz", type=int, default=2)
+    ap.add_argument("--clip-radius", type=float, default=0.0,
+                    help="> 0: static server clip radius of the scoring "
+                         "plan (ClipSpec(radius=...))")
+    add_plan_args(ap, placement="naive")
+    args = ap.parse_args()
+    if args.mode == "score":
+        _main_score(args)
+    else:
+        _main_decode(args)
 
 
 if __name__ == "__main__":

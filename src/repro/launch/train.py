@@ -4,87 +4,52 @@ Mapping (see DESIGN.md §4): worker == (pod, data) mesh index; per-worker
 variance-reduced gradients are computed with ``jax.vmap(..,
 spmd_axis_name=worker_axes)`` (so XLA pins the worker dim to the data axes
 and never replicates it), then clipped/compressed messages are robustly
-aggregated ACROSS the worker axes with one of two collective schedules:
+aggregated ACROSS the worker axes by the trainer's ``ServerPlan`` — the
+declarative clip -> compress -> bucket -> aggregate -> schedule
+composition of :mod:`repro.api`.  ``plan.build(mesh)`` compiles the plan
+into the mesh ``ServerStep``; the collective schedules themselves
+(naive / sharded placement, sequential / pipelined double-buffered block
+order, superleaf packing, whole-tree two-phase selection) live in
+:mod:`repro.api.mesh_exec` and are documented there.
 
-  naive    — the paper's parameter-server semantics: gather every worker's
-             message (XLA all-gathers the worker dim), aggregate everywhere.
-             Collective bytes per chip ~ W * |shard|.
-  sharded  — beyond-paper scatter-aggregate-gather: all_to_all the worker
-             messages so each chip owns all W values for 1/W-th of its
-             coordinates, aggregate locally, all_gather the result.
-             Collective bytes per chip ~ 2 * |shard|; peak memory W× lower.
+``ByzTrainConfig`` carries the trainer-side knobs (stepsize, cohort,
+attack, sharding mode) plus EITHER an explicit ``plan=ServerPlan(...)``
+or the legacy string knobs (``aggregator`` — optionally
+"bucket_"-prefixed — ``backend``, ``agg_schedule``, ``schedule``,
+``superleaf_elems``, ...), which keep working via
+``repro.api.plan_from_legacy`` translation (DeprecationWarning); the
+translated plan builds the identical aggregation, so legacy and
+plan-built trajectories are bitwise-equal.
 
-Both schedules compute the identical (delta, c)-robust aggregation for
-the WHOLE aggregator registry: coordinate-wise rules shard trivially, and
-the non-coordinate-wise ones (krum, centered-clip, Weiszfeld GM) get
-their global row statistics via a per-leaf psum hook (``reduce_fn``)
-threaded into the per-chip aggregation.  The server-side clip (Alg.1
-l.10) is fused into the aggregation: ``robust_aggregate(radius=...)``
-computes per-worker global tree norms in one batched pass and the
-per-chip ``Aggregator.clip_then_aggregate`` applies the factors
-in-register (2 HBM streams instead of ~4; with ``cfg.backend="pallas"``
-the per-chip step is the fused Pallas kernel on the all_to_all's
-(W, d/W) block).
-
-Selection rules (krum/multi_krum, plain or bucketed) are WHOLE-TREE on
-the mesh: Algorithm 1 applies the aggregator to the whole message, so a
-per-leaf winner would be a different (per-tensor-robust) estimator.  The
-mesh trainer instead accumulates ONE (W, W) Gram matrix across the
-per-leaf loop via the aggregator's two-phase contract — the Gram is
-additive over leaves, and each leaf's contribution is psum-reduced over
-exactly the axes its coordinates shard over — then selects once and
-applies the winner (or multi-Krum weights) leafwise.  The stacked
-(W, d_total) message never exists as one buffer on any schedule.
-
-The sharded schedule's inner loop itself has two forms
-(``cfg.schedule``):
-
-  sequential — scatter -> aggregate -> gather one block at a time: the
-               interconnect idles while the aggregation kernel runs and
-               vice versa.  The equivalence oracle.
-  pipelined  — a two-stage software pipeline with a prologue / steady
-               state / epilogue: block i+1's all_to_all is issued (and
-               pinned ahead via ``jax.lax.optimization_barrier``) before
-               block i's aggregation kernel consumes its buffer, so
-               XLA's scheduler can keep the next scatter in flight while
-               the MXU works — steady-state step cost ~ max(comm,
-               compute) instead of comm + compute (see
-               ``benchmarks.bench_kernels.traffic_model_pipeline``).
-               Bitwise-equal to sequential: the same per-block ops are
-               emitted, only their issue order differs.
-
-``cfg.superleaf_elems > 0`` additionally packs the message pytree into
-uniform superleaf chunks (``tree_utils.tree_superleaf_pack``, grouped by
-shard axes so each chunk keeps one well-defined cross-shard psum)
-instead of ragged per-tensor leaves: the pipeline then runs over
-same-shape (W, chunk/W) blocks — one uniform dispatch-layer call per
-chunk, one buffer shape for the double buffer.  Exact for
-coordinate-wise rules (per-coordinate math is partition-independent) and
-for two-phase selection rules (the Gram is additive over any coordinate
-partition); for the iterative rules (cclip/rfa) the chunks REPLACE the
-per-tensor leaves as the robust-aggregation block partition — the same
-block-robust semantics the per-leaf path already has, with uniform
-blocks instead of tensor-boundary blocks.
+``robust_aggregate`` remains the long-standing functional entry point and
+now simply runs ``plan.build(mesh)`` on the config's resolved plan.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache, partial
+from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.aggregators import make_aggregator
-from repro.core.clipping import clip_factor
-from repro.core.tree_utils import tree_norm, tree_superleaf_pack
+from repro.api import PlanError, ServerPlan, plan_from_legacy
+from repro.api.mesh_exec import leaf_agg_of
+from repro.core.tree_utils import tree_norm
 from repro.models.model import ModelConfig, apply_train, init_params
 from repro.sharding import constraints as cons
 from repro.sharding.rules import batch_specs, param_specs, state_sharding
 from .mesh import num_workers, set_mesh, worker_axes
 
-__all__ = ["ByzTrainConfig", "MeshTrainState", "make_train_step", "abstract_state"]
+__all__ = [
+    "ByzTrainConfig",
+    "MeshTrainState",
+    "make_train_step",
+    "robust_aggregate",
+    "abstract_state",
+    "resolve_plan",
+]
 
 F32 = jnp.float32
 _BIG = F32(3.4e37)
@@ -98,31 +63,21 @@ class ByzTrainConfig:
     C: int = 0  # sampled cohort size (0 => all workers)
     clip_alpha: float = 2.0  # lambda = clip_alpha * ||x+ - x||
     use_clipping: bool = True
+    # THE aggregation composition: a repro.api.ServerPlan.  When None, the
+    # legacy string knobs below are translated via plan_from_legacy
+    # (DeprecationWarning) — bitwise-equivalent, kept for back-compat.
+    plan: Optional[ServerPlan] = None
+    # -- legacy string knobs (pre-ServerPlan; still honored when plan=None)
     # any core-registry rule: "cm" | "tm" | "mean" | "cclip" | "rfa" |
     # "krum" | "multi_krum", optionally "bucket_"-prefixed ("bucket_cm",
     # "bucket_krum", ...) for the Bucketing composition with bucket_s
     aggregator: str = "cm"
     trim_ratio: float = 0.25
     bucket_s: int = 2
-    # aggregation backend: "jnp" | "pallas" | "auto" (pallas iff on TPU).
-    # Threads through _make_leaf_agg into the per-chip aggregation of both
-    # collective schedules; the sharded schedule then runs the fused
-    # clip->aggregate kernel on its chip-local (W, d/W) block.
-    backend: str = "auto"
-    agg_schedule: str = "sharded"  # "naive" | "sharded"
-    # inner block schedule of robust_aggregate (module docstring):
-    #   "sequential" — scatter -> aggregate -> gather one block at a time
-    #                  (the equivalence oracle)
-    #   "pipelined"  — double-buffered: block i+1's all_to_all is issued
-    #                  ahead of block i's aggregation kernel so comm and
-    #                  compute overlap; bitwise-equal to "sequential"
-    schedule: str = "sequential"
-    # > 0: pack the message pytree into uniform superleaf chunks of this
-    # many coordinates (chip-local in the sharded schedule) instead of
-    # ragged per-tensor leaves — one uniform dispatch per chunk.  Exact
-    # for coordinate-wise and selection rules; for cclip/rfa the chunks
-    # become the block partition (module docstring).
-    superleaf_elems: int = 0
+    backend: str = "auto"  # "jnp" | "pallas" | "auto" (pallas iff on TPU)
+    agg_schedule: str = "sharded"  # "naive" | "sharded" placement
+    schedule: str = "sequential"  # "sequential" | "pipelined" block order
+    superleaf_elems: int = 0  # > 0: uniform superleaf chunk packing
     attack: str = "bf"  # "none" | "bf" | "gauss"
     compress_frac: float = 0.0  # leafwise RandK fraction (0 = off)
     shard_mode: str = "tp"  # "tp" | "fsdp_tp"
@@ -134,6 +89,67 @@ class ByzTrainConfig:
     worker_axes_override: tuple = ()
     seed: int = 0
 
+    @classmethod
+    def from_plan(cls, plan: ServerPlan, **overrides) -> "ByzTrainConfig":
+        """Config with ``plan`` as the aggregation composition; the legacy
+        mirror fields are filled from the plan so introspection/reporting
+        code reading them (e.g. the dry-run driver) stays truthful.
+
+        With ``plan`` set, the PLAN is the source of truth for the
+        aggregation stages: overriding a mirror of a plan stage
+        (``use_clipping``, ``clip_alpha``, ``compress_frac``,
+        ``aggregator``/``backend``/schedule knobs) changes only the
+        reported value, not the built step — edit the plan instead.
+        Trainer-owned knobs (``gamma``, ``p``, ``n_byz``, ``attack``,
+        ``shard_mode``, and ``C``/``worker_axes_override`` when the plan
+        leaves cohort/worker_axes unset) are honored from overrides."""
+        sched = plan.schedule
+        mirrors = dict(
+            aggregator=("bucket_" if plan.bucket is not None else "")
+            + plan.aggregate.rule,
+            trim_ratio=plan.aggregate.trim_ratio,
+            bucket_s=plan.bucket.s if plan.bucket is not None else 2,
+            backend=sched.backend,
+            agg_schedule=sched.placement,
+            schedule=sched.blocks,
+            superleaf_elems=sched.superleaf_elems,
+            worker_axes_override=tuple(sched.worker_axes),
+            use_clipping=plan.clip is not None,
+            C=plan.cohort or 0,
+            compress_frac=(
+                plan.compress.frac
+                if plan.compress is not None
+                and plan.compress.kind == "rand_fraction"
+                else 0.0
+            ),
+        )
+        if plan.clip is not None and plan.clip.alpha is not None:
+            mirrors["clip_alpha"] = plan.clip.alpha
+        mirrors.update(overrides)
+        return cls(plan=plan, **mirrors)
+
+
+def resolve_plan(cfg: ByzTrainConfig) -> ServerPlan:
+    """The config's ServerPlan: explicit ``cfg.plan``, or the legacy
+    string knobs translated (DeprecationWarning, bitwise-equivalent)."""
+    if cfg.plan is not None:
+        return cfg.plan
+    return plan_from_legacy(
+        cfg.aggregator,
+        bucket_s=cfg.bucket_s,
+        backend=cfg.backend,
+        placement=cfg.agg_schedule,
+        blocks=cfg.schedule,
+        superleaf_elems=cfg.superleaf_elems,
+        worker_axes=tuple(cfg.worker_axes_override),
+        trim_ratio=cfg.trim_ratio,
+        byz_bound=cfg.n_byz,
+        clip_alpha=cfg.clip_alpha,
+        use_clipping=cfg.use_clipping,
+        compress_frac=cfg.compress_frac,
+        cohort=cfg.C or None,
+    )
+
 
 class MeshTrainState(NamedTuple):
     params: object  # x^k
@@ -143,391 +159,30 @@ class MeshTrainState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# masked aggregation over the worker axis (axis 0 of every leaf)
+# aggregation entry points (back-compat wrappers over the ServerPlan API)
 # ---------------------------------------------------------------------------
 
-# mesh-config name -> core-registry name (legacy spellings kept)
-_AGG_NAMES = {
-    "cm": "cm",
-    "tm": "trimmed_mean",
-    "mean": "mean",
-    "cclip": "centered_clip",
-    "rfa": "rfa",
-    "gm": "rfa",
-    "krum": "krum",
-    "multi_krum": "multi_krum",
-}
-
-
-def _make_mesh_aggregator(cfg: ByzTrainConfig):
-    """Resolve a mesh config to a core-registry ``Aggregator`` (the
-    dispatch layer: every registry rule, pallas kernels under
-    ``cfg.backend``, 'bucket_'-prefixed Bucketing composition)."""
-    name = cfg.aggregator
-    bucket_s = 0
-    if name.startswith("bucket_"):
-        name = name[len("bucket_"):]
-        bucket_s = cfg.bucket_s
-    if name not in _AGG_NAMES:
-        raise ValueError(
-            f"unknown mesh aggregator {cfg.aggregator!r}; have "
-            f"{sorted(_AGG_NAMES)} (optionally 'bucket_'-prefixed)"
-        )
-    name = _AGG_NAMES[name]
-    kwargs = {}
-    if name == "trimmed_mean":
-        kwargs["trim_ratio"] = cfg.trim_ratio
-    if name in ("krum", "multi_krum"):
-        kwargs["byz_bound"] = cfg.n_byz
-    return make_aggregator(
-        name, bucket_s=bucket_s, backend=cfg.backend, **kwargs
-    )
-
-
 def _make_leaf_agg(cfg: ByzTrainConfig):
-    """Per-chip aggregation over the worker axis, built on the core
-    dispatch layer so every registry rule (and the pallas kernels, under
-    ``cfg.backend``) is available on the mesh.
-
-    The returned ``leaf_agg(leaf, mask, key, factors=None)`` flattens the
-    (W, ...) leaf to the kernels' (n, d) shape; with ``factors`` it routes
-    through ``Aggregator.clip_then_aggregate`` — the fused server step —
-    instead of clip-then-plain-aggregate (no clipped matrix in HBM).
-
-    Non-selection rules apply this leafwise (one rule application per
-    parameter tensor — exact for the whole registry given the psum'd row
-    statistics).  Selection rules do NOT go through this per-leaf path in
-    ``robust_aggregate``: they defer the decision across leaves via the
-    aggregator's two-phase contract so the winner is whole-tree (module
-    docstring); ``leaf_agg`` remains the single-leaf semantics used by
-    direct callers and tests.
-    """
-    return _leaf_agg_of(_make_mesh_aggregator(cfg))
-
-
-def _leaf_agg_of(agg):
-    def leaf_agg(leaf, mask, key, factors=None, reduce_fn=None):
-        mat = leaf.reshape(leaf.shape[0], -1)
-        if factors is None:
-            out = agg(mat, mask=mask, key=key, reduce_fn=reduce_fn)
-        else:
-            out = agg.clip_then_aggregate(
-                mat, _BIG, mask=mask, key=key, factors=factors,
-                reduce_fn=reduce_fn,
-            )
-        return out.reshape(leaf.shape[1:])
-
-    return leaf_agg
-
-
-def _spec_axes(spec):
-    """Mesh axes a PartitionSpec shards over (flattened)."""
-    axes = []
-    for entry in spec:
-        if isinstance(entry, (tuple, list)):
-            axes.extend(a for a in entry if a is not None)
-        elif entry is not None:
-            axes.append(entry)
-    return tuple(axes)
-
-
-@lru_cache(maxsize=None)
-def _psum_reduce(axis_names: tuple):
-    """One partial per axes tuple: ``reduce_fn`` is a *static* jit arg of
-    the kernel wrappers and partials hash by identity, so a fresh partial
-    per leaf/trace would defeat their jit caches (per-leaf re-lowering
-    and unbounded cache growth)."""
-    return partial(jax.lax.psum, axis_name=axis_names)
-
-
-def _worker_message_norms(tree_w):
-    """Per-worker *global* message norms (worker axis 0): the tree_norm
-    each worker's whole message would report, batched — single source of
-    truth with the lam = alpha*gamma*tree_norm(g) radius."""
-    return jax.vmap(tree_norm)(tree_w)
-
-
-def _schedule_map(produce, consume, n, pipelined: bool):
-    """``outs[i] = consume(i, produce(i))`` over ``n`` blocks.
-
-    ``pipelined=False``: strictly in order (produce i, consume i,
-    produce i+1, ...).  ``pipelined=True``: the two-stage software
-    pipeline — prologue issues produce(0); in steady state produce(i+1)
-    is emitted BEFORE consume(i) and schedule-pinned to it with
-    ``jax.lax.optimization_barrier`` (consumers of block i's buffer
-    depend on block i+1's produce having been issued), so XLA keeps the
-    next block's collective in flight while the current block's kernel
-    runs; the epilogue consumes the last buffer.  Identity on values:
-    both orders emit exactly the same per-block ops, so results are
-    bitwise-equal — only the issue order differs."""
-    if n == 0:
-        return []
-    if not pipelined or n == 1:
-        return [consume(i, produce(i)) for i in range(n)]
-    outs = []
-    pending = produce(0)
-    for i in range(n):
-        cur = pending
-        if i + 1 < n:
-            nxt = produce(i + 1)
-            cur, nxt = jax.lax.optimization_barrier((cur, nxt))
-            pending = nxt
-        outs.append(consume(i, cur))
-    return outs
+    """Per-chip aggregation over the worker axis for ONE leaf, resolved
+    from the config's plan — the single-leaf semantics used by direct
+    callers and tests (the mesh step itself routes selection rules through
+    the whole-tree two-phase path; see repro.api.mesh_exec)."""
+    return leaf_agg_of(resolve_plan(cfg).build_aggregator())
 
 
 def robust_aggregate(tree_w, mask, key, *, mesh, cfg: ByzTrainConfig,
                      base_specs=None, radius=None):
     """Aggregate a worker-stacked pytree (leaves (W, ...)) into the
-    aggregated pytree (leaves (...)) with the configured schedule.
+    aggregated pytree (leaves (...)) under the config's resolved
+    ServerPlan — equivalent to ``resolve_plan(cfg).build(mesh)(...)``.
 
     ``radius``: when set, every worker message is l2-clipped at ``radius``
-    by its *global* tree norm before aggregation — the Algorithm-1 server
-    re-clip, as a 2-stream fused step: one batched norm reduction over the
-    stacked tree (pass 1), then per-chip ``Aggregator.clip_then_aggregate``
-    with the precomputed factors applied in-register during the
-    aggregation read (pass 2).  The clipped message tree is never
-    materialized, unlike the former clip-tree-then-aggregate path (~4
-    streams).
-
-    ``base_specs``: PartitionSpec pytree of the UNSTACKED leaves (the grad
-    sharding).  The sharded schedule runs a fully-manual shard_map matching
-    the exact grad sharding so the in-kernel flatten is chip-local —
-    flattening a model-sharded dim under auto propagation silently
-    all-gathers it (found and fixed during §Perf pair (a): the naive
-    schedule was beating the "optimized" one before this).  The
-    all_to_all lands a chip-local (W, d/W) block on every chip — exactly
-    the fused kernel's input shape, so with ``backend="pallas"`` the mesh
-    trainer gets the same 2-stream server step as the simulation engine.
-
-    Selection rules route through the aggregator's two-phase contract
-    instead of the per-leaf rule application: one (W, W) Gram accumulated
-    across the leaf loop (per-leaf psum over each leaf's own shard axes),
-    one whole-tree selection, then the winner/weights applied leafwise —
-    sharded krum matches the engine's whole-message Krum without ever
-    materializing the stacked (W, d_total) message.
-
-    ``cfg.schedule`` picks the inner block schedule ("sequential" |
-    "pipelined" — bitwise-equal, module docstring) and
-    ``cfg.superleaf_elems`` the block partition (ragged per-tensor
-    leaves, or uniform superleaf chunks packed per shard-axes group).
-    """
-    agg_rule = _make_mesh_aggregator(cfg)
-    leaf_agg = _leaf_agg_of(agg_rule)
-    two_phase = agg_rule.supports_two_phase
-    if cfg.schedule not in ("sequential", "pipelined"):
-        raise ValueError(
-            f"unknown schedule {cfg.schedule!r}; have 'sequential', "
-            "'pipelined'"
-        )
-    pipelined = cfg.schedule == "pipelined"
-    chunk_elems = int(cfg.superleaf_elems)
-    if chunk_elems < 0:
-        raise ValueError(f"superleaf_elems must be >= 0, got {chunk_elems}")
-    waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
-    W = 1
-    for a in waxes:
-        W *= mesh.shape[a]
-
-    n_rows = jax.tree_util.tree_leaves(tree_w)[0].shape[0]
-    use_factors = radius is not None
-    if use_factors:
-        factors = clip_factor(_worker_message_norms(tree_w), radius).astype(F32)
-    else:
-        factors = jnp.ones((n_rows,), F32)
-
-    if cfg.agg_schedule == "naive" or not waxes:
-        # no collectives to overlap: cfg.schedule is a no-op here, but
-        # superleaf packing still applies (uniform per-chunk dispatch)
-        if chunk_elems > 0:
-            chunks, _, unpack = tree_superleaf_pack(tree_w, chunk_elems)
-            if two_phase:
-                stats = agg_rule.accumulate_stats(chunks)
-                sel = agg_rule.finalize(
-                    stats, mask=mask, key=key,
-                    factors=factors if use_factors else None,
-                )
-                rows = agg_rule.apply_selection(chunks, sel)
-            else:
-                rows = [
-                    leaf_agg(
-                        c, mask, key,
-                        factors=factors if use_factors else None,
-                    )
-                    for c in chunks
-                ]
-            return unpack(rows)
-        if two_phase:
-            leaves, treedef = jax.tree_util.tree_flatten(tree_w)
-            mats = [l.reshape(l.shape[0], -1) for l in leaves]
-            stats = agg_rule.accumulate_stats(mats)
-            sel = agg_rule.finalize(
-                stats, mask=mask, key=key,
-                factors=factors if use_factors else None,
-            )
-            outs = [
-                agg_rule.apply_selection(mat, sel).reshape(l.shape[1:])
-                for mat, l in zip(mats, leaves)
-            ]
-            return jax.tree_util.tree_unflatten(treedef, outs)
-        return jax.tree_util.tree_map(
-            lambda l: leaf_agg(
-                l, mask, key, factors=factors if use_factors else None
-            ),
-            tree_w,
-        )
-
-    if n_rows != W:
-        # the sharded schedule shards the worker axis over ``waxes``; a
-        # row-count mismatch would silently drop (or duplicate) workers
-        # in the per-chip scatter
-        raise ValueError(
-            f"sharded robust_aggregate needs one row per worker: leaves "
-            f"carry {n_rows} rows but the mesh enumerates {W} workers "
-            f"over {waxes}"
-        )
-    wspec = waxes if len(waxes) > 1 else waxes[0]
-    if base_specs is None:
-        base_specs = jax.tree_util.tree_map(
-            lambda l: P(*([None] * (l.ndim - 1))), tree_w
-        )
-    in_specs = jax.tree_util.tree_map(
-        lambda s: P(wspec, *s), base_specs, is_leaf=lambda x: isinstance(x, P)
-    )
-
-    # every axis referenced by the specs must be marked manual
-    referenced = set(waxes)
-    for sp in jax.tree_util.tree_leaves(
-        base_specs, is_leaf=lambda x: isinstance(x, P)
-    ):
-        for entry in sp:
-            if isinstance(entry, (tuple, list)):
-                referenced.update(entry)
-            elif entry is not None:
-                referenced.add(entry)
-    all_axes = referenced | (
-        {"model"} if "model" in mesh.axis_names else set()
-    )
-
-    def body(t, m, k, f):
-        leaves, treedef = jax.tree_util.tree_flatten(t)
-        spec_leaves = jax.tree_util.tree_leaves(
-            base_specs, is_leaf=lambda x: isinstance(x, P)
-        )
-        # Each block's coordinates are spread over the worker axes (the
-        # all_to_all chunks) plus whatever axes its grad spec shards — a
-        # psum over exactly those gives the non-coordinate-wise rules
-        # their global row statistics, making the sharded schedule equal
-        # to the naive full-vector semantics for the whole registry.
-        stat_axes = [tuple(waxes) + _spec_axes(sp) for sp in spec_leaves]
-        if chunk_elems > 0:
-            # uniform superleaf chunks, grouped by shard axes so every
-            # chunk keeps ONE well-defined cross-shard psum
-            packed, block_axes, unpack = tree_superleaf_pack(
-                t, chunk_elems, group_ids=stat_axes
-            )
-            flats = [p[0] for p in packed]  # chip-local (chunk,) vectors
-            shapes = None
-        else:
-            flats = [l[0].reshape(-1) for l in leaves]  # chip-local
-            block_axes = stat_axes
-            shapes = [l.shape[1:] for l in leaves]
-            unpack = None
-        sizes = [fl.shape[0] for fl in flats]
-        pads = [(-s) % W for s in sizes]
-
-        def scatter(i):
-            """Chip-local flat block i -> the (W, size/W) all_to_all
-            block (the fused kernel's exact input shape)."""
-            flat = flats[i]  # chip-local: no hidden resharding
-            if pads[i]:
-                flat = jnp.pad(flat, (0, pads[i]))
-            sw = flat.reshape(W, -1)
-            for ax in waxes:  # all_to_all over each worker axis in turn
-                n_ax = mesh.shape[ax]  # static (axis_size needs >= 0.5)
-                sw = sw.reshape(n_ax, -1, sw.shape[-1])
-                sw = jax.lax.all_to_all(sw, ax, split_axis=0, concat_axis=0)
-                sw = sw.reshape(-1, sw.shape[-1])
-            return sw
-
-        def gather(aggd, i):
-            out = aggd
-            for ax in reversed(waxes):
-                out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
-            if pads[i]:
-                out = out[: sizes[i]]
-            return out
-
-        if two_phase:
-            # whole-tree selection: accumulate ONE (W, W) Gram across the
-            # block loop (additive; per-block psum over that block's own
-            # shard axes makes each term global), select once, apply the
-            # winner/weights blockwise.  Pipelined, the i+1 scatter flies
-            # while block i's Gram kernel runs; the apply phase then
-            # overlaps each block's apply kernel with the previous
-            # block's all_gather.
-            scat = []
-
-            def consume_gram(i, sw):
-                scat.append(sw)
-                return agg_rule.accumulate_stats(
-                    sw, reduce_fn=_psum_reduce(block_axes[i])
-                )
-            grams = _schedule_map(scatter, consume_gram, len(flats),
-                                  pipelined)
-            stats = grams[0]
-            for g in grams[1:]:
-                stats = stats + g
-            sel = agg_rule.finalize(
-                stats, mask=m, key=k, factors=f if use_factors else None
-            )
-            rows = _schedule_map(
-                lambda i: agg_rule.apply_selection(scat[i], sel),
-                lambda i, applied: gather(applied, i),
-                len(flats), pipelined,
-            )
-        else:
-            def consume_agg(i, sw):
-                aggd = leaf_agg(
-                    sw, m, k,
-                    factors=f if use_factors else None,
-                    reduce_fn=_psum_reduce(block_axes[i]),
-                )  # (size/W,)
-                return gather(aggd, i)
-            rows = _schedule_map(scatter, consume_agg, len(flats),
-                                 pipelined)
-
-        if unpack is not None:
-            return unpack(rows)
-        outs = [r.reshape(shp) for r, shp in zip(rows, shapes)]
-        return jax.tree_util.tree_unflatten(treedef, outs)
-
-    smapped = _shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(in_specs, P(), P(), P()),
-        out_specs=base_specs,
-        axis_names=all_axes,
-    )
-    return smapped(tree_w, mask, key, factors)
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs, axis_names):
-    """jax.shard_map on jax >= 0.5; jax.experimental.shard_map before.
-
-    The legacy API has no ``axis_names`` — every mesh axis is manual, which
-    matches the callers here (``axis_names`` always covers the whole mesh:
-    worker axes plus "model")."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=axis_names, check_vma=False,
-        )
-    from jax.experimental.shard_map import shard_map as legacy_shard_map
-
-    return legacy_shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
-    )
+    by its *global* tree norm before aggregation (the Algorithm-1 server
+    re-clip fused into the per-chip kernels).  ``base_specs``: the
+    unstacked grad PartitionSpecs (see ``repro.api.mesh_exec``)."""
+    step = resolve_plan(cfg).build(mesh)
+    return step(tree_w, mask=mask, key=key, radius=radius,
+                base_specs=base_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -570,13 +225,34 @@ def _attack_payload(cfg: ByzTrainConfig, key, honest_tree):
 # ---------------------------------------------------------------------------
 
 def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
-    """Build the jittable train_step for the mesh."""
-    waxes = tuple(cfg.worker_axes_override) or worker_axes(mesh)
+    """Build the jittable train_step for the mesh.
+
+    The aggregation composition is the config's resolved ServerPlan,
+    compiled once via ``plan.build(mesh)``; the plan also supplies the
+    clip stage (lambda = alpha * gamma * ||g||) and the compression
+    fraction, so the trainer contains no aggregation wiring of its own.
+    """
+    plan = resolve_plan(cfg)
+    server = plan.build(mesh)
+    # cohort and worker axes are trainer-owned knobs when the plan leaves
+    # them unset; an explicit plan.cohort / plan.schedule.worker_axes wins
+    waxes = (tuple(plan.schedule.worker_axes)
+             or tuple(cfg.worker_axes_override) or worker_axes(mesh))
     W = 1
     for a in waxes:
         W *= mesh.shape[a]
-    C = cfg.C if cfg.C else W
+    C = plan.cohort or cfg.C or W
     spmd = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+
+    compress_frac = 0.0
+    if plan.compress is not None:
+        if plan.compress.kind != "rand_fraction":
+            raise PlanError(
+                "the mesh trainer's worker-side compression is leafwise "
+                "RandK by fraction; use CompressSpec(kind='rand_fraction', "
+                f"frac=...), got kind={plan.compress.kind!r}"
+            )
+        compress_frac = plan.compress.frac
 
     def loss_fn(params, wbatch):
         loss, _aux = apply_train(params, model_cfg, wbatch)
@@ -651,8 +327,11 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
             state.params,
             state.g,
         )
-        lam = cfg.clip_alpha * cfg.gamma * tree_norm(state.g)
-        lam = jnp.where(cfg.use_clipping, lam, _BIG)
+        if server.clips and plan.clip.radius is not None:
+            lam = jnp.float32(plan.clip.radius)
+        else:
+            alpha = plan.clip.alpha if server.clips else 0.0
+            lam = alpha * cfg.gamma * tree_norm(state.g)
 
         # cohort mask over workers; byz mask static
         perm = jax.random.permutation(k_cohort, W)
@@ -676,8 +355,8 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
 
             def message(i, d_i):
                 mk = jax.random.fold_in(k_q, i)
-                if cfg.compress_frac > 0.0:
-                    d_i = _leafwise_randk(mk, d_i, cfg.compress_frac)
+                if compress_frac > 0.0:
+                    d_i = _leafwise_randk(mk, d_i, compress_frac)
                 payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), d_i)
                 return jax.tree_util.tree_map(
                     lambda h, a: jnp.where(byz[i], a, h), d_i, payload
@@ -689,9 +368,9 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
             # one batched norm pass + factors applied in-register by the
             # per-chip clip_then_aggregate, never materializing the
             # clipped message tree
-            agg = robust_aggregate(msgs, sampled, k_agg, mesh=mesh, cfg=cfg,
-                                   base_specs=base_specs_of(msgs),
-                                   radius=lam if cfg.use_clipping else None)
+            agg = server(msgs, mask=sampled, key=k_agg,
+                         base_specs=base_specs_of(msgs),
+                         radius=lam if server.clips else None)
             return jax.tree_util.tree_map(
                 lambda g, a: (g.astype(F32) + a.astype(F32)).astype(g.dtype),
                 state.g,
@@ -707,7 +386,9 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
 
             msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), grads_new)
             msgs = grad_constraint(msgs)
-            return robust_aggregate(msgs, sampled, k_agg, mesh=mesh, cfg=cfg,
+            # full-gradient rounds aggregate RAW gradients (Alg. 1): no
+            # clip even under a static-radius plan
+            return server.aggregate(msgs, mask=sampled, key=k_agg,
                                     base_specs=base_specs_of(msgs))
 
         g_new = jax.lax.cond(c_k, full_branch, diff_branch, operand=None)
@@ -756,6 +437,7 @@ def main():
 
     from repro.configs.registry import get_config, get_smoke_config
     from repro.data.pipeline import make_batch_iterator
+    from .cli import add_plan_args, plan_from_args
     from .mesh import make_debug_mesh, make_production_mesh
 
     ap = argparse.ArgumentParser(description="Byz-VR-MARINA-PP mesh trainer")
@@ -768,23 +450,10 @@ def main():
     ap.add_argument("--gamma", type=float, default=0.1)
     ap.add_argument("--n-byz", type=int, default=1)
     ap.add_argument("--attack", default="bf")
-    ap.add_argument("--aggregator", default="cm")
-    ap.add_argument("--agg-schedule", default="sharded")
-    ap.add_argument("--schedule", default="sequential",
-                    choices=["sequential", "pipelined"],
-                    help="inner block schedule of the sharded aggregation "
-                         "(pipelined = double-buffered scatter/aggregate, "
-                         "bitwise-equal to sequential)")
-    ap.add_argument("--superleaf-elems", type=int, default=0,
-                    help="> 0: pack the message pytree into uniform "
-                         "superleaf chunks of this many coordinates "
-                         "instead of ragged per-tensor leaves")
-    ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas"],
-                    help="aggregation backend (auto = pallas iff on TPU)")
     ap.add_argument("--shard-mode", default="tp")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
+    add_plan_args(ap)  # --aggregator/--agg-schedule/--schedule/... (shared)
     args = ap.parse_args()
 
     if args.smoke:
@@ -797,11 +466,10 @@ def main():
         model_cfg = get_config(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)
 
-    tc = ByzTrainConfig(
-        gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
-        aggregator=args.aggregator, agg_schedule=args.agg_schedule,
-        schedule=args.schedule, superleaf_elems=args.superleaf_elems,
-        shard_mode=args.shard_mode, backend=args.backend,
+    plan = plan_from_args(args, byz_bound=args.n_byz, clip_alpha=2.0)
+    tc = ByzTrainConfig.from_plan(
+        plan, gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
+        shard_mode=args.shard_mode,
     )
     W = num_workers(mesh)
     print(f"[train] {model_cfg.name} on mesh {dict(mesh.shape)} "

@@ -1,0 +1,86 @@
+"""Public-surface snapshot: the exported symbols of ``repro`` and
+``repro.api`` are part of the compatibility contract (downstream configs
+name plans by these symbols, the README documents them, the CLIs build
+them).  Accidental surface churn — a renamed spec, a dropped export, a
+new symbol nobody reviewed — must fail CI loudly, not ship silently.
+
+To change the surface INTENTIONALLY, update the snapshots here together
+with README.md's ServerPlan section.
+"""
+import repro
+import repro.api as api
+
+# the frozen snapshots -------------------------------------------------------
+
+REPRO_SURFACE = {
+    "__version__",
+    "ServerPlan",
+    "ServerStep",
+    "ClipSpec",
+    "CompressSpec",
+    "BucketSpec",
+    "AggregatorSpec",
+    "ScheduleSpec",
+    "PlanError",
+    "PlanWarning",
+    "plan_from_legacy",
+}
+
+API_SURFACE = {
+    "ServerPlan",
+    "ServerStep",
+    "ClipSpec",
+    "CompressSpec",
+    "BucketSpec",
+    "AggregatorSpec",
+    "ScheduleSpec",
+    "PlanError",
+    "PlanWarning",
+    "plan_from_legacy",
+}
+
+PLAN_FIELDS = {"aggregate", "clip", "compress", "bucket", "schedule",
+               "cohort"}
+AGGREGATOR_SPEC_FIELDS = {"rule", "trim_ratio", "byz_bound", "m_select",
+                          "tau", "iters"}
+SCHEDULE_SPEC_FIELDS = {"placement", "blocks", "superleaf_elems", "backend",
+                        "worker_axes"}
+
+
+def test_repro_all_matches_snapshot():
+    assert set(repro.__all__) == REPRO_SURFACE
+
+
+def test_repro_api_all_matches_snapshot():
+    assert set(api.__all__) == API_SURFACE
+
+
+def test_every_exported_symbol_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+    for name in api.__all__:
+        assert getattr(api, name) is not None
+    # the lazy repro re-exports resolve to the api objects themselves
+    for name in API_SURFACE:
+        assert getattr(repro, name) is getattr(api, name)
+
+
+def test_spec_field_snapshots():
+    """Spec dataclass fields are serialized into plan JSON — renaming one
+    breaks every stored plan document, so pin them."""
+    import dataclasses
+
+    assert {f.name for f in dataclasses.fields(api.ServerPlan)} == PLAN_FIELDS
+    assert {
+        f.name for f in dataclasses.fields(api.AggregatorSpec)
+    } == AGGREGATOR_SPEC_FIELDS
+    assert {
+        f.name for f in dataclasses.fields(api.ScheduleSpec)
+    } == SCHEDULE_SPEC_FIELDS
+    assert {f.name for f in dataclasses.fields(api.ClipSpec)} == {
+        "alpha", "radius"
+    }
+    assert {f.name for f in dataclasses.fields(api.CompressSpec)} == {
+        "kind", "k", "frac"
+    }
+    assert {f.name for f in dataclasses.fields(api.BucketSpec)} == {"s"}
