@@ -13,6 +13,10 @@ import time
 
 import jax
 
+import dataclasses
+
+from repro.api import CompressSpec
+from repro.configs.paper import paper_plan
 from repro.core import ByzVRMarinaPP, MarinaPPConfig, logistic_problem
 
 
@@ -35,8 +39,8 @@ def run(quick: bool = False):
 
     for C in (1, 2, 4, 8, 20):
         cfg = MarinaPPConfig(
-            gamma=0.5, p=0.2, C=C, C_hat=20, batch=32, clip_alpha=1.0,
-            use_clipping=True, aggregator="cm", bucket_s=2, attack="shb",
+            gamma=0.5, p=0.2, C=C, C_hat=20, batch=32,
+            plan=paper_plan("cm", 1.0), attack="shb",
         )
         alg = ByzVRMarinaPP(prob, cfg)
         t0 = time.time()
@@ -50,10 +54,12 @@ def run(quick: bool = False):
         )
 
     for k in (40, 20, 5):
+        plan = dataclasses.replace(
+            paper_plan("cm", 1.0), compress=CompressSpec(kind="rand_k", k=k)
+        )
         cfg = MarinaPPConfig(
-            gamma=0.5, p=0.2, C=4, C_hat=20, batch=32, clip_alpha=1.0,
-            use_clipping=True, aggregator="cm", bucket_s=2, attack="shb",
-            compressor="rand_k", compressor_kwargs=(("k", k),),
+            gamma=0.5, p=0.2, C=4, C_hat=20, batch=32,
+            plan=plan, attack="shb",
         )
         alg = ByzVRMarinaPP(prob, cfg)
         t0 = time.time()

@@ -16,6 +16,7 @@ import time
 
 import jax
 
+from repro.configs.paper import paper_plan
 from repro.core import ByzVRMarinaPP, MarinaPPConfig, logistic_problem
 
 STEPS = 300
@@ -29,10 +30,10 @@ def _fstar(prob):
     return float(prob.loss(x))
 
 
-def _run(prob, steps=STEPS, **overrides):
+def _run(prob, steps=STEPS, clip_alpha=1.0, **overrides):
     base = dict(
-        gamma=0.5, p=0.2, C=4, C_hat=20, batch=32, clip_alpha=1.0,
-        use_clipping=True, aggregator="cm", bucket_s=2, attack="shb", seed=1,
+        gamma=0.5, p=0.2, C=4, C_hat=20, batch=32,
+        plan=paper_plan("cm", clip_alpha), attack="shb", seed=1,
     )
     base.update(overrides)
     alg = ByzVRMarinaPP(prob, MarinaPPConfig(**base))
@@ -53,14 +54,14 @@ def run(quick: bool = False):
 
     # left: clip vs no clip under SHB
     for name, kw in [
-        ("fig1_left_clip", dict(use_clipping=True)),
-        ("fig1_left_noclip", dict(use_clipping=False)),
+        ("fig1_left_clip", dict(clip_alpha=1.0)),
+        ("fig1_left_noclip", dict(clip_alpha=None)),
     ]:
         gap, wall, st = _run(prob, steps, **kw)
         rows.append((name, wall / st * 1e6, f"gap={gap - fstar:.2e}"))
 
     # middle: full vs partial participation (same epochs of local compute)
-    gap_full, wall, st = _run(prob, steps, C=20, C_hat=20, use_clipping=False,
+    gap_full, wall, st = _run(prob, steps, C=20, C_hat=20, clip_alpha=None,
                               attack="shb")
     rows.append(("fig1_mid_full", wall / st * 1e6, f"gap={gap_full - fstar:.2e}"))
     gap_pp, wall, st = _run(prob, steps, C=4, C_hat=20)

@@ -12,6 +12,7 @@ import time
 
 import jax
 
+from repro.configs.paper import paper_plan
 from repro.core import ClippedPPConfig, ClippedPPMomentum, mlp_problem
 
 STEPS = 500
@@ -34,8 +35,8 @@ def run(quick: bool = False):
             msg_attack = "none" if attack == "lf" else attack
             for clip in (True, False):
                 cfg = ClippedPPConfig(
-                    gamma=0.15, C=4, attack=msg_attack, use_clipping=clip,
-                    aggregator=agg, bucket_s=2,
+                    gamma=0.15, C=4, attack=msg_attack,
+                    plan=paper_plan(agg, 1.0 if clip else None),
                 )
                 alg = ClippedPPMomentum(prob, cfg)
                 t0 = time.time()
@@ -58,8 +59,8 @@ def run(quick: bool = False):
     )
     for clip in (True, False):
         cfg = ClippedPPConfig(
-            gamma=0.15, C=3, attack="shb", use_clipping=clip,
-            aggregator="cm", bucket_s=2,
+            gamma=0.15, C=3, attack="shb",
+            plan=paper_plan("cm", 1.0 if clip else None),
         )
         alg = ClippedPPMomentum(prob, cfg)
         t0 = time.time()

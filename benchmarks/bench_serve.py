@@ -1,0 +1,228 @@
+"""Load-generator benchmark for the streaming aggregation server.
+
+Drives :class:`repro.serve.AggregationServer` with synthetic clients —
+a configurable arrival process (how rows batch on the wire), a
+Byzantine fraction (trailing slots submit 100x payloads) and a stale
+policy — and reports the serve-loop's throughput and latency:
+
+  requests_per_sec   rows ingested per wall-clock second
+  p50_ms / p99_ms    submit-to-resolution latency percentiles (a row's
+                     latency ends when its round's aggregate fans out)
+
+The generator is open-loop but un-paced: the arrival process shapes the
+BATCHING pattern (rows per pump), not wall-clock spacing, so the
+numbers measure the ingest+close pipeline itself, reproducibly.
+
+Rows land in ``BENCH_kernels.json`` next to the kernel rows (see
+benchmarks/run.py) with the serve shape ``{name, requests_per_sec,
+p50_ms, p99_ms, derived}``; benchmarks/check_regression.py gates them
+alongside the timing tier (latency lower-is-better, throughput
+higher-is-better).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve --smoke
+  PYTHONPATH=src python -m benchmarks.bench_serve --rounds 16 \
+      --clients 32 --dim 8192 --arrival burst --byz-frac 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.api import AggregatorSpec, ClipSpec, ScheduleSpec, ServerPlan
+from repro.serve import AggregationServer, ServeConfig
+
+ARRIVALS = ("steady", "burst", "poisson")
+
+
+def _serve_plan(rule: str, radius: float | None = None) -> ServerPlan:
+    return ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=1),
+        clip=ClipSpec(radius=radius) if radius is not None else None,
+        schedule=ScheduleSpec(placement="naive", backend="auto"),
+    )
+
+
+def _batch_sizes(arrival: str, cohort: int, rng) -> "list[int]":
+    """Rows per pump for one round's worth of submissions."""
+    if arrival == "steady":
+        return [1] * cohort
+    if arrival == "burst":
+        return [cohort]
+    sizes, left = [], cohort
+    while left > 0:
+        s = min(left, max(1, int(rng.poisson(3))))
+        sizes.append(s)
+        left -= s
+    return sizes
+
+
+def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
+             arrival: str = "steady", byz_frac: float = 0.0,
+             stale_policy: str = "drop", cohort_size: int | None = None,
+             seed: int = 0, warmup_rounds: int = 1) -> dict:
+    """Drive one server through ``rounds`` measured rounds; returns the
+    metrics dict (throughput, latency percentiles, server counters)."""
+    if arrival not in ARRIVALS:
+        raise ValueError(f"unknown arrival {arrival!r}; have {ARRIVALS}")
+    cfg = ServeConfig(n_slots=n_slots, dim=dim, cohort_size=cohort_size,
+                      stale_policy=stale_policy, seed=seed)
+    server = AggregationServer(plan, cfg)
+    cohort = cfg.resolved_cohort_size
+    rng = np.random.RandomState(seed)
+    n_byz = int(round(byz_frac * n_slots))
+
+    def drive(n_rounds, collect):
+        tickets = []
+        while server.metrics.rounds_closed - closed_before < n_rounds:
+            slot_iter = iter(rng.permutation(n_slots)[:cohort])
+            for size in _batch_sizes(arrival, cohort, rng):
+                for _ in range(size):
+                    slot = int(next(slot_iter))
+                    row = rng.randn(dim).astype(np.float32)
+                    if slot >= n_slots - n_byz:
+                        row *= 100.0
+                    tickets.append(server.submit(slot, row))
+                server.pump()
+                if server.metrics.rounds_closed - closed_before >= n_rounds:
+                    break
+        if not collect:
+            return [], 0
+        # tickets resolve when their ROUND closes, not at their own pump:
+        # harvest latencies once the drive is done
+        return [t.latency for t in tickets if t.latency is not None], len(tickets)
+
+    closed_before = 0
+    drive(warmup_rounds, collect=False)  # compile the executor
+    closed_before = server.metrics.rounds_closed
+    t0 = time.time()
+    latencies, n_rows = drive(rounds, collect=True)
+    elapsed = time.time() - t0
+    lat_ms = np.asarray(latencies) * 1e3 if latencies else np.zeros(1)
+    return {
+        "requests_per_sec": n_rows / max(elapsed, 1e-9),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "rows": n_rows,
+        "rounds": server.metrics.rounds_closed - closed_before,
+        "elapsed_s": elapsed,
+        "metrics": server.metrics.snapshot(),
+    }
+
+
+# the committed-baseline sweep: one coordinate-wise rule (one-shot close)
+# and the selection rule both ways the wire can batch it (the incremental
+# Gram path is per-chunk work, so the arrival pattern is the axis that
+# matters)
+_SWEEP = (
+    ("cm", None, "steady"),
+    ("krum", 5.0, "steady"),
+    ("krum", 5.0, "burst"),
+)
+
+
+def collect_rows(quick: bool = False) -> "list[dict]":
+    n, d = 16, (256 if quick else 2048)
+    rounds = 4 if quick else 8
+    out = []
+    for rule, radius, arrival in _SWEEP:
+        r = run_load(
+            _serve_plan(rule, radius), n_slots=n, dim=d, rounds=rounds,
+            arrival=arrival, byz_frac=0.25, cohort_size=n - 4,
+        )
+        out.append({
+            "name": f"serve_{rule}_{arrival}",
+            "requests_per_sec": round(r["requests_per_sec"], 1),
+            "p50_ms": round(r["p50_ms"], 3),
+            "p99_ms": round(r["p99_ms"], 3),
+            "derived": (
+                f"n={n};d={d};rounds={r['rounds']};byz=0.25;"
+                f"clip={radius is not None}"
+            ),
+        })
+    return out
+
+
+def append_rows(json_path: str, rows: "list[dict]") -> None:
+    """Merge serve rows into an existing bench payload (by name)."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    keep = [r for r in payload.get("rows", [])
+            if r["name"] not in {x["name"] for x in rows}]
+    payload["rows"] = keep + rows
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def csv_row(row: dict):
+    """(name, us, derived) for benchmarks/run.py's CSV printer — the
+    p50 latency is the us column; throughput rides in ``derived``."""
+    return (
+        row["name"],
+        row["p50_ms"] * 1e3,
+        f"{row['derived']};rps={row['requests_per_sec']};"
+        f"p99_ms={row['p99_ms']}",
+    )
+
+
+def run(quick: bool = False):
+    """benchmarks.run suite entry: yields CSV rows."""
+    return [csv_row(r) for r in collect_rows(quick=quick)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized single sweep (alias of --quick)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--dim", type=int, default=2048)
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="close trigger (0: clients - 4)")
+    ap.add_argument("--arrival", default="steady", choices=ARRIVALS)
+    ap.add_argument("--byz-frac", type=float, default=0.25)
+    ap.add_argument("--stale-policy", default="drop",
+                    choices=["drop", "defer"])
+    ap.add_argument("--aggregator", default="krum")
+    ap.add_argument("--clip-radius", type=float, default=5.0,
+                    help="> 0: static server clip radius; 0: no clip")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default="",
+                    help="merge the sweep rows into this bench payload")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.smoke or args.quick:
+        rows = collect_rows(quick=True)
+    else:
+        r = run_load(
+            _serve_plan(args.aggregator,
+                        args.clip_radius if args.clip_radius > 0 else None),
+            n_slots=args.clients, dim=args.dim, rounds=args.rounds,
+            arrival=args.arrival, byz_frac=args.byz_frac,
+            stale_policy=args.stale_policy,
+            cohort_size=args.cohort_size or max(1, args.clients - 4),
+            seed=args.seed,
+        )
+        rows = [{
+            "name": f"serve_{args.aggregator}_{args.arrival}",
+            "requests_per_sec": round(r["requests_per_sec"], 1),
+            "p50_ms": round(r["p50_ms"], 3),
+            "p99_ms": round(r["p99_ms"], 3),
+            "derived": (
+                f"n={args.clients};d={args.dim};rounds={r['rounds']};"
+                f"byz={args.byz_frac};clip={args.clip_radius > 0}"
+            ),
+        }]
+    for row in rows:
+        name, us, derived = csv_row(row)
+        print(f"{name},{us:.1f},{derived}")
+    if args.json_out:
+        append_rows(args.json_out, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -72,7 +72,28 @@ _TRAFFIC_KEYS = ("fused_bytes", "fused_resident_bytes", "fused_tiled_bytes")
 
 
 def _rows_by_name(payload: dict) -> dict:
-    return {r["name"]: float(r["us_per_call"]) for r in payload.get("rows", [])}
+    """Flatten payload rows into gateable {name: microseconds} scalars.
+
+    Kernel rows carry ``us_per_call`` directly.  Serve-loop rows
+    (benchmarks/bench_serve.py) carry latency percentiles and a
+    throughput instead; each becomes its own derived scalar —
+    ``<name>.p50_ms`` / ``<name>.p99_ms`` (in us) and
+    ``<name>.us_per_req`` (1e6 / requests_per_sec, so a throughput DROP
+    shows up as a time INCREASE) — and rides the same lower-is-better
+    timing tier as everything else."""
+    out = {}
+    for r in payload.get("rows", []):
+        name = r["name"]
+        if "us_per_call" in r:
+            out[name] = float(r["us_per_call"])
+            continue
+        if "p50_ms" in r:
+            out[f"{name}.p50_ms"] = float(r["p50_ms"]) * 1e3
+        if "p99_ms" in r:
+            out[f"{name}.p99_ms"] = float(r["p99_ms"]) * 1e3
+        if r.get("requests_per_sec"):
+            out[f"{name}.us_per_req"] = 1e6 / float(r["requests_per_sec"])
+    return out
 
 
 def _traffic_models(payload: dict) -> dict:

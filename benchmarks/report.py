@@ -103,10 +103,25 @@ def kernel_table(path: str = "BENCH_kernels.json") -> str:
         "| kernel | us/call (interp) | derived |",
         "|---|---|---|",
     ]
+    serve_rows = []
     for r in data.get("rows", []):
+        if "us_per_call" not in r:  # serve-loop rows get their own table
+            serve_rows.append(r)
+            continue
         lines.append(
             f"| {r['name']} | {r['us_per_call']:.1f} | {r['derived']} |"
         )
+    if serve_rows:
+        lines += [
+            "",
+            "| serve loop | req/s | p50 ms | p99 ms | derived |",
+            "|---|---:|---:|---:|---|",
+        ]
+        for r in serve_rows:
+            lines.append(
+                f"| {r['name']} | {r['requests_per_sec']:.0f} | "
+                f"{r['p50_ms']:.2f} | {r['p99_ms']:.2f} | {r['derived']} |"
+            )
     if tm:
         lines.append("")
         lines.append(

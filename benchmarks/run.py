@@ -9,8 +9,10 @@ exercises every Pallas kernel — including the fused clip->aggregate server
 step for the whole aggregator registry (CM/TM/mean, Krum, centered-clip,
 Weiszfeld GM), the one-hot winner-row fast path, and the
 naive/sharded/PIPELINED robust_aggregate triple (so the double-buffered
-schedule is compiled and timed on every PR) — in interpret mode and
-writes ``BENCH_kernels.json`` for the perf trajectory (rendered by
+schedule is compiled and timed on every PR) — in interpret mode, plus
+the streaming serve-loop load generator (benchmarks/bench_serve.py:
+requests/sec and p50/p99 latency per arrival pattern), and writes
+``BENCH_kernels.json`` for the perf trajectory (rendered by
 benchmarks/report.py).
 
 ``--check-regression`` additionally diffs the freshly written
@@ -48,9 +50,25 @@ def main() -> None:
         args.quick = True
         args.only = "kernels"
 
-    from benchmarks import bench_ablation, bench_fig1, bench_fig2, bench_kernels
+    from benchmarks import (
+        bench_ablation,
+        bench_fig1,
+        bench_fig2,
+        bench_kernels,
+        bench_serve,
+    )
 
-    kernels_run = bench_kernels.run
+    def _kernels_plus_serve(quick=False, out_json=None):
+        # the kernels suite also carries the serve-loop load-generator
+        # rows (latency/throughput shape) so they land in the same
+        # payload the gate diffs and promotes
+        out_json = out_json or bench_kernels.BENCH_JSON
+        rows = list(bench_kernels.run(quick=quick, out_json=out_json))
+        serve_rows = bench_serve.collect_rows(quick=quick)
+        bench_serve.append_rows(out_json, serve_rows)
+        return rows + [bench_serve.csv_row(r) for r in serve_rows]
+
+    kernels_run = _kernels_plus_serve
     if args.check_regression:
         import json
         import tempfile
@@ -69,7 +87,7 @@ def main() -> None:
             )
             verdict_tmp.close()
             try:
-                rows = bench_kernels.run(quick=quick, out_json=tmp.name)
+                rows = _kernels_plus_serve(quick=quick, out_json=tmp.name)
                 gate_args = ["--fresh", tmp.name,
                              "--json-out", verdict_tmp.name]
                 if args.timing_warn_only:

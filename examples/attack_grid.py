@@ -7,6 +7,7 @@ import argparse
 
 import jax
 
+from repro.api import AggregatorSpec, BucketSpec, ClipSpec, ServerPlan
 from repro.core import ClippedPPConfig, ClippedPPMomentum, mlp_problem
 
 
@@ -31,9 +32,13 @@ def main():
             )
             finals = {}
             for clip in (True, False):
+                plan = ServerPlan(
+                    aggregate=AggregatorSpec(agg),
+                    bucket=BucketSpec(s=2),
+                    clip=ClipSpec(alpha=1.0) if clip else None,
+                )
                 cfg = ClippedPPConfig(
-                    gamma=0.1, C=4, attack=attack, use_clipping=clip,
-                    aggregator=agg, bucket_s=2,
+                    gamma=0.1, C=4, attack=attack, plan=plan,
                 )
                 alg = ClippedPPMomentum(prob, cfg)
                 _, m = jax.jit(lambda s: alg.run(args.steps, s))(alg.init())

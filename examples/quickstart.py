@@ -8,6 +8,7 @@ converges linearly to the optimum — remove the clipping and it diverges.
 """
 import jax
 
+from repro.api import AggregatorSpec, BucketSpec, ClipSpec, ServerPlan
 from repro.core import ByzVRMarinaPP, MarinaPPConfig, logistic_problem
 
 
@@ -22,16 +23,20 @@ def main():
     )
 
     for use_clipping in (True, False):
+        plan = ServerPlan(
+            aggregate=AggregatorSpec("cm"),  # coordinate median ...
+            bucket=BucketSpec(s=2),          # ... with bucketing (s=2)
+            # lambda_k = 1.0 * ||x^k - x^{k-1}||; dropping the clip stage
+            # is the paper's diverging "no clip" ablation
+            clip=ClipSpec(alpha=1.0) if use_clipping else None,
+        )
         cfg = MarinaPPConfig(
             gamma=0.5,
             p=0.2,             # full-grad rounds with prob 0.2
             C=4,               # sample 20% of clients per round
             C_hat=20,
             batch=32,
-            clip_alpha=1.0,    # lambda_k = ||x^k - x^{k-1}||
-            use_clipping=use_clipping,
-            aggregator="cm",   # coordinate median ...
-            bucket_s=2,        # ... with bucketing (s=2)
+            plan=plan,
             attack="shb",      # shift-back (the paper's new attack)
         )
         algo = ByzVRMarinaPP(problem, cfg)

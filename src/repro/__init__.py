@@ -31,7 +31,7 @@ _API_EXPORTS = (
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",
-    "plan_from_legacy",
+    "PLAN_VERSION",
 )
 
 __all__ = ["__version__", *_API_EXPORTS]

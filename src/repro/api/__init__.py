@@ -16,6 +16,7 @@ See :mod:`repro.api.plan` for the full contract.  Quickstart:
     agg = step(msgs, mask=sampled, key=key, radius=step.radius(x_new, x))
 """
 from .plan import (
+    PLAN_VERSION,
     AggregatorSpec,
     BucketSpec,
     ClipSpec,
@@ -25,7 +26,6 @@ from .plan import (
     ScheduleSpec,
     ServerPlan,
     ServerStep,
-    plan_from_legacy,
 )
 
 __all__ = [
@@ -33,10 +33,10 @@ __all__ = [
     "BucketSpec",
     "ClipSpec",
     "CompressSpec",
+    "PLAN_VERSION",
     "PlanError",
     "PlanWarning",
     "ScheduleSpec",
     "ServerPlan",
     "ServerStep",
-    "plan_from_legacy",
 ]

@@ -46,13 +46,11 @@ vs. worker count) and at call time (one worker row per mesh worker).
 ``plan.estimate(shapes, n_workers=...)`` reuses the benchmark traffic
 models for bytes / steady-state block cost introspection without running
 anything.  ``to_json`` / ``from_json`` give plans a canonical serialized
-name (benchmark configs, CI perf-gate rows, ``--plan-json`` CLIs).
-
-``plan_from_legacy(...)`` translates the pre-plan string knobs (including
-"bucket_"-prefixed rule names) into a ``ServerPlan``, emitting a
-``DeprecationWarning`` — the back-compat path the old engine configs and
-``ByzTrainConfig`` route through, trajectory-bitwise-equal by
-construction because both paths build the identical ``Aggregator``.
+name (benchmark configs, CI perf-gate rows, ``--plan-json`` CLIs, the
+serving wire format).  The document carries a ``"version"`` field
+(currently 1); ``from_json`` treats missing versions as v1 and rejects
+unknown ones, so the wire format can evolve without silently
+misinterpreting old documents.
 """
 from __future__ import annotations
 
@@ -80,8 +78,13 @@ __all__ = [
     "ScheduleSpec",
     "ServerPlan",
     "ServerStep",
-    "plan_from_legacy",
+    "PLAN_VERSION",
 ]
+
+# canonical plan-document version.  Bump when the JSON schema changes in a
+# way old readers would misinterpret; ``from_dict`` accepts documents with
+# no version field as v1 (every document written before versioning).
+PLAN_VERSION = 1
 
 
 class PlanError(ValueError):
@@ -473,7 +476,10 @@ class ServerPlan:
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> dict:
-        d = {"aggregate": dataclasses.asdict(self.aggregate)}
+        d = {
+            "version": PLAN_VERSION,
+            "aggregate": dataclasses.asdict(self.aggregate),
+        }
         for field in ("clip", "compress", "bucket"):
             v = getattr(self, field)
             if v is not None:
@@ -494,11 +500,18 @@ class ServerPlan:
     def from_dict(cls, d: dict) -> "ServerPlan":
         if "aggregate" not in d:
             raise PlanError("plan dict needs an 'aggregate' stage")
-        unknown = set(d) - set(_SPEC_FIELDS) - {"cohort"}
+        version = d.get("version", PLAN_VERSION)  # pre-versioning docs = v1
+        if version != PLAN_VERSION:
+            raise PlanError(
+                f"unsupported plan document version {version!r}; this "
+                f"reader understands version {PLAN_VERSION} (and "
+                "version-less documents, which are v1)"
+            )
+        unknown = set(d) - set(_SPEC_FIELDS) - {"cohort", "version"}
         if unknown:
             raise PlanError(
                 f"unknown plan fields {sorted(unknown)}; have "
-                f"{sorted(_SPEC_FIELDS)} + ['cohort']"
+                f"{sorted(_SPEC_FIELDS)} + ['cohort', 'version']"
             )
         kw = {}
         for field, klass in _SPEC_FIELDS.items():
@@ -608,99 +621,6 @@ class ServerStep:
         return self.aggregator.clip_then_aggregate(
             msgs, radius, mask=mask, key=key
         )
-
-
-# ---------------------------------------------------------------------------
-# legacy translation
-# ---------------------------------------------------------------------------
-
-def plan_from_legacy(
-    aggregator: str,
-    *,
-    bucket_s: int = 2,
-    bucketed: Optional[bool] = None,
-    backend: str = "auto",
-    placement: str = "naive",
-    blocks: str = "sequential",
-    superleaf_elems: int = 0,
-    worker_axes: tuple = (),
-    trim_ratio: Optional[float] = None,
-    byz_bound: Optional[int] = None,
-    m_select: int = 0,
-    clip_alpha: Optional[float] = None,
-    clip_radius: Optional[float] = None,
-    use_clipping: bool = True,
-    compressor: Optional[str] = None,
-    compressor_kwargs=(),
-    compress_frac: float = 0.0,
-    cohort: Optional[int] = None,
-    warn: bool = True,
-) -> ServerPlan:
-    """Translate the pre-ServerPlan string knobs into a ``ServerPlan``.
-
-    ``aggregator`` accepts the legacy "bucket_"-prefixed spellings and the
-    mesh aliases (tm / cclip / gm); ``bucketed=None`` infers Bucketing
-    from the prefix (the old mesh semantics), engines that bucketed via
-    ``bucket_s >= 2`` pass ``bucketed`` explicitly.  The translated plan
-    builds the *identical* ``Aggregator`` the legacy path built, so
-    trajectories are bitwise-equal by construction.
-    """
-    if warn:
-        warnings.warn(
-            "string-knob server-step configuration is deprecated; compose "
-            "a repro.api.ServerPlan (ClipSpec / CompressSpec / BucketSpec "
-            "/ AggregatorSpec / ScheduleSpec) instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-    name = aggregator
-    if name.startswith("bucket_"):
-        name = name[len("bucket_"):]
-        if bucketed is None:
-            bucketed = True
-    if bucketed is None:
-        bucketed = False
-    if placement == "naive" and blocks == "pipelined":
-        # the legacy knobs documented this combination as a no-op ("the
-        # naive schedule has no collectives to overlap"); preserve that
-        # instead of tripping the plan's construction-time check
-        blocks = "sequential"
-    agg_kw = {"byz_bound": byz_bound, "m_select": m_select}
-    if trim_ratio is not None:
-        agg_kw["trim_ratio"] = trim_ratio
-    spec = AggregatorSpec(rule=name, **agg_kw)
-
-    clip = None
-    if use_clipping and (clip_alpha is not None or clip_radius is not None):
-        clip = ClipSpec(alpha=clip_alpha, radius=clip_radius)
-
-    compress = None
-    if compress_frac and compress_frac > 0.0:
-        compress = CompressSpec(kind="rand_fraction",
-                                frac=float(compress_frac))
-    elif compressor is not None and compressor not in ("identity", "none"):
-        kw = dict(compressor_kwargs)
-        compress = CompressSpec(
-            kind=compressor,
-            # the legacy compressor factories defaulted k=1 / frac=0.01
-            k=int(kw.get("k", 1)),
-            frac=float(kw.get("frac", 0.01)),
-        )
-
-    return ServerPlan(
-        aggregate=spec,
-        clip=clip,
-        compress=compress,
-        bucket=BucketSpec(s=int(bucket_s)) if bucketed else None,
-        schedule=ScheduleSpec(
-            placement=placement,
-            blocks=blocks,
-            superleaf_elems=int(superleaf_elems),
-            backend=backend,
-            worker_axes=tuple(worker_axes),
-        ),
-        cohort=cohort,
-    )
 
 
 def _total_elems(shapes) -> int:

@@ -5,14 +5,35 @@ fig1: homogeneous l2-regularized logistic regression (a9a-like synthetic),
 fig2: heterogeneous-MLP (MNIST-like synthetic) with the eq.-10 heuristic
       around robust momentum SGD; {CM, RFA} x {BF, LF, ALIE, SHB}.
 """
+from typing import Optional
+
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    ServerPlan,
+)
 from repro.core import MarinaPPConfig, ClippedPPConfig
 
 
-def fig1_marina_pp(use_clipping: bool = True, clip_alpha: float = 1.0) -> MarinaPPConfig:
+def paper_plan(aggregator: str = "cm",
+               clip_alpha: Optional[float] = 1.0) -> ServerPlan:
+    """The paper's server composition: ``aggregator`` over Bucketing(2),
+    clipping at lambda_k = clip_alpha * ||x^k - x^{k-1}|| (``None``
+    drops the clip stage — the "no clip" baselines)."""
+    return ServerPlan(
+        aggregate=AggregatorSpec(aggregator),
+        clip=ClipSpec(alpha=clip_alpha) if clip_alpha is not None else None,
+        bucket=BucketSpec(s=2),
+    )
+
+
+def fig1_marina_pp(use_clipping: bool = True,
+                   clip_alpha: float = 1.0) -> MarinaPPConfig:
     return MarinaPPConfig(
         gamma=0.5, p=0.2, C=4, C_hat=20, batch=32,
-        clip_alpha=clip_alpha, use_clipping=use_clipping,
-        aggregator="cm", bucket_s=2, attack="shb", seed=1,
+        plan=paper_plan("cm", clip_alpha if use_clipping else None),
+        attack="shb", seed=1,
     )
 
 
@@ -23,8 +44,8 @@ def fig1_problem_kwargs() -> dict:
 def fig2_heuristic(aggregator: str = "cm", attack: str = "shb",
                    use_clipping: bool = True) -> ClippedPPConfig:
     return ClippedPPConfig(
-        gamma=0.1, beta=0.9, C=4, batch=32, lambda_mult=1.0,
-        use_clipping=use_clipping, aggregator=aggregator, bucket_s=2,
+        gamma=0.1, beta=0.9, C=4, batch=32,
+        plan=paper_plan(aggregator, 1.0 if use_clipping else None),
         attack=attack,
     )
 

@@ -60,7 +60,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from functools import partial
 from typing import Callable, Optional
 
@@ -323,6 +322,7 @@ class Aggregator:
     stats_fn: Optional[Callable] = None
     finalize_fn: Optional[Callable] = None
     apply_fn: Optional[Callable] = None
+    update_stats_fn: Optional[Callable] = None
 
     @property
     def supports_two_phase(self) -> bool:
@@ -390,6 +390,22 @@ class Aggregator:
         return _kops.accumulate_stats_blocks(
             self.stats_fn, xs, reduce_fn=reduce_fn
         )
+
+    def update_stats(self, stats, buffer, chunk_emb, chunk_mask):
+        """Incremental phase 1 for STREAMING row arrival (repro.serve):
+        fold a chunk of newly-arrived rows into the running (n, n) stats.
+
+        ``buffer`` is the (n, d) cohort row buffer with the chunk's rows
+        already scattered in; ``chunk_emb`` is the chunk embedded at its
+        slot rows in a zero (n, d) matrix; ``chunk_mask`` is the (n,)
+        bool chunk membership.  The cross product is computed at the
+        FULL cohort shape (never a shrunken (c, d) matmul) so every
+        entry's reduction order matches the one-shot ``accumulate_stats``
+        — after the last row arrives the stats are bitwise-equal to the
+        one-shot Gram of the full buffer, on both backends.  The price
+        is n*n*d FLOPs per chunk instead of c*n*d."""
+        self._require_two_phase()
+        return self.update_stats_fn(stats, buffer, chunk_emb, chunk_mask)
 
     def finalize(self, stats, mask=None, key=None, radius=None,
                  factors=None):
@@ -575,8 +591,8 @@ def _make_pallas_cm_fns(trim_ratio: float, bucket_s: int):
 
 def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
                         pallas: bool):
-    """(stats_fn, finalize_fn, apply_fn) for krum/multi-krum on either
-    backend.  The finalize algebra is the single shared
+    """(stats_fn, finalize_fn, apply_fn, update_stats_fn) for
+    krum/multi-krum on either backend.  The finalize algebra is the single shared
     ``krum_select_from_gram`` — masking, neighbour counting, Bucketing
     and tie-breaking live in ONE place — so the two backends (and the
     one-shot ``clip_then_krum``) can never select different rows.  Only
@@ -588,6 +604,7 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
     onehot = _kops.selection_is_onehot(multi, bs)
     if pallas:
         stats_fn = _kops.krum_gram
+        cross_fn = _kops.krum_cross_gram
         # plain unbucketed Krum's combination is one-hot: the apply pass
         # streams only the winner row (scalar-prefetch select_row kernel)
         apply_fn = partial(_kops.krum_apply, onehot=onehot)
@@ -596,6 +613,9 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
             x32 = xs.astype(jnp.float32)
             gram = x32 @ x32.T
             return reduce_fn(gram) if reduce_fn is not None else gram
+
+        def cross_fn(a, b):
+            return a.astype(jnp.float32) @ b.astype(jnp.float32).T
 
         def apply_fn(xs, sel):
             x32 = xs.astype(jnp.float32)
@@ -610,6 +630,17 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
             out = jnp.sum(jnp.where(w != 0.0, x32 * w, 0.0), axis=0)
             return (out / sel.denom).astype(xs.dtype)
 
+    def update_stats_fn(stats, buffer, chunk_emb, chunk_mask):
+        cm = chunk_mask.astype(bool)
+        # full-cohort-shape cross product: the chunk rows embedded at
+        # their slots against the whole buffer, same operand shapes as
+        # the one-shot Gram so every entry's reduction order matches
+        blk = cross_fn(chunk_emb, buffer)
+        touch = cm[:, None] | cm[None, :]
+        # where/set (not add) merge: stale entries are REPLACED, so a
+        # resubmitted row and -0.0 payloads stay bitwise-faithful
+        return jnp.where(touch, jnp.where(cm[:, None], blk, blk.T), stats)
+
     def finalize_fn(stats, mask=None, key=None, radius=None, factors=None):
         n = stats.shape[0]
         bucket_idx = _bucket_order(key, mask, n) if bs >= 2 else None
@@ -621,7 +652,7 @@ def _krum_two_phase_fns(*, byz_bound, m_select, multi, bucket_s,
         )
         return sel
 
-    return stats_fn, finalize_fn, apply_fn
+    return stats_fn, finalize_fn, apply_fn, update_stats_fn
 
 
 def make_aggregator(
@@ -633,20 +664,7 @@ def make_aggregator(
 
     The declarative entry point to the whole composition (clip ->
     compress -> bucket -> aggregate -> schedule) is
-    ``repro.api.ServerPlan``; this factory is its aggregate+bucket stage.
-    The old "bucket_<rule>" string spelling is still accepted as a
-    deprecated shim (it translates to ``bucket_s >= 2``)."""
-    if name.startswith("bucket_"):
-        warnings.warn(
-            "make_aggregator('bucket_<rule>') is deprecated; pass "
-            "bucket_s >= 2 (or compose a repro.api.ServerPlan with a "
-            "BucketSpec) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        name = name[len("bucket_"):]
-        if not bucket_s or bucket_s < 2:
-            bucket_s = 2
+    ``repro.api.ServerPlan``; this factory is its aggregate+bucket stage."""
     name = RULE_ALIASES.get(name, name)
     if name not in _FACTORY:
         raise ValueError(f"unknown aggregator {name!r}; have {sorted(_FACTORY)}")
@@ -656,14 +674,16 @@ def make_aggregator(
         agg = bucketing(agg, s=bucket_s)
     two_phase = {}
     if name in ("krum", "multi_krum"):
-        sfn, ffn, afn = _krum_two_phase_fns(
+        sfn, ffn, afn, ufn = _krum_two_phase_fns(
             byz_bound=kwargs.get("byz_bound"),
             m_select=int(kwargs.get("m_select", 0)),
             multi=(name == "multi_krum"),
             bucket_s=bucket_s if bucket_s else 0,
             pallas=(resolved == "pallas"),
         )
-        two_phase = dict(stats_fn=sfn, finalize_fn=ffn, apply_fn=afn)
+        two_phase = dict(
+            stats_fn=sfn, finalize_fn=ffn, apply_fn=afn, update_stats_fn=ufn
+        )
     if resolved != "pallas":
         return dataclasses.replace(agg, **two_phase) if two_phase else agg
     bs = bucket_s if bucket_s else 0

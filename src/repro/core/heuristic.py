@@ -8,8 +8,8 @@ Scheme:   x^{k+1} = x^k - gamma g^k,
 We instantiate it with the paper's choice of base method for neural nets:
 Byzantine-robust momentum SGD (Karimireddy et al., 2021) — each worker keeps
 a local momentum m_i^k = beta m_i^{k-1} + (1-beta) grad_i(x^k) and sends
-g_i^k = m_i^k.  ``use_clipping=False`` + full participation recovers plain
-robust momentum-SGD (the Fig.2 "no clip" baselines).
+g_i^k = m_i^k.  A plan without a clip stage + full participation recovers
+plain robust momentum-SGD (the Fig.2 "no clip" baselines).
 """
 from __future__ import annotations
 
@@ -36,29 +36,22 @@ class ClippedPPConfig:
     beta: float = 0.9  # client momentum
     C: int = 4  # sampled cohort per round
     batch: int = 32
-    # the eq.-(10) server-step composition as a repro.api.ServerPlan; when
-    # None the legacy string knobs below are translated (DeprecationWarning)
+    # the eq.-(10) server-step composition as a repro.api.ServerPlan; None
+    # builds the Fig.2 default — coordinate-wise median over Bucketing(2),
+    # clipping at lambda_k = 1.0 * ||x^k - x^{k-1}||
     plan: Optional[ServerPlan] = None
-    lambda_mult: float = 1.0
-    use_clipping: bool = True
-    aggregator: str = "cm"
-    bucket_s: int = 2
     attack: str = "none"
     seed: int = 0
-    backend: str = "auto"  # aggregation backend: "jnp" | "pallas" | "auto"
 
     def resolve_plan(self) -> "ServerPlan":
-        from ..api import plan_from_legacy
+        from ..api import AggregatorSpec, BucketSpec, ClipSpec, ServerPlan
 
         if self.plan is not None:
             return self.plan
-        return plan_from_legacy(
-            self.aggregator,
-            bucket_s=self.bucket_s,
-            bucketed=self.bucket_s >= 2,
-            backend=self.backend,
-            clip_alpha=self.lambda_mult,
-            use_clipping=self.use_clipping,
+        return ServerPlan(
+            aggregate=AggregatorSpec("cm"),
+            clip=ClipSpec(alpha=1.0),
+            bucket=BucketSpec(s=2),
         )
 
 

@@ -15,9 +15,9 @@ byzantines can ignore clipping, so the server re-clips every received
 message).  Partial participation is exact: only the sampled rows enter the
 mask-aware aggregation.
 
-Setting ``C = C_hat = n`` and ``use_clipping=False`` recovers
-Byz-VR-MARINA (Gorbunov et al., 2023); additionally setting delta-free
-aggregation to ``mean`` and no attack recovers plain VR-MARINA.
+Setting ``C = C_hat = n`` with a clip-free plan recovers Byz-VR-MARINA
+(Gorbunov et al., 2023); additionally setting delta-free aggregation to
+``mean`` and no attack recovers plain VR-MARINA.
 """
 from __future__ import annotations
 
@@ -52,35 +52,22 @@ class MarinaPPConfig:
     C_hat: int  # large cohort size (full-grad rounds)
     batch: int = 32  # minibatch size b for Dhat
     # the server-step composition (clip / compress / bucket / aggregate):
-    # a repro.api.ServerPlan.  When None, the legacy string knobs below
-    # are translated via plan_from_legacy (DeprecationWarning) — the
-    # translated plan builds the identical aggregation, bitwise.
+    # a repro.api.ServerPlan.  None builds the paper's default — the
+    # coordinate-wise median over Bucketing(2), clipping at
+    # lambda_k = 1.0 * ||x^{k+1} - x^k||, no compression.
     plan: Optional[ServerPlan] = None
-    # -- legacy string knobs (honored when plan=None) ----------------------
-    clip_alpha: float = 1.0  # lambda_{k+1} = clip_alpha * ||x+ - x||
-    use_clipping: bool = True
-    aggregator: str = "cm"
-    bucket_s: int = 2
-    compressor: str = "identity"
-    compressor_kwargs: tuple = ()
     attack: str = "none"
     seed: int = 0
-    backend: str = "auto"  # aggregation backend: "jnp" | "pallas" | "auto"
 
     def resolve_plan(self) -> "ServerPlan":
-        from ..api import plan_from_legacy
+        from ..api import AggregatorSpec, BucketSpec, ClipSpec, ServerPlan
 
         if self.plan is not None:
             return self.plan
-        return plan_from_legacy(
-            self.aggregator,
-            bucket_s=self.bucket_s,
-            bucketed=self.bucket_s >= 2,
-            backend=self.backend,
-            clip_alpha=self.clip_alpha,
-            use_clipping=self.use_clipping,
-            compressor=self.compressor,
-            compressor_kwargs=self.compressor_kwargs,
+        return ServerPlan(
+            aggregate=AggregatorSpec("cm"),
+            clip=ClipSpec(alpha=1.0),
+            bucket=BucketSpec(s=2),
         )
 
 
@@ -120,6 +107,14 @@ class ByzVRMarinaPP:
                     backend: str = "auto"):
         """Instantiate with the stepsize/clip level prescribed by Theorem
         4.1/4.2 (repro.core.theory) using the problem's smoothness bound."""
+        from ..api import (
+            AggregatorSpec,
+            BucketSpec,
+            ClipSpec,
+            CompressSpec,
+            ScheduleSpec,
+            ServerPlan,
+        )
         from .theory import MarinaTheory
 
         L = problem.smoothness()
@@ -129,12 +124,23 @@ class ByzVRMarinaPP:
             delta=delta, p=p, L=L, omega=comp.omega(problem.dim),
             d_q=comp.dq(problem.dim) or 1.0,
         )
+        comp_spec = None
+        if compressor not in ("identity", "none"):
+            kw = dict(compressor_kwargs)
+            comp_spec = CompressSpec(
+                kind=compressor, k=int(kw.get("k", 1)),
+                frac=float(kw.get("frac", 0.01)),
+            )
+        plan = ServerPlan(
+            aggregate=AggregatorSpec(aggregator),
+            clip=ClipSpec(alpha=th.clip_alpha(theorem)),
+            compress=comp_spec,
+            bucket=BucketSpec(s=bucket_s) if bucket_s >= 2 else None,
+            schedule=ScheduleSpec(backend=backend),
+        )
         cfg = MarinaPPConfig(
             gamma=th.gamma(theorem), p=p, C=C, C_hat=C_hat, batch=batch,
-            clip_alpha=th.clip_alpha(theorem), use_clipping=True,
-            aggregator=aggregator, bucket_s=bucket_s,
-            compressor=compressor, compressor_kwargs=tuple(compressor_kwargs),
-            attack=attack, backend=backend,
+            plan=plan, attack=attack,
         )
         return cls(problem, cfg)
 

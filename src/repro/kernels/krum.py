@@ -137,6 +137,47 @@ def gram_matrix(xs, *, interpret: bool = False):
     )(xp)
 
 
+def _cross_gram_kernel(a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+    a = a_ref[...].astype(F32)  # (n, td)
+    b = b_ref[...].astype(F32)  # (n, td)
+    g = jnp.dot(a, b.T, preferred_element_type=F32)  # MXU (n, n)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = g
+
+    @pl.when(i > 0)
+    def _accumulate():
+        o_ref[...] = o_ref[...] + g
+
+
+def cross_gram(a, b, *, interpret: bool = False):
+    """(n, d), (n, d) -> (n, n) f32 cross-Gram A B^T, tiled exactly like
+    ``gram_matrix`` (same TILE_D grid, same per-tile MXU dot, same
+    accumulation order) so ``cross_gram(x, x)`` is bitwise-equal to
+    ``gram_matrix(x)`` — the invariant the incremental cohort ingest path
+    (repro.serve) relies on.  Both operands keep the FULL cohort row
+    count: a chunk update embeds its rows in a zero (n, d) matrix rather
+    than shrinking the matmul, because XLA's per-entry reduction order —
+    hence the final-ulp bits — depends on the operand shapes."""
+    n = a.shape[0]
+    ap, _ = _pad_to(a, TILE_D, axis=1)
+    bp, _ = _pad_to(b, TILE_D, axis=1)
+    grid = ap.shape[1] // TILE_D
+    return pl.pallas_call(
+        _cross_gram_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+            pl.BlockSpec((n, TILE_D), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), F32),
+        interpret=interpret,
+    )(ap, bp)
+
+
 # ---------------------------------------------------------------------------
 # the winner-gather kernel: tile-wise weighted row-sum
 # ---------------------------------------------------------------------------

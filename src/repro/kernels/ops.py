@@ -82,6 +82,7 @@ from .geometric_median import geometric_median as _geometric_median
 from .krum import RowSelection  # noqa: F401  (re-exported)
 from .krum import apply_row_selection as _apply_row_selection
 from .krum import clip_then_krum as _clip_then_krum
+from .krum import cross_gram as _cross_gram
 from .krum import gram_matrix as _gram_matrix
 from .krum import krum as _krum
 from .krum import krum_select_from_gram  # noqa: F401  (pure row-space jnp)
@@ -103,6 +104,7 @@ __all__ = [
     "multi_krum",
     "clip_then_krum",
     "krum_gram",
+    "krum_cross_gram",
     "krum_select_from_gram",
     "krum_apply",
     "select_row",
@@ -332,6 +334,17 @@ def krum_gram(xs, reduce_fn=None):
     ``tree_superleaf_pack`` layout): the chunks' Grams are accumulated in
     list order, one kernel launch per chunk."""
     return accumulate_stats_blocks(_krum_gram_one, xs, reduce_fn=reduce_fn)
+
+
+def krum_cross_gram(a, b):
+    """(n, d), (n, d) -> (n, n) f32 cross-Gram A B^T via the same
+    TILE_D-tiled MXU grid as ``krum_gram`` — ``krum_cross_gram(x, x)``
+    is bitwise-equal to ``krum_gram(x)``.  Phase-1 building block of the
+    INCREMENTAL cohort ingest path (repro.serve): with a chunk embedded
+    at its slot rows in a zero (n, d) matrix and the running row buffer
+    as the second operand, the off-diagonal blocks come out with the same
+    per-entry reduction order as the one-shot Gram."""
+    return _cross_gram(a, b, interpret=_interpret())
 
 
 def krum_apply(xs, selection, *, onehot: bool = False):

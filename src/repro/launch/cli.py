@@ -12,21 +12,28 @@ so a new spec field lands in every CLI by editing one place:
 
 ``--plan-json`` takes either an inline ``ServerPlan.to_json()`` document
 or a path to one and overrides the individual flags — the canonical way
-to name a plan (benchmark configs and CI perf-gate rows use the same
-serialization).
+to name a plan (benchmark configs, CI perf-gate rows and the serve loop
+use the same serialization).
 """
 from __future__ import annotations
 
 import os
 from typing import Optional
 
-from repro.api import ServerPlan, plan_from_legacy
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    CompressSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
 
 __all__ = ["add_plan_args", "plan_from_args"]
 
 
 def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
-                  backend: str = "auto"):
+                  backend: str = "auto", bucket_s: int = 0):
     """Register the ServerPlan flags on ``ap`` (one group, shared by every
     CLI).  Defaults are parameterized so launchers can keep their
     historical behavior."""
@@ -36,9 +43,8 @@ def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
         "composition (repro.api.ServerPlan)",
     )
     g.add_argument("--aggregator", default=aggregator,
-                   help="registry rule, optionally 'bucket_'-prefixed "
-                        "(bucket_cm, bucket_krum, ...) for the Bucketing "
-                        "composition")
+                   help="registry rule (cm, trimmed_mean, mean, rfa, krum, "
+                        "multi_krum, centered_clip; aliases tm/cclip/gm)")
     g.add_argument("--agg-schedule", default=placement,
                    choices=["naive", "sharded"], dest="agg_schedule",
                    help="placement: naive (paper parameter-server) or "
@@ -55,9 +61,9 @@ def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
     g.add_argument("--backend", default=backend,
                    choices=["auto", "jnp", "pallas"],
                    help="aggregation backend (auto = pallas iff on TPU)")
-    g.add_argument("--bucket-s", type=int, default=2,
-                   help="bucket size of the Bucketing composition "
-                        "(used when --aggregator is bucket_-prefixed)")
+    g.add_argument("--bucket-s", type=int, default=bucket_s,
+                   help=">= 2 composes the rule with Bucketing over "
+                        "buckets of this size; 0 disables Bucketing")
     g.add_argument("--trim-ratio", type=float, default=0.25,
                    help="trimmed-mean trim ratio in [0, 0.5)")
     g.add_argument("--plan-json", default="",
@@ -69,7 +75,6 @@ def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
 def plan_from_args(args, *, byz_bound: Optional[int] = None,
                    clip_alpha: Optional[float] = None,
                    clip_radius: Optional[float] = None,
-                   use_clipping: bool = True,
                    compress_frac: float = 0.0,
                    cohort: Optional[int] = None) -> ServerPlan:
     """Build the ServerPlan an ``add_plan_args`` parser describes.
@@ -83,19 +88,27 @@ def plan_from_args(args, *, byz_bound: Optional[int] = None,
             with open(doc) as f:
                 doc = f.read()
         return ServerPlan.from_json(doc)
-    return plan_from_legacy(
-        args.aggregator,
-        bucket_s=args.bucket_s,
-        backend=args.backend,
-        placement=args.agg_schedule,
-        blocks=args.schedule,
-        superleaf_elems=args.superleaf_elems,
-        trim_ratio=args.trim_ratio,
-        byz_bound=byz_bound,
-        clip_alpha=clip_alpha,
-        clip_radius=clip_radius,
-        use_clipping=use_clipping,
-        compress_frac=compress_frac,
+    clip = None
+    if clip_alpha is not None or clip_radius is not None:
+        clip = ClipSpec(alpha=clip_alpha, radius=clip_radius)
+    compress = None
+    if compress_frac and compress_frac > 0.0:
+        compress = CompressSpec(kind="rand_fraction",
+                                frac=float(compress_frac))
+    return ServerPlan(
+        aggregate=AggregatorSpec(
+            rule=args.aggregator,
+            trim_ratio=args.trim_ratio,
+            byz_bound=byz_bound,
+        ),
+        clip=clip,
+        compress=compress,
+        bucket=BucketSpec(s=args.bucket_s) if args.bucket_s >= 2 else None,
+        schedule=ScheduleSpec(
+            placement=args.agg_schedule,
+            blocks=args.schedule,
+            superleaf_elems=args.superleaf_elems,
+            backend=args.backend,
+        ),
         cohort=cohort,
-        warn=False,  # flags ARE the supported spelling of these stages
     )

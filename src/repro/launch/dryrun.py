@@ -31,6 +31,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api import (
+    AggregatorSpec,
+    ClipSpec,
+    CompressSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
 from repro.configs.registry import get_config, get_smoke_config, list_archs
 from repro.configs.shapes import SHAPES, decode_variant, input_specs, mode_for
 from repro.launch.mesh import make_production_mesh, set_mesh, worker_axes
@@ -39,6 +46,7 @@ from repro.launch.train import (
     ByzTrainConfig,
     abstract_state,
     make_train_step,
+    resolve_plan,
     state_specs,
 )
 from repro.models.model import init_params, param_count
@@ -234,8 +242,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, smoke: bool = False,
         train_cfg = ByzTrainConfig(
             shard_mode=shard_mode, worker_axes_override=wover, n_byz=1
         )
+    plan = resolve_plan(train_cfg)
     result["shard_mode"] = train_cfg.shard_mode
-    result["agg_schedule"] = train_cfg.agg_schedule
+    result["agg_schedule"] = plan.schedule.placement
     result["params"] = param_count(cfg)
 
     t0 = time.time()
@@ -304,7 +313,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, smoke: bool = False,
     )
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} mesh={result['mesh']} mode={mode} "
-              f"shard={train_cfg.shard_mode} agg={train_cfg.agg_schedule}")
+              f"shard={train_cfg.shard_mode} agg={plan.schedule.placement}")
         print(f"  memory_analysis: {ma}")
         print(f"  cost_analysis: flops={result['cost'].get('flops', 0):.3e} "
               f"bytes={result['cost'].get('bytes accessed', 0):.3e}")
@@ -314,12 +323,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, smoke: bool = False,
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         suffix = "multipod" if multi_pod else "pod"
-        if train_cfg.agg_schedule != "sharded":
-            suffix += f"_{train_cfg.agg_schedule}"
+        if plan.schedule.placement != "sharded":
+            suffix += f"_{plan.schedule.placement}"
         if train_cfg.shard_mode == "zero3":
             suffix += "_zero3"
-        if train_cfg.compress_frac:
-            suffix += f"_rk{train_cfg.compress_frac}"
+        if plan.compress is not None and plan.compress.kind == "rand_fraction":
+            suffix += f"_rk{plan.compress.frac}"
         if no_remat:
             suffix += "_noremat"
         if smoke:
@@ -371,8 +380,20 @@ def main():
                     sm = args.shard_mode or (
                         "fsdp_tp" if (not args.smoke and needs_fsdp(cfg0)) else "tp"
                     )
-                    tc = ByzTrainConfig(shard_mode=sm, agg_schedule=args.agg_schedule,
-                                        compress_frac=args.compress_frac, n_byz=1)
+                    # Mirror resolve_plan()'s default, overriding only the
+                    # placement / compress stages the flags control.
+                    plan = ServerPlan(
+                        aggregate=AggregatorSpec("cm", trim_ratio=0.25,
+                                                 byz_bound=1),
+                        clip=ClipSpec(alpha=2.0),
+                        compress=(
+                            CompressSpec(kind="rand_fraction",
+                                         frac=args.compress_frac)
+                            if args.compress_frac else None
+                        ),
+                        schedule=ScheduleSpec(placement=args.agg_schedule),
+                    )
+                    tc = ByzTrainConfig(shard_mode=sm, plan=plan, n_byz=1)
                 try:
                     run_one(arch, shape, multi_pod=mp, smoke=args.smoke, mesh=mesh,
                             train_cfg=tc, out_dir=args.out_dir,

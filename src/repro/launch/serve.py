@@ -17,8 +17,18 @@
    no iterate pair, so plans must clip with a static ``ClipSpec(radius=)``
    (or not at all) — ``make_scoring_step`` validates this at build time.
 
+3. **Streaming aggregation** — the continuous-batching server loop
+   (``repro.serve``): clients submit rows one at a time, the server
+   accumulates them into per-round cohorts (incremental Gram for the
+   selection rules), closes a round on a cohort-size or deadline
+   trigger, and fans the aggregate out to every submitter's ticket.
+   Late rows follow the configured stale policy (drop, or defer into
+   the next round with a staleness-discounted weight).
+
     python -m repro.launch.serve --mode score --aggregator krum \
         --requests 8 --clients 16 --dim 4096 --clip-radius 5.0
+    python -m repro.launch.serve --mode stream --aggregator krum \
+        --clients 16 --dim 4096 --rounds 8 --cohort-size 12
 """
 from __future__ import annotations
 
@@ -105,6 +115,12 @@ def make_scoring_step(plan: ServerPlan):
     (partial participation); None means all.  Requests are mapped with
     ``lax.map`` so the fused per-request kernels stay exactly the shapes
     the trainer runs.
+
+    Default arguments are canonicalized BEFORE the jit boundary: calls
+    with ``batch_mask=None`` / ``key=None`` and calls passing the
+    equivalent arrays share ONE compiled program (the jitted inner
+    function is exposed as ``scoring_step.jitted``; its ``_cache_size()``
+    stays 1 across default/explicit call mixes of one request shape).
     """
     if plan.schedule.placement != "naive":
         raise PlanError(
@@ -138,17 +154,27 @@ def make_scoring_step(plan: ServerPlan):
             "norm": norms,
         }
 
-    def scoring_step(batch_xs, batch_mask=None, key: Optional[jax.Array] = None):
-        B, n = batch_xs.shape[0], batch_xs.shape[1]
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        keys = jax.random.split(key, B)
-        if batch_mask is None:
-            batch_mask = jnp.ones((B, n), bool)
+    @jax.jit
+    def _score_batch(batch_xs, batch_mask, key):
+        keys = jax.random.split(key, batch_xs.shape[0])
         return jax.lax.map(
             lambda args: score_one(*args), (batch_xs, batch_mask, keys)
         )
 
+    def scoring_step(batch_xs, batch_mask=None, key: Optional[jax.Array] = None):
+        # canonicalize the optional arguments BEFORE the jit boundary:
+        # None and the equivalent explicit arrays must hit one trace
+        batch_xs = jnp.asarray(batch_xs)
+        B, n = batch_xs.shape[0], batch_xs.shape[1]
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if batch_mask is None:
+            batch_mask = jnp.ones((B, n), bool)
+        else:
+            batch_mask = jnp.asarray(batch_mask).astype(bool)
+        return _score_batch(batch_xs, batch_mask, key)
+
+    scoring_step.jitted = _score_batch
     return scoring_step
 
 
@@ -203,9 +229,10 @@ def _main_score(args):
     plan = plan_from_args(
         args, byz_bound=args.n_byz,
         clip_radius=args.clip_radius if args.clip_radius > 0 else None,
-        use_clipping=args.clip_radius > 0,
     )
-    scoring = jax.jit(make_scoring_step(plan))
+    # make_scoring_step jits internally (with canonicalized defaults);
+    # wrapping it in another jit would only add a second trace cache
+    scoring = make_scoring_step(plan)
     B, n, d = args.requests, args.clients, args.dim
     rng = np.random.RandomState(0)
     xs = rng.randn(B, n, d).astype(np.float32)
@@ -226,18 +253,60 @@ def _main_score(args):
     print(f"[serve] outliers flagged per request: {flagged.tolist()}")
 
 
+def _main_stream(args):
+    import numpy as np
+
+    from repro.serve import AggregationServer, ServeConfig
+
+    from .cli import plan_from_args
+
+    plan = plan_from_args(
+        args, byz_bound=args.n_byz,
+        clip_radius=args.clip_radius if args.clip_radius > 0 else None,
+    )
+    n, d = args.clients, args.dim
+    cfg = ServeConfig(
+        n_slots=n, dim=d,
+        cohort_size=args.cohort_size or None,
+        deadline=args.deadline_ms / 1e3 if args.deadline_ms > 0 else None,
+        stale_policy=args.stale_policy,
+        stale_discount=args.stale_discount,
+    )
+    server = AggregationServer(plan, cfg)
+    rng = np.random.RandomState(0)
+    closed = 0
+    while closed < args.rounds:
+        # synthetic open-loop clients: every slot submits each round,
+        # the trailing n_byz of them with 100x payloads
+        for slot in range(n):
+            row = rng.randn(d).astype(np.float32)
+            if slot >= n - args.n_byz:
+                row *= 100.0
+            server.submit(slot, row)
+            closed += len(server.pump())
+            if closed >= args.rounds:
+                break
+    m = server.metrics.snapshot()
+    print(f"[serve] streamed {m['rows_ingested']} rows -> "
+          f"{m['rounds_closed']} rounds (rule={plan.aggregate.rule}, "
+          f"cohort_size={cfg.resolved_cohort_size}/{n})")
+    for k, v in sorted(m.items()):
+        print(f"[serve]   {k} = {v}")
+
+
 def main():
     import argparse
 
     from .cli import add_plan_args
 
     ap = argparse.ArgumentParser(description="serving driver")
-    ap.add_argument("--mode", default="decode", choices=["decode", "score"])
+    ap.add_argument("--mode", default="decode",
+                    choices=["decode", "score", "stream"])
     # decode-mode flags
     ap.add_argument("--arch", default="minitron_8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=24)
-    # scoring-mode flags (+ the shared ServerPlan group)
+    # scoring/stream-mode flags (+ the shared ServerPlan group)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--dim", type=int, default=4096)
@@ -245,10 +314,28 @@ def main():
     ap.add_argument("--clip-radius", type=float, default=0.0,
                     help="> 0: static server clip radius of the scoring "
                          "plan (ClipSpec(radius=...))")
+    # stream-mode flags (repro.serve.ServeConfig)
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="stream mode: rounds to run before exiting")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="stream mode: close a round after this many "
+                         "distinct rows (0: wait for every client)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="stream mode: close a non-empty round after "
+                         "this many ms (0: no deadline)")
+    ap.add_argument("--stale-policy", default="drop",
+                    choices=["drop", "defer"],
+                    help="stream mode: what to do with rows of an "
+                         "already-closed round")
+    ap.add_argument("--stale-discount", type=float, default=0.5,
+                    help="stream mode: defer policy weight per round of "
+                         "staleness")
     add_plan_args(ap, placement="naive")
     args = ap.parse_args()
     if args.mode == "score":
         _main_score(args)
+    elif args.mode == "stream":
+        _main_stream(args)
     else:
         _main_decode(args)
 

@@ -13,13 +13,11 @@ order, superleaf packing, whole-tree two-phase selection) live in
 :mod:`repro.api.mesh_exec` and are documented there.
 
 ``ByzTrainConfig`` carries the trainer-side knobs (stepsize, cohort,
-attack, sharding mode) plus EITHER an explicit ``plan=ServerPlan(...)``
-or the legacy string knobs (``aggregator`` — optionally
-"bucket_"-prefixed — ``backend``, ``agg_schedule``, ``schedule``,
-``superleaf_elems``, ...), which keep working via
-``repro.api.plan_from_legacy`` translation (DeprecationWarning); the
-translated plan builds the identical aggregation, so legacy and
-plan-built trajectories are bitwise-equal.
+attack, sharding mode) plus the ``plan=ServerPlan(...)`` aggregation
+composition; ``plan=None`` builds the sharded coordinate-median default
+(``resolve_plan``).  The old string knobs (``aggregator``, ``backend``,
+``agg_schedule``, ...) are gone — construct a ``ServerPlan`` (see the
+README migration table).
 
 ``robust_aggregate`` remains the long-standing functional entry point and
 now simply runs ``plan.build(mesh)`` on the config's resolved plan.
@@ -34,7 +32,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.api import PlanError, ServerPlan, plan_from_legacy
+from repro.api import (
+    AggregatorSpec,
+    ClipSpec,
+    PlanError,
+    ScheduleSpec,
+    ServerPlan,
+)
 from repro.api.mesh_exec import leaf_agg_of
 from repro.core.tree_utils import tree_norm
 from repro.models.model import ModelConfig, apply_train, init_params
@@ -61,25 +65,12 @@ class ByzTrainConfig:
     p: float = 0.125  # Bernoulli full-grad probability
     n_byz: int = 0  # trailing workers are byzantine
     C: int = 0  # sampled cohort size (0 => all workers)
-    clip_alpha: float = 2.0  # lambda = clip_alpha * ||x+ - x||
-    use_clipping: bool = True
-    # THE aggregation composition: a repro.api.ServerPlan.  When None, the
-    # legacy string knobs below are translated via plan_from_legacy
-    # (DeprecationWarning) — bitwise-equivalent, kept for back-compat.
+    # THE aggregation composition: a repro.api.ServerPlan.  None builds
+    # the sharded-placement coordinate-median default with
+    # lambda = 2.0 * ||x+ - x|| clipping and byz_bound = n_byz
+    # (``resolve_plan``).
     plan: Optional[ServerPlan] = None
-    # -- legacy string knobs (pre-ServerPlan; still honored when plan=None)
-    # any core-registry rule: "cm" | "tm" | "mean" | "cclip" | "rfa" |
-    # "krum" | "multi_krum", optionally "bucket_"-prefixed ("bucket_cm",
-    # "bucket_krum", ...) for the Bucketing composition with bucket_s
-    aggregator: str = "cm"
-    trim_ratio: float = 0.25
-    bucket_s: int = 2
-    backend: str = "auto"  # "jnp" | "pallas" | "auto" (pallas iff on TPU)
-    agg_schedule: str = "sharded"  # "naive" | "sharded" placement
-    schedule: str = "sequential"  # "sequential" | "pipelined" block order
-    superleaf_elems: int = 0  # > 0: uniform superleaf chunk packing
     attack: str = "bf"  # "none" | "bf" | "gauss"
-    compress_frac: float = 0.0  # leafwise RandK fraction (0 = off)
     shard_mode: str = "tp"  # "tp" | "fsdp_tp"
     # Workers normally enumerate over every batch-like mesh axis
     # (pod x data).  For FSDP-scale models on the multi-pod mesh, set
@@ -91,62 +82,27 @@ class ByzTrainConfig:
 
     @classmethod
     def from_plan(cls, plan: ServerPlan, **overrides) -> "ByzTrainConfig":
-        """Config with ``plan`` as the aggregation composition; the legacy
-        mirror fields are filled from the plan so introspection/reporting
-        code reading them (e.g. the dry-run driver) stays truthful.
-
-        With ``plan`` set, the PLAN is the source of truth for the
-        aggregation stages: overriding a mirror of a plan stage
-        (``use_clipping``, ``clip_alpha``, ``compress_frac``,
-        ``aggregator``/``backend``/schedule knobs) changes only the
-        reported value, not the built step — edit the plan instead.
-        Trainer-owned knobs (``gamma``, ``p``, ``n_byz``, ``attack``,
-        ``shard_mode``, and ``C``/``worker_axes_override`` when the plan
-        leaves cohort/worker_axes unset) are honored from overrides."""
-        sched = plan.schedule
-        mirrors = dict(
-            aggregator=("bucket_" if plan.bucket is not None else "")
-            + plan.aggregate.rule,
-            trim_ratio=plan.aggregate.trim_ratio,
-            bucket_s=plan.bucket.s if plan.bucket is not None else 2,
-            backend=sched.backend,
-            agg_schedule=sched.placement,
-            schedule=sched.blocks,
-            superleaf_elems=sched.superleaf_elems,
-            worker_axes_override=tuple(sched.worker_axes),
-            use_clipping=plan.clip is not None,
-            C=plan.cohort or 0,
-            compress_frac=(
-                plan.compress.frac
-                if plan.compress is not None
-                and plan.compress.kind == "rand_fraction"
-                else 0.0
-            ),
-        )
-        if plan.clip is not None and plan.clip.alpha is not None:
-            mirrors["clip_alpha"] = plan.clip.alpha
-        mirrors.update(overrides)
-        return cls(plan=plan, **mirrors)
+        """Config with ``plan`` as the aggregation composition.  The plan
+        is the source of truth for every aggregation stage; trainer-owned
+        knobs (``gamma``, ``p``, ``n_byz``, ``attack``, ``shard_mode``,
+        and ``C``/``worker_axes_override`` when the plan leaves
+        cohort/worker_axes unset) come from overrides."""
+        return cls(plan=plan, **overrides)
 
 
 def resolve_plan(cfg: ByzTrainConfig) -> ServerPlan:
-    """The config's ServerPlan: explicit ``cfg.plan``, or the legacy
-    string knobs translated (DeprecationWarning, bitwise-equivalent)."""
+    """The config's ServerPlan: explicit ``cfg.plan``, or the default
+    trainer composition — coordinate-wise median on the sharded placement,
+    clipping at lambda = 2.0 * ||x+ - x||."""
     if cfg.plan is not None:
         return cfg.plan
-    return plan_from_legacy(
-        cfg.aggregator,
-        bucket_s=cfg.bucket_s,
-        backend=cfg.backend,
-        placement=cfg.agg_schedule,
-        blocks=cfg.schedule,
-        superleaf_elems=cfg.superleaf_elems,
-        worker_axes=tuple(cfg.worker_axes_override),
-        trim_ratio=cfg.trim_ratio,
-        byz_bound=cfg.n_byz,
-        clip_alpha=cfg.clip_alpha,
-        use_clipping=cfg.use_clipping,
-        compress_frac=cfg.compress_frac,
+    return ServerPlan(
+        aggregate=AggregatorSpec("cm", trim_ratio=0.25, byz_bound=cfg.n_byz),
+        clip=ClipSpec(alpha=2.0),
+        schedule=ScheduleSpec(
+            placement="sharded",
+            worker_axes=tuple(cfg.worker_axes_override),
+        ),
         cohort=cfg.C or None,
     )
 
@@ -473,7 +429,8 @@ def main():
     )
     W = num_workers(mesh)
     print(f"[train] {model_cfg.name} on mesh {dict(mesh.shape)} "
-          f"({W} workers, {tc.n_byz} byzantine, agg={tc.aggregator})")
+          f"({W} workers, {tc.n_byz} byzantine, "
+          f"agg={plan.aggregate.rule})")
     step_fn = make_train_step(model_cfg, mesh, tc)
     it = make_batch_iterator(model_cfg, W * args.per_worker_batch, args.seq)
     with set_mesh(mesh):

@@ -1,0 +1,42 @@
+"""Streaming cohort ingestion: a continuous-batching aggregation
+service on top of :class:`repro.api.ServerPlan`.
+
+- :mod:`repro.serve.cohort` — incremental per-round cohort assembly
+  (jit-stable chunked ingest, incremental Gram accumulation for the
+  selection rules, the per-plan compiled-executor cache);
+- :mod:`repro.serve.server` — the request-queue -> plan-executor ->
+  response-fan-out loop with cohort-size/deadline round triggers, the
+  stale-row policy and per-round observability counters.
+
+The CLI entry point is ``python -m repro.launch.serve --mode stream``;
+the load-generator benchmark lives in ``benchmarks/bench_serve.py``.
+"""
+from .cohort import (
+    CohortBuilder,
+    PlanExecutor,
+    executor_cache_clear,
+    executor_cache_info,
+    get_executor,
+    validate_serve_plan,
+)
+from .server import (
+    AggregationServer,
+    RoundResult,
+    ServeConfig,
+    ServeMetrics,
+    Ticket,
+)
+
+__all__ = [
+    "AggregationServer",
+    "CohortBuilder",
+    "PlanExecutor",
+    "RoundResult",
+    "ServeConfig",
+    "ServeMetrics",
+    "Ticket",
+    "executor_cache_clear",
+    "executor_cache_info",
+    "get_executor",
+    "validate_serve_plan",
+]

@@ -1,0 +1,256 @@
+"""Incremental cohort assembly for the streaming aggregation server.
+
+One aggregation round collects up to ``n_slots`` client rows into a
+fixed ``(n_slots, dim)`` buffer.  Rows arrive in small chunks; each
+chunk is folded in by ONE jit-stable scatter step (fixed chunk width,
+out-of-range padding indices dropped), so a round costs the same traced
+program no matter how the rows were batched on the wire.
+
+For the selection rules (krum / multi_krum) the expensive phase-1
+statistic — the (n, n) Gram matrix — is maintained *incrementally* as
+rows arrive (``Aggregator.update_stats``): when the round closes only
+the cheap phase-2 selection (``finalize`` + ``apply_selection``) is
+left.  The close is BITWISE-identical to running the plan's one-shot
+``ServerStep`` on the assembled buffer, on both backends:
+
+- pallas: clipping is (n, n) Gram algebra (``krum_select_from_gram``),
+  so the builder accumulates the raw-row Gram and passes the static
+  radius to ``finalize`` — the exact ops of the fused one-shot kernel.
+- jnp: the one-shot path clips rows *before* the Gram, so the builder
+  clips each row once at ingest (clipping is row-local and the radius
+  is static) and accumulates the clipped-row Gram; ``finalize`` then
+  runs clip-free.
+
+Coordinate-wise and iterative rules have no deferred form — their close
+is the plan's one-shot ``ServerStep`` over the buffer with the arrived
+mask, which is trivially bitwise-equal.
+
+Serveable plans are the engine form: ``placement='naive'``, no
+compression stage, and either no clip or a static ``ClipSpec(radius=)``
+(a data-dependent ``ClipSpec(alpha=)`` needs the trainer's iterate
+pair).  ``validate_serve_plan`` rejects everything else up front.
+
+Compiled executors are cached per canonical plan JSON (plus buffer
+geometry), so multi-tenant servers sharing a plan never recompile.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..api import PlanError, ServerPlan
+from ..core.clipping import clip as _clip
+
+__all__ = [
+    "CohortBuilder",
+    "PlanExecutor",
+    "executor_cache_info",
+    "executor_cache_clear",
+    "get_executor",
+    "validate_serve_plan",
+]
+
+F32 = jnp.float32
+
+
+def validate_serve_plan(plan: ServerPlan) -> None:
+    """Raise PlanError unless ``plan`` can run inside the serve loop."""
+    if plan.schedule.placement != "naive":
+        raise PlanError(
+            "the serve loop runs the single-process engine form: use "
+            "placement='naive' (the sharded schedule needs a device mesh "
+            "and the training launcher)"
+        )
+    if plan.clip is not None and plan.clip.radius is None:
+        raise PlanError(
+            "a data-dependent ClipSpec(alpha=) radius needs the trainer's "
+            "iterate pair; serveable plans use a static ClipSpec(radius=) "
+            "or no clip stage"
+        )
+    if plan.compress is not None:
+        raise PlanError(
+            "compression is a worker-side stage of the training loop; "
+            "serve clients submit raw rows — drop the compress stage from "
+            "the served plan"
+        )
+
+
+class PlanExecutor:
+    """The compiled per-plan callables one cohort geometry shares.
+
+    ``ingest(buffer, arrived, stats, rows, ids)`` folds one fixed-width
+    chunk into the round state; ``close(buffer, arrived, stats, key)``
+    produces the round aggregate.  Both are jitted once per executor and
+    reused across every round (and every server) with the same plan —
+    the executor cache keys on ``(plan.to_json(), n_slots, dim,
+    chunk_size)``.
+    """
+
+    def __init__(self, plan: ServerPlan, n_slots: int, dim: int,
+                 chunk_size: int):
+        validate_serve_plan(plan)
+        self.plan = plan
+        self.n_slots = int(n_slots)
+        self.dim = int(dim)
+        self.chunk_size = int(chunk_size)
+        self.step = plan.build()
+        agg = self.step.aggregator
+        self.two_phase = agg.supports_two_phase
+        radius = None if plan.clip is None else F32(plan.clip.radius)
+        # jnp clips rows before the Gram; pallas folds clipping into the
+        # Gram algebra (fused_clip_fn) — mirror the one-shot dispatch so
+        # the close stays bitwise-equal on both backends
+        self.clip_at_ingest = (
+            self.two_phase and radius is not None
+            and agg.fused_clip_fn is None
+        )
+        finalize_radius = None if self.clip_at_ingest else radius
+        n = self.n_slots
+
+        def ingest(buffer, arrived, stats, rows, ids):
+            if self.clip_at_ingest:
+                rows = jax.vmap(lambda v: _clip(v, radius))(rows)
+            buffer = buffer.at[ids].set(rows, mode="drop")
+            chunk_mask = (
+                jnp.zeros((n,), bool).at[ids].set(True, mode="drop")
+            )
+            arrived = arrived | chunk_mask
+            if self.two_phase:
+                emb = jnp.zeros_like(buffer).at[ids].set(rows, mode="drop")
+                stats = agg.update_stats(stats, buffer, emb, chunk_mask)
+            return buffer, arrived, stats
+
+        def close(buffer, arrived, stats, key):
+            if self.two_phase:
+                sel = agg.finalize(
+                    stats, mask=arrived, key=key, radius=finalize_radius
+                )
+                return agg.apply_selection(buffer, sel)
+            return self.step(buffer, mask=arrived, key=key)
+
+        self.ingest = jax.jit(ingest)
+        self.close = jax.jit(close)
+
+    def init_state(self):
+        """Fresh round state: (buffer, arrived, stats)."""
+        n, d = self.n_slots, self.dim
+        stats = jnp.zeros((n, n), F32) if self.two_phase else jnp.zeros((), F32)
+        return jnp.zeros((n, d), F32), jnp.zeros((n,), bool), stats
+
+
+_CACHE: dict = {}
+_CACHE_LOCK = threading.Lock()
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def get_executor(plan: ServerPlan, n_slots: int, dim: int,
+                 chunk_size: int = 8) -> PlanExecutor:
+    """The shared executor for ``plan`` at this cohort geometry.
+
+    Keyed on the canonical plan JSON: two servers (tenants) configured
+    with equal plans — however they were constructed — share one
+    compiled executor and never retrace."""
+    key = (plan.to_json(), int(n_slots), int(dim), int(chunk_size))
+    with _CACHE_LOCK:
+        hit = _CACHE.get(key)
+        if hit is not None:
+            _CACHE_STATS["hits"] += 1
+            return hit
+    # build outside the lock (validation + jit wrapping); last writer
+    # wins on a race, which only costs a duplicate python wrapper
+    ex = PlanExecutor(ServerPlan.from_json(key[0]), n_slots, dim, chunk_size)
+    with _CACHE_LOCK:
+        _CACHE_STATS["misses"] += 1
+        return _CACHE.setdefault(key, ex)
+
+
+def executor_cache_info() -> dict:
+    with _CACHE_LOCK:
+        return dict(_CACHE_STATS, size=len(_CACHE))
+
+
+def executor_cache_clear() -> None:
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _CACHE_STATS.update(hits=0, misses=0)
+
+
+class CohortBuilder:
+    """One round's cohort: the streaming state plus its executor.
+
+    ``ingest(rows, slot_ids)`` accepts any number of rows (host-side it
+    re-cuts them into the executor's fixed chunk width, padding short
+    chunks with the out-of-range slot ``n_slots`` which the scatter
+    drops); ``close(key)`` returns the aggregate over the arrived rows;
+    ``reset()`` opens the next round on the same compiled executor.
+    """
+
+    def __init__(self, plan: ServerPlan, n_slots: int, dim: int, *,
+                 chunk_size: int = 8):
+        self.executor = get_executor(plan, n_slots, dim, chunk_size)
+        self.reset()
+
+    def reset(self) -> None:
+        self._buffer, self._arrived, self._stats = self.executor.init_state()
+
+    @property
+    def fill(self) -> int:
+        """Distinct slots with an arrived row this round."""
+        return int(jnp.sum(self._arrived))
+
+    @property
+    def arrived(self):
+        return self._arrived
+
+    @property
+    def buffer(self):
+        return self._buffer
+
+    def ingest(self, rows, slot_ids) -> None:
+        ex = self.executor
+        rows = np.asarray(rows, dtype=np.float32)
+        ids = np.asarray(slot_ids, dtype=np.int32)
+        if rows.ndim == 1:
+            rows, ids = rows[None], ids.reshape(1)
+        if rows.shape[0] != ids.shape[0]:
+            raise ValueError(
+                f"{rows.shape[0]} rows but {ids.shape[0]} slot ids"
+            )
+        if rows.shape[1] != ex.dim:
+            raise ValueError(
+                f"row width {rows.shape[1]} != configured dim {ex.dim}"
+            )
+        if ids.size and (ids.min() < 0 or ids.max() >= ex.n_slots):
+            raise ValueError(
+                f"slot ids must lie in [0, {ex.n_slots}); got "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        c = ex.chunk_size
+        for lo in range(0, rows.shape[0], c):
+            chunk = rows[lo:lo + c]
+            cids = ids[lo:lo + c]
+            pad = c - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad, ex.dim), np.float32)]
+                )
+                # n_slots is out of range: mode='drop' skips these rows
+                cids = np.concatenate(
+                    [cids, np.full((pad,), ex.n_slots, np.int32)]
+                )
+            self._buffer, self._arrived, self._stats = ex.ingest(
+                self._buffer, self._arrived, self._stats,
+                jnp.asarray(chunk), jnp.asarray(cids),
+            )
+
+    def close(self, key: Optional[jax.Array] = None):
+        """Aggregate the arrived rows (does NOT reset the round)."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return self.executor.close(
+            self._buffer, self._arrived, self._stats, key
+        )

@@ -1,0 +1,316 @@
+"""The continuous-batching aggregation server.
+
+Request queue -> plan executor -> response fan-out:
+
+- clients ``submit(slot, row)`` and get back a :class:`Ticket`;
+- ``pump()`` drains the queue into the current round's
+  :class:`~repro.serve.cohort.CohortBuilder` (chunked, jit-stable
+  ingest) and closes the round when a trigger fires:
+  ``cohort_size`` distinct rows arrived, or ``deadline`` seconds
+  elapsed since the round opened (with at least one row);
+- closing resolves every ticket of the round with the same
+  :class:`RoundResult` (the aggregate is computed once and fanned out).
+
+Rows that arrive for an already-closed round are STALE.  Policy
+``"drop"`` rejects them (the ticket resolves unfulfilled); ``"defer"``
+folds them into the current round scaled by
+``stale_discount ** staleness`` — the delayed-momentum heuristic: a
+late update still carries signal, but geometrically less of it the
+longer it sat in flight.
+
+The clock is injectable (``clock=``) so deadline behaviour is exactly
+testable; ``pump()`` is synchronous — a driving loop (or test) decides
+when work happens, and per-round counters (:class:`ServeMetrics`) make
+the behaviour observable without logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from ..api import ServerPlan
+from .cohort import CohortBuilder
+
+__all__ = [
+    "AggregationServer",
+    "RoundResult",
+    "ServeConfig",
+    "ServeMetrics",
+    "Ticket",
+]
+
+_STALE_POLICIES = ("drop", "defer")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Geometry and scheduling knobs of one aggregation service.
+
+    ``cohort_size`` — close the round once this many DISTINCT slots have
+    a row (default: every slot, i.e. ``n_slots``).
+    ``deadline`` — close a non-empty round this many seconds after it
+    opened, even if underfull (None: no deadline; the round waits).
+    ``stale_policy`` / ``stale_discount`` — see the module docstring.
+    ``chunk_size`` — fixed ingest chunk width (jit-stability; wire
+    batching does not change the traced program).
+    """
+
+    n_slots: int
+    dim: int
+    cohort_size: Optional[int] = None
+    deadline: Optional[float] = None
+    stale_policy: str = "drop"
+    stale_discount: float = 0.5
+    chunk_size: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1; got {self.n_slots}")
+        if self.dim < 1:
+            raise ValueError(f"dim must be >= 1; got {self.dim}")
+        cs = self.resolved_cohort_size
+        if not 1 <= cs <= self.n_slots:
+            raise ValueError(
+                f"cohort_size must lie in [1, n_slots={self.n_slots}]; "
+                f"got {cs}"
+            )
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be > 0; got {self.deadline}")
+        if self.stale_policy not in _STALE_POLICIES:
+            raise ValueError(
+                f"unknown stale_policy {self.stale_policy!r}; have "
+                f"{_STALE_POLICIES}"
+            )
+        if not 0.0 < self.stale_discount <= 1.0:
+            raise ValueError(
+                f"stale_discount must lie in (0, 1]; got "
+                f"{self.stale_discount}"
+            )
+        if self.chunk_size < 1:
+            raise ValueError(
+                f"chunk_size must be >= 1; got {self.chunk_size}"
+            )
+
+    @property
+    def resolved_cohort_size(self) -> int:
+        return self.n_slots if self.cohort_size is None else self.cohort_size
+
+
+@dataclasses.dataclass
+class RoundResult:
+    """What every ticket of a closed round resolves to."""
+
+    round_id: int
+    aggregate: np.ndarray
+    cohort_fill: int
+    close_reason: str  # "fill" | "deadline"
+    latency: float  # seconds from round open to close
+
+
+@dataclasses.dataclass
+class Ticket:
+    """A submitted row's handle.  ``status`` moves queued -> ingested ->
+    done (round closed), or to dropped_stale / deferred for late rows."""
+
+    round_id: int  # the round the row was INGESTED into (or targeted)
+    slot: int
+    status: str = "queued"
+    result: Optional[RoundResult] = None
+    submitted_at: float = 0.0
+    resolved_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-resolution seconds (None while pending)."""
+        if self.result is None and self.status != "dropped_stale":
+            return None
+        return self.resolved_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Per-server counters; ``snapshot()`` is the observability surface."""
+
+    rows_ingested: int = 0
+    rows_dropped_stale: int = 0
+    rows_deferred: int = 0
+    rounds_closed: int = 0
+    closes_by_fill: int = 0
+    closes_by_deadline: int = 0
+    last_cohort_fill: int = 0
+    last_round_latency: float = 0.0
+    max_queue_depth: int = 0
+    queue_depth: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Pending:
+    slot: int
+    row: np.ndarray
+    round_id: Optional[int]  # None: whichever round ingests it
+    ticket: Ticket
+
+
+class AggregationServer:
+    """One served plan + one cohort geometry; see the module docstring."""
+
+    def __init__(self, plan: ServerPlan, config: ServeConfig, *,
+                 clock: Optional[Callable[[], float]] = None):
+        self.plan = plan
+        self.config = config
+        self.metrics = ServeMetrics()
+        self._clock = clock or time.monotonic
+        self._builder = CohortBuilder(
+            plan, config.n_slots, config.dim, chunk_size=config.chunk_size
+        )
+        self._queue: deque[_Pending] = deque()
+        self._round_id = 0
+        self._round_opened_at = self._clock()
+        self._round_tickets: list[Ticket] = []
+        # host-side mirror of the builder's arrived mask: lets the pump
+        # stop a wire batch exactly at the round boundary (rows beyond
+        # the cohort trigger roll into the NEXT round) without a device
+        # round-trip per row
+        self._arrived_slots: set[int] = set()
+
+    # -- request side --------------------------------------------------------
+
+    @property
+    def round_id(self) -> int:
+        return self._round_id
+
+    def submit(self, slot: int, row, round_id: Optional[int] = None) -> Ticket:
+        """Enqueue one client row.  Returns the ticket the round's result
+        fans out to.
+
+        ``round_id=None`` (the continuous-batching default) means
+        "whichever round ingests it": a backlogged row rolls into a
+        later round instead of going stale.  An explicit ``round_id``
+        pins the row to that round — arriving after it closed makes the
+        row STALE and subject to the configured stale policy."""
+        target = round_id if round_id is None else int(round_id)
+        if target is not None and target > self._round_id:
+            raise ValueError(
+                f"round {target} has not opened yet (current round is "
+                f"{self._round_id})"
+            )
+        t = Ticket(round_id=self._round_id if target is None else target,
+                   slot=int(slot), submitted_at=self._clock())
+        self._queue.append(
+            _Pending(int(slot), np.asarray(row, np.float32), target, t)
+        )
+        self.metrics.queue_depth = len(self._queue)
+        self.metrics.max_queue_depth = max(
+            self.metrics.max_queue_depth, len(self._queue)
+        )
+        return t
+
+    # -- serve loop ----------------------------------------------------------
+
+    def pump(self) -> list[RoundResult]:
+        """Drain the queue, fire any due trigger; returns the rounds
+        closed by this call (usually 0 or 1, more under backlog)."""
+        closed: list[RoundResult] = []
+        cfg = self.config
+        while self._queue:
+            batch_rows, batch_ids = [], []
+            while self._queue:
+                p = self._queue.popleft()
+                if p.round_id is None:
+                    p.ticket.round_id = self._round_id
+                staleness = (
+                    0 if p.round_id is None else self._round_id - p.round_id
+                )
+                if staleness > 0:
+                    if cfg.stale_policy == "drop":
+                        self.metrics.rows_dropped_stale += 1
+                        p.ticket.status = "dropped_stale"
+                        p.ticket.resolved_at = self._clock()
+                        continue
+                    # defer: fold into the CURRENT round, geometrically
+                    # discounted by how many rounds the row missed
+                    p.row = p.row * (cfg.stale_discount ** staleness)
+                    self.metrics.rows_deferred += 1
+                    p.ticket.status = "deferred"
+                batch_rows.append(p.row)
+                batch_ids.append(p.slot)
+                self._round_tickets.append(p.ticket)
+                self._arrived_slots.add(p.slot)
+                if len(batch_rows) == cfg.chunk_size:
+                    break
+                if len(self._arrived_slots) >= cfg.resolved_cohort_size:
+                    # the round is full: leave the rest of the queue for
+                    # the next round instead of overfilling this one
+                    break
+            if batch_rows:
+                self._builder.ingest(
+                    np.stack(batch_rows), np.asarray(batch_ids)
+                )
+                self.metrics.rows_ingested += len(batch_rows)
+                for t in self._round_tickets[-len(batch_rows):]:
+                    if t.status == "queued":
+                        t.status = "ingested"
+            self.metrics.queue_depth = len(self._queue)
+            if len(self._arrived_slots) >= cfg.resolved_cohort_size:
+                closed.append(self._close_round("fill"))
+        result = self._maybe_deadline_close()
+        if result is not None:
+            closed.append(result)
+        return closed
+
+    def _maybe_deadline_close(self) -> Optional[RoundResult]:
+        cfg = self.config
+        if cfg.deadline is None:
+            return None
+        if self._clock() - self._round_opened_at < cfg.deadline:
+            return None
+        if not self._arrived_slots:
+            # nothing arrived: an empty round has no aggregate — re-arm
+            # instead of fanning out a degenerate result
+            self._round_opened_at = self._clock()
+            return None
+        return self._close_round("deadline")
+
+    def _close_round(self, reason: str) -> RoundResult:
+        now = self._clock()
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.config.seed), self._round_id
+        )
+        aggregate = np.asarray(self._builder.close(key))
+        result = RoundResult(
+            round_id=self._round_id,
+            aggregate=aggregate,
+            cohort_fill=self._builder.fill,
+            close_reason=reason,
+            latency=now - self._round_opened_at,
+        )
+        for t in self._round_tickets:
+            t.result = result
+            t.resolved_at = now
+            if t.status in ("queued", "ingested"):
+                t.status = "done"
+        m = self.metrics
+        m.rounds_closed += 1
+        m.closes_by_fill += reason == "fill"
+        m.closes_by_deadline += reason == "deadline"
+        m.last_cohort_fill = result.cohort_fill
+        m.last_round_latency = result.latency
+        self._round_tickets = []
+        self._arrived_slots = set()
+        self._round_id += 1
+        self._round_opened_at = now
+        self._builder.reset()
+        return result

@@ -182,7 +182,7 @@ def test_from_theory_constructor_converges():
         prob, C=2, C_hat=10, p=0.25, delta=0.2, attack="shb"
     )
     assert 0 < alg.cfg.gamma < 1.0
-    assert alg.cfg.clip_alpha == 2.0 * prob.smoothness()
+    assert alg.plan.clip.alpha == 2.0 * prob.smoothness()
     st, m = _jax.jit(lambda s: alg.run(150, s))(alg.init())
     # theory stepsizes are conservative: loss must decrease monotonically-ish
     assert float(m["loss"][-1]) < float(m["loss"][0])

@@ -23,7 +23,7 @@ REPRO_SURFACE = {
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",
-    "plan_from_legacy",
+    "PLAN_VERSION",
 }
 
 API_SURFACE = {
@@ -36,7 +36,7 @@ API_SURFACE = {
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",
-    "plan_from_legacy",
+    "PLAN_VERSION",
 }
 
 PLAN_FIELDS = {"aggregate", "clip", "compress", "bucket", "schedule",
@@ -84,3 +84,27 @@ def test_spec_field_snapshots():
         "kind", "k", "frac"
     }
     assert {f.name for f in dataclasses.fields(api.BucketSpec)} == {"s"}
+
+
+def test_plan_json_version_pinned_round_trip():
+    """The canonical plan document is versioned: ``to_json`` stamps the
+    current PLAN_VERSION, ``from_json`` accepts missing-version documents
+    as v1 and rejects unknown versions.  Bumping PLAN_VERSION is a
+    surface change — update this pin together with a migration note."""
+    import json
+
+    import pytest
+
+    assert api.PLAN_VERSION == 1
+    plan = api.ServerPlan(aggregate=api.AggregatorSpec("cm"),
+                          clip=api.ClipSpec(alpha=1.0),
+                          bucket=api.BucketSpec(s=2))
+    doc = json.loads(plan.to_json())
+    assert doc["version"] == api.PLAN_VERSION
+    assert api.ServerPlan.from_json(plan.to_json()) == plan
+    # pre-versioning documents still parse (implicit v1)
+    del doc["version"]
+    assert api.ServerPlan.from_json(json.dumps(doc)) == plan
+    doc["version"] = 99
+    with pytest.raises(api.PlanError, match="version"):
+        api.ServerPlan.from_json(json.dumps(doc))

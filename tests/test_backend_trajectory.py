@@ -16,6 +16,13 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
 from repro.core.marina_pp import ByzVRMarinaPP, MarinaPPConfig
 from repro.core.problems import logistic_problem
 
@@ -29,10 +36,15 @@ SUMMED_AGGS = ["trimmed_mean", "mean"]
 
 
 def _trace(prob, aggregator, backend, *, bucket_s=2, steps=20):
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(aggregator),
+        clip=ClipSpec(alpha=2.0),
+        bucket=BucketSpec(s=bucket_s) if bucket_s >= 2 else None,
+        schedule=ScheduleSpec(backend=backend),
+    )
     cfg = MarinaPPConfig(
-        gamma=0.05, p=0.25, C=4, C_hat=12, batch=16, clip_alpha=2.0,
-        use_clipping=True, aggregator=aggregator, bucket_s=bucket_s,
-        attack="shb", backend=backend,
+        gamma=0.05, p=0.25, C=4, C_hat=12, batch=16,
+        plan=plan, attack="shb",
     )
     alg = ByzVRMarinaPP(prob, cfg)
     _, metrics = jax.jit(lambda s: alg.run(steps, s))(alg.init())

@@ -74,6 +74,58 @@ def test_timing_tier_ignores_ref_rows():
     assert not timing
 
 
+def _serve_row(name, rps, p50_ms, p99_ms):
+    return {"name": name, "requests_per_sec": rps, "p50_ms": p50_ms,
+            "p99_ms": p99_ms, "derived": ""}
+
+
+def test_serve_rows_flatten_to_derived_us_scalars():
+    """Serve-loop rows (bench_serve shape) have no us_per_call; the gate
+    derives per-metric scalars — latency percentiles in us, and inverted
+    throughput (us per request) so a rate DROP gates as a time INCREASE."""
+    committed = _payload(rows=[("kernel_a", 1000.0)])
+    committed["rows"].append(_serve_row("serve_krum_steady", 2000.0, 1.5, 3.0))
+    fresh = _payload(rows=[("kernel_a", 1000.0)])
+    fresh["rows"].append(_serve_row("serve_krum_steady", 2000.0, 1.5, 3.0))
+    assert compare(committed, fresh, **GATE_KW) == ([], [])
+    # p99 blowup past the noise floor: flagged like any slow kernel row
+    fresh["rows"][-1] = _serve_row("serve_krum_steady", 2000.0, 1.5, 12.0)
+    timing, _ = compare(committed, fresh, **GATE_KW)
+    assert [t[0] for t in timing] == ["serve_krum_steady.p99_ms"]
+    # throughput collapse: us_per_req 500 -> 5000 crosses min_us too
+    fresh["rows"][-1] = _serve_row("serve_krum_steady", 200.0, 1.5, 3.0)
+    timing, _ = compare(committed, fresh, **GATE_KW)
+    assert [t[0] for t in timing] == ["serve_krum_steady.us_per_req"]
+
+
+def test_new_serve_rows_are_informational(tmp_path):
+    """First landing of the serve benchmark: no baseline counterpart, so
+    its derived scalars surface as new_rows and the gate stays green."""
+    base = _write(tmp_path, "base.json", _payload(rows=[("kernel_a", 1000.0)]))
+    fresh_payload = _payload(rows=[("kernel_a", 1000.0)])
+    fresh_payload["rows"].append(_serve_row("serve_cm_steady", 2500.0, 1.6, 3.5))
+    fresh = _write(tmp_path, "fresh.json", fresh_payload)
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_OK
+    v = json.loads(verdict.read_text())
+    assert v["new_rows"] == ["serve_cm_steady.p50_ms",
+                             "serve_cm_steady.p99_ms",
+                             "serve_cm_steady.us_per_req"]
+
+
+def test_vanished_serve_rows_are_broken(tmp_path):
+    """Once in the baseline, a serve row that stops reporting hard-fails
+    like any vanished kernel row — even under --timing-warn-only."""
+    base_payload = _payload(rows=[("kernel_a", 1000.0)])
+    base_payload["rows"].append(_serve_row("serve_krum_burst", 7000.0, 0.8, 0.9))
+    base = _write(tmp_path, "base.json", base_payload)
+    fresh = _write(tmp_path, "fresh.json", _payload(rows=[("kernel_a", 1000.0)]))
+    rc = main(["--baseline", base, "--fresh", fresh, "--timing-warn-only"])
+    assert rc == EXIT_REGRESSION
+
+
 def test_traffic_tier_is_deterministic_one_percent():
     committed = _payload(traffic_model={"fused_bytes": 1000.0})
     ok = _payload(traffic_model={"fused_bytes": 1009.0})  # within 1%

@@ -12,6 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    CompressSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
 from repro.core import (
     ByzVRMarinaPP,
     ClippedPPConfig,
@@ -22,6 +30,22 @@ from repro.core import (
     mlp_problem,
 )
 from repro.core.theory import MarinaTheory, theorem41_A, theorem42_A
+
+
+def _plan(aggregator="cm", bucket_s=2, clip_alpha=1.0, backend="auto",
+          compressor=None, compressor_kwargs=()):
+    comp = None
+    if compressor:
+        kw = dict(compressor_kwargs)
+        comp = CompressSpec(kind=compressor, k=int(kw.get("k", 1)),
+                            frac=float(kw.get("frac", 0.01)))
+    return ServerPlan(
+        aggregate=AggregatorSpec(aggregator),
+        clip=ClipSpec(alpha=clip_alpha) if clip_alpha is not None else None,
+        compress=comp,
+        bucket=BucketSpec(s=bucket_s) if bucket_s >= 2 else None,
+        schedule=ScheduleSpec(backend=backend),
+    )
 
 
 @pytest.fixture(scope="module")
@@ -41,18 +65,16 @@ def fstar(prob):
 
 
 def _run(prob, steps=250, **overrides):
+    plan_kw = dict(aggregator="cm", bucket_s=2, clip_alpha=1.0,
+                   backend="auto", compressor=None, compressor_kwargs=())
+    if not overrides.pop("use_clipping", True):
+        plan_kw["clip_alpha"] = None
+    for k in list(overrides):
+        if k in plan_kw:
+            plan_kw[k] = overrides.pop(k)
     base = dict(
-        gamma=0.5,
-        p=0.2,
-        C=4,
-        C_hat=20,
-        batch=32,
-        clip_alpha=1.0,
-        use_clipping=True,
-        aggregator="cm",
-        bucket_s=2,
-        attack="shb",
-        seed=1,
+        gamma=0.5, p=0.2, C=4, C_hat=20, batch=32,
+        plan=_plan(**plan_kw), attack="shb", seed=1,
     )
     base.update(overrides)
     alg = ByzVRMarinaPP(prob, MarinaPPConfig(**base))
@@ -89,9 +111,7 @@ def test_full_participation_no_byz_matches_gd(prob):
             p=1.0,
             C=8,
             C_hat=8,
-            use_clipping=False,
-            aggregator="mean",
-            bucket_s=0,
+            plan=_plan("mean", bucket_s=0, clip_alpha=None),
             attack="none",
         ),
     )
@@ -146,12 +166,12 @@ def test_heuristic_clipped_pp_momentum():
         jax.random.PRNGKey(5), n_clients=10, n_good=7, m=128, in_dim=16, hidden=8
     )
     cfgc = ClippedPPConfig(
-        gamma=0.1, C=3, attack="shb", use_clipping=True, aggregator="cm", bucket_s=2
+        gamma=0.1, C=3, attack="shb", plan=_plan("cm", clip_alpha=1.0)
     )
     algc = ClippedPPMomentum(prob, cfgc)
     _, mc = jax.jit(lambda s: algc.run(500, s))(algc.init())
     cfgn = ClippedPPConfig(
-        gamma=0.1, C=3, attack="shb", use_clipping=False, aggregator="cm", bucket_s=2
+        gamma=0.1, C=3, attack="shb", plan=_plan("cm", clip_alpha=None)
     )
     algn = ClippedPPMomentum(prob, cfgn)
     _, mn = jax.jit(lambda s: algn.run(500, s))(algn.init())
@@ -223,7 +243,9 @@ def test_backend_pallas_matches_jnp_loss_trace(prob):
     same clip radii, same aggregates."""
     # the pallas engine really is kernel-backed (not a silent jnp fallback)
     alg = ByzVRMarinaPP(
-        prob, MarinaPPConfig(gamma=0.5, p=0.2, C=4, C_hat=20, backend="pallas")
+        prob,
+        MarinaPPConfig(gamma=0.5, p=0.2, C=4, C_hat=20,
+                       plan=_plan(backend="pallas")),
     )
     assert alg.agg.backend == "pallas"
     assert alg.agg.fused_clip_fn is not None
@@ -244,8 +266,8 @@ def test_backend_pallas_heuristic_matches_jnp():
     traces = {}
     for backend in ("jnp", "pallas"):
         cfg = ClippedPPConfig(
-            gamma=0.1, C=3, attack="shb", use_clipping=True,
-            aggregator="cm", bucket_s=2, backend=backend,
+            gamma=0.1, C=3, attack="shb",
+            plan=_plan("cm", clip_alpha=1.0, backend=backend),
         )
         alg = ClippedPPMomentum(prob, cfg)
         _, m = jax.jit(lambda s, a=alg: a.run(50, s))(alg.init())

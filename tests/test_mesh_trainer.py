@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from _jaxpr_utils import iter_eqns_outside_kernels as _iter_eqns_outside_kernels
+from repro.api import AggregatorSpec, BucketSpec, ScheduleSpec, ServerPlan
 from repro.launch.train import ByzTrainConfig, _make_leaf_agg
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -25,15 +26,31 @@ ENV = dict(
 )
 
 
+def _mk_cfg(name, *, placement="naive", blocks="sequential", backend="jnp",
+            superleaf_elems=0, n_byz=0, trim_ratio=0.25, bucket_s=0):
+    """Plan-based config builder; a ``bucket_<rule>`` name is shorthand
+    for ``rule`` + BucketSpec(2) (the registry lists below keep the
+    historical spellings for readability)."""
+    if name.startswith("bucket_"):
+        name, bucket_s = name[len("bucket_"):], bucket_s or 2
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(name, trim_ratio=trim_ratio,
+                                 byz_bound=n_byz),
+        bucket=BucketSpec(s=bucket_s) if bucket_s else None,
+        schedule=ScheduleSpec(placement=placement, blocks=blocks,
+                              superleaf_elems=superleaf_elems,
+                              backend=backend),
+    )
+    return ByzTrainConfig.from_plan(plan, n_byz=n_byz)
+
+
 # ---------------------------------------------------------------------------
 # leaf-aggregation semantics (in process) — _make_leaf_agg routes through
 # the core dispatch layer, so these pin the mesh-trainer-visible behavior
 # ---------------------------------------------------------------------------
 
 def _leaf_agg(name, backend="jnp", **cfg_kw):
-    return _make_leaf_agg(
-        ByzTrainConfig(aggregator=name, backend=backend, **cfg_kw)
-    )
+    return _make_leaf_agg(_mk_cfg(name, backend=backend, **cfg_kw))
 
 
 def test_leaf_agg_cm_matches_numpy_any_rank():
@@ -152,8 +169,18 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import AggregatorSpec, BucketSpec, ScheduleSpec, ServerPlan
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+def mk_cfg(agg, sched, backend, inner="sequential", sle=0):
+    rule, s = (agg[7:], 2) if agg.startswith("bucket_") else (agg, 0)
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=1),
+        bucket=BucketSpec(s=s) if s else None,
+        schedule=ScheduleSpec(placement=sched, blocks=inner,
+                              superleaf_elems=sle, backend=backend))
+    return ByzTrainConfig.from_plan(plan, n_byz=1)
 
 mesh = make_debug_mesh(4, 2)
 rng = np.random.RandomState(0)
@@ -171,8 +198,7 @@ with set_mesh(mesh):
             outs = {}
             for backend in ("jnp", "pallas"):
                 for sched in ("naive", "sharded"):
-                    cfg = ByzTrainConfig(aggregator=agg, agg_schedule=sched,
-                                         backend=backend, n_byz=1)
+                    cfg = mk_cfg(agg, sched, backend)
                     outs[(backend, sched)] = jax.jit(
                         lambda t, m, k: robust_aggregate(
                             t, m, k, mesh=mesh, cfg=cfg, radius=radius)
@@ -209,8 +235,15 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.aggregators import make_aggregator
 from repro.core.clipping import clip_factor
 from repro.core.tree_utils import tree_norm
+from repro.api import AggregatorSpec, ScheduleSpec, ServerPlan
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+def mk_cfg(agg, backend):
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(agg, byz_bound=1),
+        schedule=ScheduleSpec(placement="sharded", backend=backend))
+    return ByzTrainConfig.from_plan(plan, n_byz=1)
 
 mesh = make_debug_mesh(4, 2)
 W = 4
@@ -252,8 +285,7 @@ def gfactors(msgs):
 for backend in ("jnp", "pallas"):
     for agg_name in ("krum", "multi_krum"):
         for clip in (True, False):
-            cfg = ByzTrainConfig(aggregator=agg_name, agg_schedule="sharded",
-                                 backend=backend, n_byz=1)
+            cfg = mk_cfg(agg_name, backend)
             eng = make_aggregator(agg_name, backend=backend, byz_bound=1)
             radius = jnp.float32(2.5) if clip else None
             jmesh = jax.jit(lambda t, m, k: robust_aggregate(
@@ -286,8 +318,7 @@ for backend in ("jnp", "pallas"):
             print("BITWISE", backend, agg_name, "clip" if clip else "plain")
 
 # the sharded whole-tree path must never build the stacked message
-cfg = ByzTrainConfig(aggregator="krum", agg_schedule="sharded",
-                     backend="pallas", n_byz=1)
+cfg = mk_cfg("krum", "pallas")
 with set_mesh(mesh):
     jaxpr = jax.make_jaxpr(
         lambda t, m, k: robust_aggregate(t, m, k, mesh=mesh, cfg=cfg,
@@ -318,8 +349,18 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import AggregatorSpec, BucketSpec, ScheduleSpec, ServerPlan
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+def mk_cfg(agg, sched, sle):
+    rule, s = (agg[7:], 2) if agg.startswith("bucket_") else (agg, 0)
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=1),
+        bucket=BucketSpec(s=s) if s else None,
+        schedule=ScheduleSpec(placement="sharded", blocks=sched,
+                              superleaf_elems=sle, backend="pallas"))
+    return ByzTrainConfig.from_plan(plan, n_byz=1)
 
 mesh = make_debug_mesh(4, 2)
 rng = np.random.RandomState(0)
@@ -337,9 +378,7 @@ with set_mesh(mesh):
         for sle in (0, 24):
             outs = {}
             for sched in ("sequential", "pipelined"):
-                cfg = ByzTrainConfig(aggregator=agg, agg_schedule="sharded",
-                                     schedule=sched, superleaf_elems=sle,
-                                     backend="pallas", n_byz=1)
+                cfg = mk_cfg(agg, sched, sle)
                 outs[sched] = jax.jit(
                     lambda t, m, k: robust_aggregate(
                         t, m, k, mesh=mesh, cfg=cfg, radius=radius)
@@ -391,14 +430,19 @@ def messages(g, k):
             byz.reshape((-1,) + (1,) * (h.ndim - 1)), -3.0 * h, h),
         honest)
 
+from repro.api import AggregatorSpec, ScheduleSpec, ServerPlan
+
 for agg in ("krum", "centered_clip"):
     name = {"centered_clip": "cclip"}.get(agg, agg)
     traces = {}
     for sched, inner in (("naive", "sequential"),
                          ("sharded", "sequential"),
                          ("sharded", "pipelined")):
-        cfg = ByzTrainConfig(aggregator=name, agg_schedule=sched,
-                             schedule=inner, backend="pallas", n_byz=1)
+        plan = ServerPlan(
+            aggregate=AggregatorSpec(name, byz_bound=1),
+            schedule=ScheduleSpec(placement=sched, blocks=inner,
+                                  backend="pallas"))
+        cfg = ByzTrainConfig.from_plan(plan, n_byz=1)
         jagg = jax.jit(lambda t, m, k: robust_aggregate(
             t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(2.5)))
         g = jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape[1:]), base)
@@ -452,10 +496,8 @@ def test_whole_tree_selection_in_process_naive_matches_engine():
     with set_mesh(mesh):
         for backend in ("jnp", "pallas"):
             for name in ("krum", "multi_krum", "bucket_krum"):
-                cfg = ByzTrainConfig(
-                    aggregator=name, agg_schedule="naive", backend=backend,
-                    n_byz=1,
-                )
+                cfg = _mk_cfg(name, placement="naive", backend=backend,
+                              n_byz=1)
                 got = robust_aggregate(
                     tree, mask, key, mesh=mesh, cfg=cfg, radius=radius
                 )
@@ -491,9 +533,7 @@ def test_sharded_fused_path_jaxpr_no_standalone_clipped_matrix():
     mask = jnp.ones((1,), bool)
     key = jax.random.PRNGKey(0)
     with set_mesh(mesh):
-        cfg = ByzTrainConfig(
-            aggregator="cm", agg_schedule="sharded", backend="pallas"
-        )
+        cfg = _mk_cfg("cm", placement="sharded", backend="pallas")
         jaxpr = jax.make_jaxpr(
             lambda t, m, k: robust_aggregate(
                 t, m, k, mesh=mesh, cfg=cfg, radius=jnp.float32(2.0)
@@ -519,12 +559,15 @@ def test_sharded_fused_path_jaxpr_no_standalone_clipped_matrix():
 
 
 def test_train_cfg_validation():
-    cfg = ByzTrainConfig(aggregator="cm")
-    assert cfg.agg_schedule in ("naive", "sharded")
-    with pytest.raises(ValueError):
-        from repro.launch.train import _make_leaf_agg
+    from repro.launch.train import resolve_plan
 
-        _make_leaf_agg(ByzTrainConfig(aggregator="nope"))
+    # the default plan is the documented sharded coordinate-median
+    plan = resolve_plan(ByzTrainConfig())
+    assert plan.schedule.placement == "sharded"
+    assert plan.aggregate.rule == "cm"
+    # bad rules fail at SPEC construction, before any config exists
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        AggregatorSpec("nope")
 
 
 def test_cclip_leaf_agg_matches_core():
@@ -551,6 +594,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import AggregatorSpec, ScheduleSpec, ServerPlan
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, MeshTrainState, make_train_step
 from repro.models import ModelConfig, apply_train, init_params
@@ -561,9 +605,14 @@ cfg = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
 mesh = make_debug_mesh(4, 2)
 finals = {}
 for agg in ("cm", "mean"):
-    tc = ByzTrainConfig(gamma=0.3, n_byz=1, attack="gauss", aggregator=agg,
-                        agg_schedule="sharded" if agg == "cm" else "naive",
-                        use_clipping=(agg == "cm"), p=0.125)
+    if agg == "cm":
+        # the default plan: sharded CM with the alpha=2.0 server clip
+        tc = ByzTrainConfig(gamma=0.3, n_byz=1, attack="gauss", p=0.125)
+    else:
+        plan = ServerPlan(aggregate=AggregatorSpec("mean"),
+                          schedule=ScheduleSpec(placement="naive"))
+        tc = ByzTrainConfig.from_plan(plan, gamma=0.3, n_byz=1,
+                                      attack="gauss", p=0.125)
     step = make_train_step(cfg, mesh, tc)
     it = make_batch_iterator(cfg, 8, 64, seed=3)
     with set_mesh(mesh):

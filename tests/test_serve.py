@@ -1,0 +1,368 @@
+"""Streaming aggregation server (repro.serve) + the serving endpoint's
+compile-cache contract.
+
+The load-bearing property: INCREMENTAL cohort assembly — rows arriving
+in arbitrary chunk partitions, in arbitrary order, into a partially
+filled cohort — closes to an aggregate BITWISE-identical to running the
+plan's one-shot ``ServerStep`` on the assembled buffer, for every
+registry rule on both backends.  For the selection rules this pins the
+incremental Gram accumulation (full-cohort-shape cross products, the
+where/set merge) and the backend-mirrored clip dispatch (jnp clips rows
+at ingest, pallas clips inside the finalize algebra).
+
+The serve-loop tests drive :class:`AggregationServer` synchronously with
+an injected clock: round triggers (cohort fill, deadline), the stale-row
+policies, ticket fan-out, the per-round counters and the per-plan
+compiled-executor cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    ClipSpec,
+    CompressSpec,
+    PlanError,
+    ScheduleSpec,
+    ServerPlan,
+)
+from repro.serve import (
+    AggregationServer,
+    CohortBuilder,
+    ServeConfig,
+    executor_cache_clear,
+    executor_cache_info,
+    get_executor,
+    validate_serve_plan,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _plan(rule, *, bucket_s=0, radius=None, backend="jnp", byz_bound=1):
+    return ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=byz_bound),
+        clip=ClipSpec(radius=radius) if radius is not None else None,
+        bucket=BucketSpec(s=bucket_s) if bucket_s else None,
+        schedule=ScheduleSpec(placement="naive", backend=backend),
+    )
+
+
+def _random_partition(rng, items):
+    """Cut ``items`` into consecutive chunks of random sizes (>= 1)."""
+    out, i = [], 0
+    while i < len(items):
+        step = int(rng.randint(1, len(items) - i + 1))
+        out.append(items[i:i + step])
+        i += step
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the bitwise property: incremental close == one-shot ServerStep
+# ---------------------------------------------------------------------------
+
+# every registry rule (one spelling each) + the bucketed selection forms
+_REGISTRY = (
+    ("mean", 0), ("cm", 0), ("tm", 0), ("rfa", 0), ("cclip", 0),
+    ("krum", 0), ("multi_krum", 0), ("cm", 2), ("krum", 2),
+    ("multi_krum", 2),
+)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_incremental_close_bitwise_equals_one_shot_step(backend):
+    n, d = 8, 48
+    rng = np.random.RandomState(0)
+    xs = rng.randn(n, d).astype(np.float32) * 3.0
+    for rule, bucket_s in _REGISTRY:
+        for radius in (None, 2.5):
+            plan = _plan(rule, bucket_s=bucket_s, radius=radius,
+                         backend=backend)
+            step = plan.build()
+            for trial in range(2):
+                prng = np.random.RandomState(100 * trial + bucket_s)
+                # partial cohort: a random subset of slots, shuffled
+                # arrival order, random chunk partition of the arrivals
+                k = int(prng.randint(1, n + 1))
+                slots = prng.permutation(n)[:k]
+                builder = CohortBuilder(plan, n, d, chunk_size=3)
+                for chunk in _random_partition(prng, list(slots)):
+                    ids = np.asarray(chunk)
+                    builder.ingest(xs[ids], ids)
+                got = builder.close(KEY)
+                buf = np.zeros((n, d), np.float32)
+                buf[slots] = xs[slots]
+                mask = np.zeros((n,), bool)
+                mask[slots] = True
+                want = step(jnp.asarray(buf), mask=jnp.asarray(mask),
+                            key=KEY)
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want),
+                    err_msg=f"{rule} s={bucket_s} clip={radius} "
+                            f"backend={backend} slots={sorted(slots)}",
+                )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    chunk_size=st.integers(min_value=1, max_value=9),
+    clip=st.booleans(),
+)
+def test_incremental_gram_is_partition_invariant(seed, chunk_size, clip):
+    """Krum's streaming Gram: ANY chunk partition / arrival order /
+    resubmission pattern lands on the same stats — and the same close —
+    as any other, bit for bit (the decision depends on the assembled
+    cohort, never on how it streamed in)."""
+    n, d = 7, 33
+    rng = np.random.RandomState(seed)
+    xs = rng.randn(n, d).astype(np.float32)
+    plan = _plan("multi_krum", radius=2.0 if clip else None)
+    outs = []
+    for trial in range(2):
+        order = list(rng.permutation(n))
+        if trial == 1:
+            # resubmit a row mid-stream: last write must win cleanly
+            order.insert(rng.randint(1, n), order[0])
+        builder = CohortBuilder(plan, n, d, chunk_size=chunk_size)
+        for chunk in _random_partition(rng, order):
+            ids = np.asarray(chunk)
+            builder.ingest(xs[ids], ids)
+        assert builder.fill == n
+        outs.append(np.asarray(builder.close(KEY)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_cohort_builder_validates_geometry():
+    plan = _plan("cm")
+    builder = CohortBuilder(plan, 4, 8)
+    with pytest.raises(ValueError, match="slot ids"):
+        builder.ingest(np.zeros((1, 8), np.float32), [4])
+    with pytest.raises(ValueError, match="row width"):
+        builder.ingest(np.zeros((1, 9), np.float32), [0])
+    with pytest.raises(ValueError, match="slot ids"):
+        builder.ingest(np.zeros((2, 8), np.float32), [0])
+
+
+def test_unservable_plans_are_rejected():
+    with pytest.raises(PlanError, match="naive"):
+        validate_serve_plan(ServerPlan(
+            aggregate=AggregatorSpec("cm"),
+            schedule=ScheduleSpec(placement="sharded"),
+        ))
+    with pytest.raises(PlanError, match="iterate pair"):
+        validate_serve_plan(ServerPlan(
+            aggregate=AggregatorSpec("cm"), clip=ClipSpec(alpha=1.0),
+            schedule=ScheduleSpec(placement="naive"),
+        ))
+    with pytest.raises(PlanError, match="compress"):
+        validate_serve_plan(ServerPlan(
+            aggregate=AggregatorSpec("cm"),
+            compress=CompressSpec(kind="rand_k", k=2),
+            schedule=ScheduleSpec(placement="naive"),
+        ))
+
+
+# ---------------------------------------------------------------------------
+# the serve loop: triggers, stale policies, fan-out, counters
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _server(rule="cm", *, n=6, d=16, clock=None, **cfg_kw):
+    return AggregationServer(
+        _plan(rule), ServeConfig(n_slots=n, dim=d, **cfg_kw), clock=clock
+    )
+
+
+def test_cohort_size_trigger_fans_out_one_result():
+    srv = _server(cohort_size=4)
+    rng = np.random.RandomState(0)
+    tickets = [srv.submit(i, rng.randn(16)) for i in range(4)]
+    closed = srv.pump()
+    assert len(closed) == 1
+    r = closed[0]
+    assert r.close_reason == "fill" and r.cohort_fill == 4
+    assert all(t.done and t.result is r for t in tickets)
+    assert all(t.status == "done" for t in tickets)
+    assert srv.round_id == 1  # next round is open
+    assert srv.metrics.closes_by_fill == 1
+
+
+def test_deadline_trigger_closes_underfull_round():
+    clock = _Clock()
+    srv = _server(cohort_size=6, deadline=1.0, clock=clock)
+    t = srv.submit(2, np.ones(16))
+    assert srv.pump() == []  # underfull, deadline not reached
+    clock.t = 1.5
+    closed = srv.pump()
+    assert len(closed) == 1
+    assert closed[0].close_reason == "deadline"
+    assert closed[0].cohort_fill == 1
+    assert closed[0].latency == pytest.approx(1.5)
+    assert t.done and t.latency == pytest.approx(1.5)
+    assert srv.metrics.closes_by_deadline == 1
+
+
+def test_deadline_with_empty_round_rearms_instead_of_closing():
+    clock = _Clock()
+    srv = _server(deadline=1.0, clock=clock)
+    clock.t = 5.0
+    assert srv.pump() == []  # nothing arrived: no degenerate round
+    assert srv.metrics.rounds_closed == 0
+    # the deadline window restarts from the re-arm
+    srv.submit(0, np.ones(16))
+    clock.t = 5.5
+    assert srv.pump() == []
+    clock.t = 6.1
+    assert len(srv.pump()) == 1
+
+
+def test_stale_drop_policy_rejects_late_rows():
+    srv = _server(cohort_size=2, stale_policy="drop")
+    srv.submit(0, np.ones(16))
+    srv.submit(1, np.ones(16))
+    assert len(srv.pump()) == 1
+    late = srv.submit(2, np.ones(16), round_id=0)
+    assert srv.pump() == []
+    assert late.status == "dropped_stale" and not late.done
+    assert srv.metrics.rows_dropped_stale == 1
+    assert srv.metrics.rows_ingested == 2
+
+
+def test_stale_defer_policy_discounts_into_current_round():
+    """A deferred row enters the next round scaled by
+    ``stale_discount ** staleness`` — the close must equal the one-shot
+    step over exactly that discounted buffer, bitwise."""
+    plan = _plan("mean")
+    cfg = ServeConfig(n_slots=3, dim=8, cohort_size=2,
+                      stale_policy="defer", stale_discount=0.5, seed=4)
+    srv = AggregationServer(plan, cfg)
+    rng = np.random.RandomState(1)
+    r0 = rng.randn(2, 8).astype(np.float32)
+    srv.submit(0, r0[0])
+    srv.submit(1, r0[1])
+    assert len(srv.pump()) == 1  # round 0 closes
+    late = rng.randn(8).astype(np.float32)
+    t_late = srv.submit(2, late, round_id=0)  # one round stale
+    r1 = rng.randn(8).astype(np.float32)
+    srv.submit(0, r1)
+    closed = srv.pump()
+    assert len(closed) == 1 and closed[0].round_id == 1
+    assert t_late.status == "deferred" and t_late.done
+    assert srv.metrics.rows_deferred == 1
+    buf = np.zeros((3, 8), np.float32)
+    buf[2] = late * np.float32(0.5)
+    buf[0] = r1
+    mask = np.asarray([True, False, True])
+    key = jax.random.fold_in(jax.random.PRNGKey(4), 1)
+    want = plan.build()(jnp.asarray(buf), mask=jnp.asarray(mask), key=key)
+    np.testing.assert_array_equal(closed[0].aggregate, np.asarray(want))
+
+
+def test_submit_to_future_round_is_rejected():
+    srv = _server()
+    with pytest.raises(ValueError, match="not opened"):
+        srv.submit(0, np.ones(16), round_id=3)
+
+
+def test_backlog_closes_multiple_rounds_in_one_pump():
+    srv = _server(cohort_size=2, n=2)
+    for _ in range(3):
+        srv.submit(0, np.ones(16))
+        srv.submit(1, np.ones(16))
+    closed = srv.pump()
+    assert [r.round_id for r in closed] == [0, 1, 2]
+    assert srv.metrics.rounds_closed == 3
+
+
+def test_metrics_snapshot_counts_queue_depth():
+    srv = _server(cohort_size=6)
+    for i in range(3):
+        srv.submit(i, np.ones(16))
+    assert srv.metrics.max_queue_depth == 3
+    srv.pump()
+    m = srv.metrics.snapshot()
+    assert m["queue_depth"] == 0 and m["rows_ingested"] == 3
+    assert m["rounds_closed"] == 0  # underfull, no deadline
+
+
+def test_serve_config_validation():
+    ok = dict(n_slots=4, dim=8)
+    with pytest.raises(ValueError, match="n_slots"):
+        ServeConfig(n_slots=0, dim=8)
+    with pytest.raises(ValueError, match="cohort_size"):
+        ServeConfig(cohort_size=5, **ok)
+    with pytest.raises(ValueError, match="deadline"):
+        ServeConfig(deadline=-1.0, **ok)
+    with pytest.raises(ValueError, match="stale_policy"):
+        ServeConfig(stale_policy="nope", **ok)
+    with pytest.raises(ValueError, match="stale_discount"):
+        ServeConfig(stale_discount=0.0, **ok)
+    with pytest.raises(ValueError, match="chunk_size"):
+        ServeConfig(chunk_size=0, **ok)
+
+
+# ---------------------------------------------------------------------------
+# compile caches: per-plan executors and the scoring endpoint
+# ---------------------------------------------------------------------------
+
+def test_executor_cache_shares_compiled_steps_across_tenants():
+    """Two servers configured with EQUAL plans (independently
+    constructed) share one compiled executor — multi-tenant requests
+    never recompile; a different plan is a separate entry."""
+    executor_cache_clear()
+    p1 = _plan("krum", radius=2.0)
+    p2 = _plan("krum", radius=2.0)  # equal, separately constructed
+    ex1 = get_executor(p1, 8, 32, 4)
+    info = executor_cache_info()
+    assert (info["misses"], info["hits"]) == (1, 0)
+    ex2 = get_executor(p2, 8, 32, 4)
+    info = executor_cache_info()
+    assert (info["misses"], info["hits"]) == (1, 1)
+    assert ex1 is ex2
+    get_executor(_plan("cm"), 8, 32, 4)  # different plan: new entry
+    assert executor_cache_info()["misses"] == 2
+    # the jitted ingest is traced once per executor, not per round
+    builder = CohortBuilder(p2, 8, 32, chunk_size=4)
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        builder.ingest(rng.randn(4, 32), [0, 1, 2, 3])
+        builder.reset()
+    assert ex1.ingest._cache_size() == 1
+
+
+def test_scoring_step_does_not_retrace_on_default_args():
+    """The satellite-3 contract: ``make_scoring_step`` canonicalizes its
+    optional arguments BEFORE the jit boundary, so None/explicit call
+    mixes of one request shape compile exactly once."""
+    from repro.launch.serve import make_scoring_step
+
+    plan = _plan("cm", radius=5.0)
+    scoring = make_scoring_step(plan)
+    rng = np.random.RandomState(0)
+    xs = jnp.asarray(rng.randn(2, 6, 16).astype(np.float32))
+    mask = jnp.ones((2, 6), bool)
+    out0 = scoring(xs)
+    out1 = scoring(xs, batch_mask=mask)
+    out2 = scoring(xs, key=jax.random.PRNGKey(0))
+    out3 = scoring(xs, batch_mask=mask, key=jax.random.PRNGKey(0))
+    assert scoring.jitted._cache_size() == 1
+    for out in (out1, out2, out3):
+        np.testing.assert_array_equal(
+            np.asarray(out0["aggregate"]), np.asarray(out["aggregate"])
+        )
+    # a genuinely new shape is of course a new trace
+    scoring(jnp.asarray(rng.randn(3, 6, 16).astype(np.float32)))
+    assert scoring.jitted._cache_size() == 2

@@ -1,17 +1,17 @@
-"""The ServerPlan API: validation, serialization, legacy equivalence.
+"""The ServerPlan API: validation, serialization, engine equivalence.
 
 Pins the api_redesign contract:
 
   - invalid spec combos raise precise PlanError messages at construction
     (trim ratio, m_select on plain krum, pipelined x naive, cohort vs
     workers, rows vs mesh W) and superleaf-on-iterative warns;
-  - to_json/from_json round-trips every stage;
-  - the legacy string knobs (engine configs, ByzTrainConfig, the
-    "bucket_" make_aggregator prefix) keep working via translation,
-    emit DeprecationWarning, and are TRAJECTORY-BITWISE-EQUAL to the
-    plan-built path — for the whole aggregator registry on both backends
-    at the robust_aggregate level, and end-to-end for a krum and a cclip
-    engine config;
+  - to_json/from_json round-trips every stage and versions the document;
+  - the legacy string knobs (``plan_from_legacy``, the "bucket_"
+    make_aggregator prefix, config fields like ``aggregator=``/
+    ``use_clipping=``) are GONE — a plan document is the only spelling;
+  - ``robust_aggregate`` and the engine default plans are
+    TRAJECTORY-BITWISE-EQUAL to the plan-built ServerStep — for the
+    whole aggregator registry on both backends;
   - plan.estimate reuses the benchmark traffic models;
   - the CLI helpers build the same plan from flags and from --plan-json.
 """
@@ -28,11 +28,11 @@ from repro.api import (
     BucketSpec,
     ClipSpec,
     CompressSpec,
+    PLAN_VERSION,
     PlanError,
     PlanWarning,
     ScheduleSpec,
     ServerPlan,
-    plan_from_legacy,
 )
 from repro.core.aggregators import make_aggregator
 
@@ -171,6 +171,20 @@ def test_from_json_rejects_garbage():
         ServerPlan.from_json('{"aggregate": {"rule": "cm"}, "wat": 1}')
 
 
+def test_plan_json_is_versioned():
+    import json
+
+    doc = json.loads(_full_plan().to_json())
+    assert doc["version"] == PLAN_VERSION
+    # pre-versioning documents (no "version" key) parse as v1
+    del doc["version"]
+    assert ServerPlan.from_json(json.dumps(doc)) == _full_plan()
+    # unknown versions are rejected, not silently reinterpreted
+    doc["version"] = PLAN_VERSION + 1
+    with pytest.raises(PlanError, match="version"):
+        ServerPlan.from_json(json.dumps(doc))
+
+
 # ---------------------------------------------------------------------------
 # estimate
 # ---------------------------------------------------------------------------
@@ -212,54 +226,28 @@ def test_estimate_reuses_traffic_models():
 
 
 # ---------------------------------------------------------------------------
-# legacy translation + deprecation shims
+# legacy knobs are gone
 # ---------------------------------------------------------------------------
 
-def test_make_aggregator_bucket_prefix_shim_warns_and_matches():
-    rng = np.random.RandomState(3)
-    xs = jnp.asarray(rng.randn(8, 16).astype(np.float32))
-    mask = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], bool)
-    for name, kw in (("krum", {"byz_bound": 1}), ("cm", {})):
-        with pytest.warns(DeprecationWarning, match="bucket_<rule>"):
-            shim = make_aggregator(f"bucket_{name}", backend="jnp", **kw)
-        explicit = make_aggregator(name, bucket_s=2, backend="jnp", **kw)
-        np.testing.assert_array_equal(
-            np.asarray(shim(xs, mask=mask, key=KEY)),
-            np.asarray(explicit(xs, mask=mask, key=KEY)),
-        )
-        assert shim.name == explicit.name
+def test_legacy_spellings_are_removed():
+    """The deprecation window is over: ``plan_from_legacy``, the
+    ``bucket_<rule>`` make_aggregator prefix and the string-knob config
+    fields no longer exist — a ServerPlan document is the only spelling
+    (see the README migration table)."""
+    import repro.api
 
+    assert not hasattr(repro.api, "plan_from_legacy")
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        make_aggregator("bucket_cm", backend="jnp")
+    from repro.core.marina_pp import MarinaPPConfig
+    from repro.launch.train import ByzTrainConfig
 
-def test_plan_from_legacy_translation_and_warning():
-    with pytest.warns(DeprecationWarning, match="ServerPlan"):
-        plan = plan_from_legacy(
-            "bucket_tm", bucket_s=3, backend="pallas", placement="sharded",
-            blocks="pipelined", superleaf_elems=64, trim_ratio=0.2,
-            clip_alpha=2.0, compress_frac=0.1, cohort=3,
-        )
-    assert plan.aggregate.rule == "trimmed_mean"
-    assert plan.aggregate.trim_ratio == 0.2
-    assert plan.bucket == BucketSpec(s=3)
-    assert plan.clip == ClipSpec(alpha=2.0)
-    assert plan.compress == CompressSpec(kind="rand_fraction", frac=0.1)
-    assert plan.schedule.placement == "sharded"
-    assert plan.schedule.blocks == "pipelined"
-    assert plan.schedule.backend == "pallas"
-    assert plan.cohort == 3
-    # use_clipping=False drops the clip stage
-    plan = plan_from_legacy("cm", clip_alpha=2.0, use_clipping=False,
-                            warn=False)
-    assert plan.clip is None
-
-
-def test_plan_from_legacy_naive_pipelined_stays_a_noop():
-    """The legacy knobs documented naive+pipelined as a no-op (no
-    collectives to overlap); translation must preserve that instead of
-    tripping the plan's construction-time cross-check."""
-    plan = plan_from_legacy("cm", placement="naive", blocks="pipelined",
-                            warn=False)
-    assert plan.schedule.placement == "naive"
-    assert plan.schedule.blocks == "sequential"
+    with pytest.raises(TypeError):
+        MarinaPPConfig(gamma=0.5, p=0.2, C=4, C_hat=20, aggregator="cm")
+    with pytest.raises(TypeError):
+        MarinaPPConfig(gamma=0.5, p=0.2, C=4, C_hat=20, use_clipping=False)
+    with pytest.raises(TypeError):
+        ByzTrainConfig(agg_schedule="naive")
 
 
 def test_heuristic_static_clip_radius_applies_from_step_zero():
@@ -290,12 +278,13 @@ def test_heuristic_static_clip_radius_applies_from_step_zero():
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
-def test_legacy_config_vs_plan_registry_trajectory_bitwise(backend):
-    """Acceptance gate: for EVERY registry rule the legacy ByzTrainConfig
-    string-knob path and the plan-built ServerStep produce bitwise-equal
-    multi-step g += Agg(msgs(g)) trajectories (the naive placement runs
-    in-process; the sharded/pipelined placements are covered by the
-    8-device subprocess tests, which route through the same plan)."""
+def test_robust_aggregate_vs_plan_registry_trajectory_bitwise(backend):
+    """Acceptance gate: for EVERY registry rule (bucketed and not) the
+    ``robust_aggregate`` functional entry point and the plan-built
+    ServerStep produce bitwise-equal multi-step g += Agg(msgs(g))
+    trajectories (the naive placement runs in-process; the
+    sharded/pipelined placements are covered by the 8-device subprocess
+    tests, which route through the same plan)."""
     from repro.launch.mesh import make_debug_mesh, set_mesh
     from repro.launch.train import ByzTrainConfig, resolve_plan, robust_aggregate
 
@@ -309,11 +298,16 @@ def test_legacy_config_vs_plan_registry_trajectory_bitwise(backend):
     radius = jnp.float32(2.0)
 
     with set_mesh(mesh):
-        for name in ("cm", "tm", "mean", "cclip", "rfa", "krum",
-                     "multi_krum", "bucket_cm", "bucket_krum",
-                     "bucket_rfa"):
-            cfg = ByzTrainConfig(aggregator=name, agg_schedule="naive",
-                                 backend=backend, n_byz=1)
+        for name, bucket_s in (("cm", 0), ("tm", 0), ("mean", 0),
+                               ("cclip", 0), ("rfa", 0), ("krum", 0),
+                               ("multi_krum", 0), ("cm", 2), ("krum", 2),
+                               ("rfa", 2)):
+            plan = ServerPlan(
+                aggregate=AggregatorSpec(name, byz_bound=1),
+                bucket=BucketSpec(s=bucket_s) if bucket_s else None,
+                schedule=ScheduleSpec(placement="naive", backend=backend),
+            )
+            cfg = ByzTrainConfig.from_plan(plan, n_byz=1)
             step = resolve_plan(cfg).build(mesh)
 
             g_legacy = jax.tree_util.tree_map(
@@ -345,20 +339,10 @@ def test_legacy_config_vs_plan_registry_trajectory_bitwise(backend):
                 )
 
 
-@pytest.mark.parametrize(
-    "aggregator,explicit_specs",
-    [
-        ("krum", dict(aggregate=AggregatorSpec("krum"),
-                      clip=ClipSpec(alpha=2.0), bucket=BucketSpec(2))),
-        ("centered_clip", dict(aggregate=AggregatorSpec("centered_clip"),
-                               clip=ClipSpec(alpha=2.0),
-                               bucket=BucketSpec(2))),
-    ],
-)
-def test_engine_legacy_vs_plan_trajectory_bitwise(aggregator, explicit_specs):
-    """Satellite gate: a legacy string-knob MarinaPPConfig and the same
-    engine driven by an explicitly composed ServerPlan produce
-    bitwise-equal loss trajectories (krum and cclip configs)."""
+def test_engine_default_plan_vs_explicit_trajectory_bitwise():
+    """``MarinaPPConfig(plan=None)`` resolves to the paper's documented
+    default composition — CM over Bucketing(2), clip at alpha=1.0 — and
+    produces a loss trajectory bitwise-equal to spelling that plan out."""
     from repro.core.marina_pp import ByzVRMarinaPP, MarinaPPConfig
     from repro.core.problems import logistic_problem
 
@@ -372,40 +356,35 @@ def test_engine_legacy_vs_plan_trajectory_bitwise(aggregator, explicit_specs):
         _, metrics = jax.jit(lambda s: alg.run(12, s))(alg.init())
         return np.asarray(metrics["loss"])
 
-    with pytest.warns(DeprecationWarning):
-        legacy = trace(MarinaPPConfig(
-            gamma=0.05, p=0.25, C=4, C_hat=12, batch=16, clip_alpha=2.0,
-            use_clipping=True, aggregator=aggregator, bucket_s=2,
-            attack="shb", backend="jnp",
-        ))
-    plan = ServerPlan(schedule=ScheduleSpec(backend="jnp"),
-                      **explicit_specs)
-    modern = trace(MarinaPPConfig(
+    implicit = trace(MarinaPPConfig(
+        gamma=0.05, p=0.25, C=4, C_hat=12, batch=16, attack="shb",
+    ))
+    plan = ServerPlan(aggregate=AggregatorSpec("cm"),
+                      clip=ClipSpec(alpha=1.0), bucket=BucketSpec(2))
+    explicit = trace(MarinaPPConfig(
         gamma=0.05, p=0.25, C=4, C_hat=12, batch=16, attack="shb",
         plan=plan,
     ))
-    np.testing.assert_array_equal(legacy, modern)
-    assert np.isfinite(modern).all()
+    np.testing.assert_array_equal(implicit, explicit)
+    assert np.isfinite(explicit).all()
 
 
-def test_byz_train_config_from_plan_mirrors_legacy_fields():
+def test_byz_train_config_from_plan_is_the_source_of_truth():
     from repro.launch.train import ByzTrainConfig, resolve_plan
 
     plan = _full_plan()
     cfg = ByzTrainConfig.from_plan(plan, gamma=0.5, n_byz=2, attack="gauss")
     assert cfg.plan is plan
-    assert resolve_plan(cfg) is plan  # no translation, no warning
-    assert cfg.aggregator == "bucket_multi_krum"
-    assert cfg.agg_schedule == "sharded"
-    assert cfg.schedule == "pipelined"
-    assert cfg.superleaf_elems == 4096
-    assert cfg.backend == "pallas"
-    assert cfg.bucket_s == 3
-    assert cfg.use_clipping is True
-    assert cfg.clip_alpha == 2.0
-    assert cfg.C == 4
-    assert cfg.compress_frac == 0.25
+    assert resolve_plan(cfg) is plan  # no translation, no mirror fields
     assert cfg.gamma == 0.5 and cfg.n_byz == 2 and cfg.attack == "gauss"
+    # the default composition is documented: sharded CM with byz_bound
+    # from n_byz and the cohort from C
+    default = resolve_plan(ByzTrainConfig(n_byz=3, C=5))
+    assert default.aggregate.rule == "cm"
+    assert default.aggregate.byz_bound == 3
+    assert default.schedule.placement == "sharded"
+    assert default.clip == ClipSpec(alpha=2.0)
+    assert default.cohort == 5
 
 
 # ---------------------------------------------------------------------------
@@ -421,8 +400,8 @@ def _parse(argv):
 
 
 def test_cli_flags_build_plan():
-    plan = _parse(["--aggregator", "bucket_krum", "--agg-schedule",
-                   "sharded", "--schedule", "pipelined",
+    plan = _parse(["--aggregator", "krum", "--bucket-s", "2",
+                   "--agg-schedule", "sharded", "--schedule", "pipelined",
                    "--superleaf-elems", "64", "--backend", "pallas"])
     assert plan.aggregate.rule == "krum"
     assert plan.aggregate.byz_bound == 1

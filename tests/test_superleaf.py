@@ -20,9 +20,28 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import (
+    AggregatorSpec,
+    BucketSpec,
+    PlanError,
+    ScheduleSpec,
+    ServerPlan,
+)
 from repro.core.tree_utils import tree_superleaf_pack
 from repro.launch.mesh import make_debug_mesh, set_mesh
 from repro.launch.train import ByzTrainConfig, robust_aggregate
+
+
+def _cfg(rule, *, bucket_s=0, placement="naive", blocks="sequential",
+         superleaf_elems=0, backend="auto", n_byz=0):
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=n_byz),
+        bucket=BucketSpec(s=bucket_s) if bucket_s else None,
+        schedule=ScheduleSpec(placement=placement, blocks=blocks,
+                              superleaf_elems=superleaf_elems,
+                              backend=backend),
+    )
+    return ByzTrainConfig.from_plan(plan, n_byz=n_byz)
 
 # ragged on purpose: odd widths, a stacked 0-d scalar, a dtype mix
 N = 6
@@ -113,8 +132,8 @@ def test_pack_validation_errors():
 # packed aggregation == per-leaf aggregation (naive path, both backends)
 # ---------------------------------------------------------------------------
 
-_EXACT_RULES = ("cm", "tm", "mean", "krum", "multi_krum", "bucket_cm",
-                "bucket_krum")
+_EXACT_RULES = (("cm", 0), ("tm", 0), ("mean", 0), ("krum", 0),
+                ("multi_krum", 0), ("cm", 2), ("krum", 2))
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
@@ -130,14 +149,12 @@ def test_packed_naive_aggregate_bitwise_equals_per_leaf(backend):
     key = jax.random.PRNGKey(3)
     mesh = make_debug_mesh(1, 1)
     with set_mesh(mesh):
-        for name in _EXACT_RULES:
+        for name, bucket_s in _EXACT_RULES:
             for radius in (jnp.float32(2.0), None):
                 outs = {}
                 for chunk in (0, 13, 64):
-                    cfg = ByzTrainConfig(
-                        aggregator=name, agg_schedule="naive",
-                        backend=backend, n_byz=1, superleaf_elems=chunk,
-                    )
+                    cfg = _cfg(name, bucket_s=bucket_s, backend=backend,
+                               n_byz=1, superleaf_elems=chunk)
                     outs[chunk] = robust_aggregate(
                         tree, mask, key, mesh=mesh, cfg=cfg, radius=radius
                     )
@@ -149,7 +166,7 @@ def test_packed_naive_aggregate_bitwise_equals_per_leaf(backend):
                         assert la.dtype == lb.dtype
                         np.testing.assert_array_equal(
                             np.asarray(la), np.asarray(lb),
-                            err_msg=f"{name} chunk={chunk} "
+                            err_msg=f"{name} s={bucket_s} chunk={chunk} "
                                     f"clip={radius is not None}",
                         )
 
@@ -164,7 +181,7 @@ def test_packed_naive_aggregate_bitwise_equals_per_leaf(backend):
 # one rule per structural class (coordinate-wise / iterative / one-hot
 # selection / bucketed multi-row selection); the whole registry runs in
 # the slow 8-device subprocess test
-_ALL_RULES = ("cm", "cclip", "krum", "bucket_krum")
+_ALL_RULES = (("cm", 0), ("cclip", 0), ("krum", 0), ("krum", 2))
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
@@ -177,15 +194,13 @@ def test_pipelined_schedule_bitwise_equals_sequential_inprocess(backend):
     key = jax.random.PRNGKey(3)
     mesh = make_debug_mesh(1, 1)
     with set_mesh(mesh):
-        for name in _ALL_RULES:
+        for name, bucket_s in _ALL_RULES:
             for chunk in (0, 16):
                 outs = {}
                 for sched in ("sequential", "pipelined"):
-                    cfg = ByzTrainConfig(
-                        aggregator=name, agg_schedule="sharded",
-                        schedule=sched, superleaf_elems=chunk,
-                        backend=backend, n_byz=0,
-                    )
+                    cfg = _cfg(name, bucket_s=bucket_s,
+                               placement="sharded", blocks=sched,
+                               superleaf_elems=chunk, backend=backend)
                     outs[sched] = jax.jit(
                         lambda t, m, k, cfg=cfg: robust_aggregate(
                             t, m, k, mesh=mesh, cfg=cfg,
@@ -199,27 +214,23 @@ def test_pipelined_schedule_bitwise_equals_sequential_inprocess(backend):
                     np.testing.assert_array_equal(
                         np.asarray(la.astype(jnp.float32)),
                         np.asarray(lb.astype(jnp.float32)),
-                        err_msg=f"{name} chunk={chunk}",
+                        err_msg=f"{name} s={bucket_s} chunk={chunk}",
                     )
 
 
 def test_schedule_and_shape_validation():
     mesh = make_debug_mesh(1, 1)
     tree = {"a": jnp.ones((2, 4))}
-    with pytest.raises(ValueError):
-        robust_aggregate(
-            tree, jnp.ones(2, bool), jax.random.PRNGKey(0), mesh=mesh,
-            cfg=ByzTrainConfig(schedule="nope"),
-        )
-    with pytest.raises(ValueError):
-        robust_aggregate(
-            tree, jnp.ones(2, bool), jax.random.PRNGKey(0), mesh=mesh,
-            cfg=ByzTrainConfig(superleaf_elems=-1),
-        )
+    # malformed schedules fail at SPEC construction (PlanError is a
+    # ValueError), before any aggregation runs
+    with pytest.raises(PlanError, match="unknown schedule"):
+        ScheduleSpec(blocks="nope")
+    with pytest.raises(PlanError, match="superleaf_elems"):
+        ScheduleSpec(superleaf_elems=-1)
     with pytest.raises(ValueError, match="one row per worker"):
         # 2 rows on a 1-worker mesh: the sharded scatter would silently
         # drop a worker
         robust_aggregate(
             tree, jnp.ones(2, bool), jax.random.PRNGKey(0), mesh=mesh,
-            cfg=ByzTrainConfig(agg_schedule="sharded"),
+            cfg=_cfg("cm", placement="sharded"),
         )
