@@ -32,7 +32,13 @@ import time
 import numpy as np
 
 from repro.api import AggregatorSpec, ClipSpec, ScheduleSpec, ServerPlan
-from repro.serve import AggregationServer, ServeConfig
+from repro.serve import (
+    AggregationServer,
+    FaultInjector,
+    FaultPlan,
+    ServeConfig,
+    canonical_fault_plan,
+)
 
 ARRIVALS = ("steady", "burst", "poisson")
 
@@ -62,17 +68,42 @@ def _batch_sizes(arrival: str, cohort: int, rng) -> "list[int]":
 def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
              arrival: str = "steady", byz_frac: float = 0.0,
              stale_policy: str = "drop", cohort_size: int | None = None,
-             seed: int = 0, warmup_rounds: int = 1) -> dict:
+             seed: int = 0, warmup_rounds: int = 1,
+             fault_plan: "FaultPlan | None" = None,
+             deadline: float | None = None) -> dict:
     """Drive one server through ``rounds`` measured rounds; returns the
-    metrics dict (throughput, latency percentiles, server counters)."""
+    metrics dict (throughput, latency percentiles, server counters).
+
+    ``fault_plan`` routes the whole stream through a
+    :class:`repro.serve.FaultInjector` (the chaos row); pass a
+    ``deadline`` with it so rounds starved by dropout still close.
+    Every closed round's aggregate is asserted finite — the no-NaN-out
+    contract is part of what the benchmark certifies."""
     if arrival not in ARRIVALS:
         raise ValueError(f"unknown arrival {arrival!r}; have {ARRIVALS}")
     cfg = ServeConfig(n_slots=n_slots, dim=dim, cohort_size=cohort_size,
-                      stale_policy=stale_policy, seed=seed)
+                      stale_policy=stale_policy, seed=seed,
+                      deadline=deadline)
     server = AggregationServer(plan, cfg)
+    front = server if fault_plan is None or not fault_plan.active \
+        else FaultInjector(fault_plan, server)
     cohort = cfg.resolved_cohort_size
     rng = np.random.RandomState(seed)
     n_byz = int(round(byz_frac * n_slots))
+    degraded = 0
+
+    def submit(slot, row):
+        t = front.submit(slot, row)
+        return t if isinstance(t, list) else [t]
+
+    def pump():
+        nonlocal degraded
+        for r in front.pump():
+            assert np.all(np.isfinite(np.asarray(r.aggregate))), (
+                f"round {r.round_id} emitted a non-finite aggregate "
+                f"(close_reason={r.close_reason})"
+            )
+            degraded += r.degraded
 
     def drive(n_rounds, collect):
         tickets = []
@@ -84,8 +115,8 @@ def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
                     row = rng.randn(dim).astype(np.float32)
                     if slot >= n_slots - n_byz:
                         row *= 100.0
-                    tickets.append(server.submit(slot, row))
-                server.pump()
+                    tickets.extend(submit(slot, row))
+                pump()
                 if server.metrics.rounds_closed - closed_before >= n_rounds:
                     break
         if not collect:
@@ -107,6 +138,7 @@ def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
         "p99_ms": float(np.percentile(lat_ms, 99)),
         "rows": n_rows,
         "rounds": server.metrics.rounds_closed - closed_before,
+        "rounds_degraded": degraded,
         "elapsed_s": elapsed,
         "metrics": server.metrics.snapshot(),
     }
@@ -115,31 +147,45 @@ def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
 # the committed-baseline sweep: one coordinate-wise rule (one-shot close)
 # and the selection rule both ways the wire can batch it (the incremental
 # Gram path is per-chunk work, so the arrival pattern is the axis that
-# matters)
+# matters), plus the canonical chaos scenario (dropout + malformed rows +
+# duplicates on the wire — the fault-injection overhead and the
+# no-NaN-out contract, gated like any other row)
 _SWEEP = (
-    ("cm", None, "steady"),
-    ("krum", 5.0, "steady"),
-    ("krum", 5.0, "burst"),
+    ("cm", None, "steady", False),
+    ("krum", 5.0, "steady", False),
+    ("krum", 5.0, "burst", False),
+    ("krum", 5.0, "steady", True),
 )
 
 
-def collect_rows(quick: bool = False) -> "list[dict]":
+def collect_rows(quick: bool = False,
+                 fault_plan: "FaultPlan | None" = None) -> "list[dict]":
+    """The committed sweep.  ``fault_plan`` overrides the canonical plan
+    of the chaos row (``--fault-json`` with ``--smoke``)."""
     n, d = 16, (256 if quick else 2048)
     rounds = 4 if quick else 8
     out = []
-    for rule, radius, arrival in _SWEEP:
+    for rule, radius, arrival, chaos in _SWEEP:
+        faults = (fault_plan or canonical_fault_plan()) if chaos else None
         r = run_load(
             _serve_plan(rule, radius), n_slots=n, dim=d, rounds=rounds,
             arrival=arrival, byz_frac=0.25, cohort_size=n - 4,
+            fault_plan=faults,
+            # dropout can starve a round below the fill trigger; the
+            # deadline backstop keeps the chaos row closing rounds
+            deadline=0.05 if chaos else None,
         )
         out.append({
-            "name": f"serve_{rule}_{arrival}",
+            "name": f"serve_{rule}_chaos" if chaos
+            else f"serve_{rule}_{arrival}",
             "requests_per_sec": round(r["requests_per_sec"], 1),
             "p50_ms": round(r["p50_ms"], 3),
             "p99_ms": round(r["p99_ms"], 3),
             "derived": (
                 f"n={n};d={d};rounds={r['rounds']};byz=0.25;"
                 f"clip={radius is not None}"
+                + (f";chaos=1;degraded={r['rounds_degraded']}" if chaos
+                   else "")
             ),
         })
     return out
@@ -192,12 +238,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="",
                     help="merge the sweep rows into this bench payload")
+    from repro.launch.cli import add_fault_args, fault_plan_from_args
+
+    add_fault_args(ap)
     args = ap.parse_args()
+    fault_plan = fault_plan_from_args(args)
 
     print("name,us_per_call,derived")
     if args.smoke or args.quick:
-        rows = collect_rows(quick=True)
+        rows = collect_rows(quick=True, fault_plan=fault_plan)
     else:
+        chaos = fault_plan is not None and fault_plan.active
         r = run_load(
             _serve_plan(args.aggregator,
                         args.clip_radius if args.clip_radius > 0 else None),
@@ -205,16 +256,20 @@ def main() -> None:
             arrival=args.arrival, byz_frac=args.byz_frac,
             stale_policy=args.stale_policy,
             cohort_size=args.cohort_size or max(1, args.clients - 4),
-            seed=args.seed,
+            seed=args.seed, fault_plan=fault_plan,
+            deadline=0.05 if chaos else None,
         )
         rows = [{
-            "name": f"serve_{args.aggregator}_{args.arrival}",
+            "name": f"serve_{args.aggregator}_chaos" if chaos
+            else f"serve_{args.aggregator}_{args.arrival}",
             "requests_per_sec": round(r["requests_per_sec"], 1),
             "p50_ms": round(r["p50_ms"], 3),
             "p99_ms": round(r["p99_ms"], 3),
             "derived": (
                 f"n={args.clients};d={args.dim};rounds={r['rounds']};"
                 f"byz={args.byz_frac};clip={args.clip_radius > 0}"
+                + (f";chaos=1;degraded={r['rounds_degraded']}" if chaos
+                   else "")
             ),
         }]
     for row in rows:

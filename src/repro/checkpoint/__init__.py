@@ -1,2 +1,2 @@
 """Checkpointing substrate."""
-from .checkpoint import latest_step, restore, save  # noqa: F401
+from .checkpoint import latest_step, restore, save, verify_step  # noqa: F401

@@ -4,6 +4,15 @@ Layout:  <dir>/step_<k>.npz   with flattened path-keyed arrays plus a json
 treedef manifest.  Restore requires a template pytree (the usual JAX
 pattern) so dtypes/structures round-trip exactly — including bf16, which is
 stored as uint16 bit patterns (npz has no bfloat16).
+
+Crash safety: both files of a step land via temp-file + ``os.replace``
+(fsynced), and the ``.npz`` is the PUBLICATION point — the json manifest
+is replaced first, so the moment ``step_<k>.npz`` exists the step is
+complete.  A process killed mid-``save`` therefore leaves either the
+previous complete checkpoint or the new complete one, never a torn mix;
+``latest_step`` additionally verifies candidates (newest first) and skips
+any truncated/unreadable step so a crashed writer can never poison the
+reader's resume point.
 """
 from __future__ import annotations
 
@@ -16,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "verify_step"]
 
 _SEP = "%%"
 
@@ -30,6 +39,18 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _replace_atomic(tmp_path: str, final_path: str, write_fn) -> None:
+    """Write via ``write_fn(file_object)`` to ``tmp_path``, fsync, then
+    ``os.replace`` into place — the only publication primitive used here,
+    so a SIGKILL at any instruction leaves ``final_path`` either absent or
+    complete, never truncated."""
+    with open(tmp_path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_path, final_path)
+
+
 def save(ckpt_dir: str, step: int, tree: Any) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten_with_paths(tree)
@@ -41,12 +62,35 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
             arr = arr.view(np.uint16)
         arrays[k] = arr
     path = os.path.join(ckpt_dir, f"step_{step}.npz")
-    tmp = path + ".tmp.npz"
-    np.savez(tmp, **arrays)
-    os.replace(tmp, path)
-    with open(os.path.join(ckpt_dir, f"step_{step}.json"), "w") as f:
-        json.dump(meta, f)
+    meta_path = os.path.join(ckpt_dir, f"step_{step}.json")
+    # manifest first, npz last: the npz is the publication marker
+    # (latest_step keys on it), so once it is visible the whole step is
+    _replace_atomic(
+        meta_path + ".tmp", meta_path,
+        lambda f: f.write(json.dumps(meta).encode()),
+    )
+    _replace_atomic(
+        path + ".tmp.npz", path, lambda f: np.savez(f, **arrays)
+    )
     return path
+
+
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True iff step ``step`` is complete and readable (manifest parses,
+    npz archive opens).  A writer killed mid-``np.savez`` used to leave a
+    truncated ``step_<k>.npz`` for ``latest_step``/``restore`` to trip
+    over; ``save`` now publishes atomically, and this check additionally
+    protects readers from archives damaged after the fact."""
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    meta_path = os.path.join(ckpt_dir, f"step_{step}.json")
+    try:
+        with open(meta_path) as f:
+            json.load(f)
+        with np.load(path) as data:
+            data.files  # forces the zip central directory read
+        return True
+    except Exception:  # noqa: BLE001 — any unreadability means incomplete
+        return False
 
 
 def restore(ckpt_dir: str, step: int, template: Any) -> Any:
@@ -60,7 +104,14 @@ def restore(ckpt_dir: str, step: int, template: Any) -> Any:
         arr = data[k]
         if meta.get(k) == "bfloat16":
             arr = arr.view(jnp.bfloat16)
-        out[k] = jnp.asarray(arr).astype(tmpl.dtype).reshape(tmpl.shape)
+        if isinstance(tmpl, (np.ndarray, np.generic)):
+            # numpy template leaves stay numpy: jnp would silently
+            # narrow int64/float64 when x64 is off, which breaks
+            # bit-exact host state (e.g. RNG snapshots in serve resume)
+            out[k] = np.asarray(arr).astype(tmpl.dtype).reshape(
+                np.shape(tmpl))
+        else:
+            out[k] = jnp.asarray(arr).astype(tmpl.dtype).reshape(tmpl.shape)
     # rebuild in template order
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = [out[_SEP.join(str(p) for p in path)] for path, _ in flat]
@@ -69,12 +120,23 @@ def restore(ckpt_dir: str, step: int, template: Any) -> Any:
     )
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str, *, verify: bool = True) -> Optional[int]:
+    """Newest complete step in ``ckpt_dir`` (None when empty).
+
+    With ``verify`` (the default) candidates are checked newest-first and
+    damaged/truncated ones are skipped, so resume always lands on a
+    checkpoint that will actually restore."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [
-        int(m.group(1))
-        for f in os.listdir(ckpt_dir)
-        if (m := re.fullmatch(r"step_(\d+)\.npz", f))
-    ]
-    return max(steps) if steps else None
+    steps = sorted(
+        (
+            int(m.group(1))
+            for f in os.listdir(ckpt_dir)
+            if (m := re.fullmatch(r"step_(\d+)\.npz", f))
+        ),
+        reverse=True,
+    )
+    for step in steps:
+        if not verify or verify_step(ckpt_dir, step):
+            return step
+    return None

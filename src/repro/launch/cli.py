@@ -29,7 +29,8 @@ from repro.api import (
     ServerPlan,
 )
 
-__all__ = ["add_plan_args", "plan_from_args"]
+__all__ = ["add_fault_args", "add_plan_args", "fault_plan_from_args",
+           "plan_from_args"]
 
 
 def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
@@ -70,6 +71,35 @@ def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
                    help="inline ServerPlan JSON or a path to one; "
                         "overrides the individual plan flags")
     return g
+
+
+def add_fault_args(ap):
+    """Register the fault-injection flag(s) shared by the serve loop and
+    the load-generator benchmark: ``--fault-json`` names a
+    ``repro.serve.faults.FaultPlan`` document (inline or a path), the
+    replayable-chaos analogue of ``--plan-json``."""
+    g = ap.add_argument_group(
+        "fault injection",
+        "deterministic chaos: a seeded, replayable "
+        "repro.serve.faults.FaultPlan wraps the server "
+        "(dropout/delay/duplicates/malformed rows/clock skew/executor "
+        "crashes)",
+    )
+    g.add_argument("--fault-json", default="",
+                   help="inline FaultPlan JSON or a path to one; empty "
+                        "disables fault injection")
+    return g
+
+
+def fault_plan_from_args(args):
+    """The FaultPlan an ``add_fault_args`` parser describes (None when
+    fault injection is disabled)."""
+    doc = getattr(args, "fault_json", "")
+    if not doc:
+        return None
+    from repro.serve.faults import load_fault_plan
+
+    return load_fault_plan(doc)
 
 
 def plan_from_args(args, *, byz_bound: Optional[int] = None,

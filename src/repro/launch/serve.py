@@ -253,12 +253,54 @@ def _main_score(args):
     print(f"[serve] outliers flagged per request: {flagged.tolist()}")
 
 
-def _main_stream(args):
+def _rng_state_tree(rng):
+    """numpy MT19937 state as a checkpointable pytree of arrays."""
     import numpy as np
 
-    from repro.serve import AggregationServer, ServeConfig
+    name, keys, pos, has_gauss, cached = rng.get_state()
+    assert name == "MT19937"
+    return {
+        "keys": np.asarray(keys, np.uint32),
+        "pos": np.int64(pos),
+        "has_gauss": np.int64(has_gauss),
+        "cached_gaussian": np.float64(cached),
+    }
 
-    from .cli import plan_from_args
+
+def _set_rng_state(rng, tree):
+    import numpy as np
+
+    rng.set_state((
+        "MT19937",
+        np.asarray(tree["keys"], np.uint32),
+        int(np.asarray(tree["pos"])),
+        int(np.asarray(tree["has_gauss"])),
+        float(np.asarray(tree["cached_gaussian"])),
+    ))
+
+
+def _main_stream(args):
+    """The stream-mode server loop: synthetic open-loop byzantine
+    clients, optional fault injection (``--fault-json``), per-round
+    result emission (``--emit-rounds``), and crash-safe
+    checkpoint/resume (``--ckpt-dir`` / ``--resume``).
+
+    Determinism contract: the client stream is a seeded RNG advanced one
+    row per submission, and every checkpoint stores (server state, RNG
+    state, submission cursor) at a pump boundary — so a run SIGKILLed at
+    any instant and restarted with ``--resume`` replays the lost
+    submissions exactly and closes every round with an aggregate
+    bitwise-identical to the uninterrupted run's."""
+    import json as _json
+    import os
+    import time
+
+    import numpy as np
+
+    from repro.serve import AggregationServer, FaultInjector, ServeConfig
+    from repro.serve import recovery
+
+    from .cli import fault_plan_from_args, plan_from_args
 
     plan = plan_from_args(
         args, byz_bound=args.n_byz,
@@ -271,33 +313,97 @@ def _main_stream(args):
         deadline=args.deadline_ms / 1e3 if args.deadline_ms > 0 else None,
         stale_policy=args.stale_policy,
         stale_discount=args.stale_discount,
+        duplicate_policy=args.duplicate_policy,
+        min_fill=args.min_fill,
+        seed=args.seed,
     )
     server = AggregationServer(plan, cfg)
-    rng = np.random.RandomState(0)
-    closed = 0
-    while closed < args.rounds:
-        # synthetic open-loop clients: every slot submits each round,
-        # the trailing n_byz of them with 100x payloads
-        for slot in range(n):
-            row = rng.randn(d).astype(np.float32)
-            if slot >= n - args.n_byz:
-                row *= 100.0
-            server.submit(slot, row)
-            closed += len(server.pump())
-            if closed >= args.rounds:
-                break
+    fault_plan = fault_plan_from_args(args)
+    front = server
+    if fault_plan is not None and fault_plan.active:
+        front = FaultInjector(fault_plan, server)
+        print(f"[serve] fault injection ON: {fault_plan.to_json()}")
+
+    rng = np.random.RandomState(args.seed)
+    cursor = 0  # total synthetic submissions so far (slot = cursor % n)
+    extra_template = {"rng": _rng_state_tree(rng), "cursor": np.int64(0)}
+    if args.ckpt_dir and args.resume:
+        restored = recovery.restore_server(
+            server, args.ckpt_dir, extra_template=extra_template
+        )
+        if restored is not None:
+            step, extra = restored
+            _set_rng_state(rng, extra["rng"])
+            cursor = int(np.asarray(extra["cursor"]))
+            print(f"[serve] resumed from checkpoint step {step} "
+                  f"(round {server.round_id}, cursor {cursor})")
+        else:
+            print(f"[serve] --resume but no usable checkpoint in "
+                  f"{args.ckpt_dir!r}; starting fresh")
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = recovery.ServerCheckpointer(
+            server, args.ckpt_dir, every=args.ckpt_every
+        )
+
+    emit = None
+    if args.emit_rounds:
+        emit = open(args.emit_rounds, "a")
+
+    def emit_round(r):
+        if emit is None:
+            return
+        emit.write(_json.dumps({
+            "round_id": r.round_id,
+            "close_reason": r.close_reason,
+            "cohort_fill": r.cohort_fill,
+            "degraded": r.degraded,
+            "fallback_reason": r.fallback_reason,
+            # bitwise-exact wire form for the kill-and-resume equality
+            # check (float formatting would round)
+            "aggregate_hex": np.asarray(r.aggregate, np.float32)
+            .tobytes().hex(),
+        }) + "\n")
+        emit.flush()
+        os.fsync(emit.fileno())
+
+    while server.metrics.rounds_closed < args.rounds:
+        # synthetic open-loop clients: slots submit round-robin, the
+        # trailing n_byz of them with 100x payloads
+        slot = cursor % n
+        row = rng.randn(d).astype(np.float32)
+        if slot >= n - args.n_byz:
+            row *= 100.0
+        front.submit(slot, row)
+        cursor += 1
+        closed = front.pump()
+        for r in closed:
+            emit_round(r)
+        if ckpt is not None and closed:
+            ckpt.observe(len(closed), extra={
+                "rng": _rng_state_tree(rng), "cursor": np.int64(cursor),
+            })
+        if args.pump_sleep_ms > 0:
+            time.sleep(args.pump_sleep_ms / 1e3)
+    if emit is not None:
+        emit.close()
+
     m = server.metrics.snapshot()
     print(f"[serve] streamed {m['rows_ingested']} rows -> "
-          f"{m['rounds_closed']} rounds (rule={plan.aggregate.rule}, "
+          f"{m['rounds_closed']} rounds "
+          f"({m['rounds_degraded']} degraded, rule={plan.aggregate.rule}, "
           f"cohort_size={cfg.resolved_cohort_size}/{n})")
     for k, v in sorted(m.items()):
         print(f"[serve]   {k} = {v}")
+    if isinstance(front, FaultInjector):
+        for k, v in sorted(front.stats.snapshot().items()):
+            print(f"[serve]   fault.{k} = {v}")
 
 
 def main():
     import argparse
 
-    from .cli import add_plan_args
+    from .cli import add_fault_args, add_plan_args
 
     ap = argparse.ArgumentParser(description="serving driver")
     ap.add_argument("--mode", default="decode",
@@ -330,7 +436,35 @@ def main():
     ap.add_argument("--stale-discount", type=float, default=0.5,
                     help="stream mode: defer policy weight per round of "
                          "staleness")
+    ap.add_argument("--duplicate-policy", default="last_wins",
+                    choices=["first_wins", "last_wins", "reject"],
+                    help="stream mode: resolution when a slot resubmits "
+                         "into the same round")
+    ap.add_argument("--min-fill", type=int, default=1,
+                    help="stream mode: deadline closes below this fill "
+                         "use the clipping-only fallback aggregate "
+                         "(degraded round)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="stream mode: seed of the synthetic client "
+                         "stream and of the server's aggregator key")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="stream mode: directory for crash-safe server "
+                         "snapshots (empty: no checkpointing)")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="stream mode: snapshot once per this many "
+                         "closed rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="stream mode: resume from the newest complete "
+                         "checkpoint in --ckpt-dir (fresh start if none)")
+    ap.add_argument("--emit-rounds", default="",
+                    help="stream mode: append one JSON line per closed "
+                         "round (bitwise aggregate hex) to this file")
+    ap.add_argument("--pump-sleep-ms", type=float, default=0.0,
+                    help="stream mode: sleep after each pump (testing "
+                         "knob: widens the kill window for the "
+                         "kill-and-resume test)")
     add_plan_args(ap, placement="naive")
+    add_fault_args(ap)
     args = ap.parse_args()
     if args.mode == "score":
         _main_score(args)

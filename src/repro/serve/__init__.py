@@ -6,10 +6,19 @@ service on top of :class:`repro.api.ServerPlan`.
   selection rules, the per-plan compiled-executor cache);
 - :mod:`repro.serve.server` — the request-queue -> plan-executor ->
   response-fan-out loop with cohort-size/deadline round triggers, the
-  stale-row policy and per-round observability counters.
+  stale-row policy, graceful degradation (ingest-time row validation,
+  per-slot quarantine with bounded backoff, duplicate-row policies, the
+  clipping-only underfull/fault fallback close) and per-round
+  observability counters;
+- :mod:`repro.serve.faults` — the deterministic, JSON-replayable
+  fault-injection harness (:class:`FaultPlan` / :class:`FaultInjector`);
+- :mod:`repro.serve.recovery` — crash-safe checkpoint/resume of the full
+  mid-stream server state through ``repro.checkpoint``.
 
-The CLI entry point is ``python -m repro.launch.serve --mode stream``;
-the load-generator benchmark lives in ``benchmarks/bench_serve.py``.
+The CLI entry point is ``python -m repro.launch.serve --mode stream``
+(``--fault-json`` injects a fault plan, ``--ckpt-dir``/``--resume``
+survive a SIGKILL); the load-generator benchmark lives in
+``benchmarks/bench_serve.py``.
 """
 from .cohort import (
     CohortBuilder,
@@ -19,9 +28,23 @@ from .cohort import (
     get_executor,
     validate_serve_plan,
 )
+from .faults import (
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    canonical_fault_plan,
+    load_fault_plan,
+)
+from .recovery import (
+    ServerCheckpointer,
+    restore_server,
+    save_server,
+    server_state,
+)
 from .server import (
     AggregationServer,
     RoundResult,
+    RowError,
     ServeConfig,
     ServeMetrics,
     Ticket,
@@ -30,13 +53,23 @@ from .server import (
 __all__ = [
     "AggregationServer",
     "CohortBuilder",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFault",
     "PlanExecutor",
     "RoundResult",
+    "RowError",
     "ServeConfig",
     "ServeMetrics",
+    "ServerCheckpointer",
     "Ticket",
+    "canonical_fault_plan",
     "executor_cache_clear",
     "executor_cache_info",
     "get_executor",
+    "load_fault_plan",
+    "restore_server",
+    "save_server",
+    "server_state",
     "validate_serve_plan",
 ]

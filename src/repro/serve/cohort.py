@@ -197,6 +197,32 @@ class CohortBuilder:
     def reset(self) -> None:
         self._buffer, self._arrived, self._stats = self.executor.init_state()
 
+    # -- crash-safe snapshot hooks (repro.serve.recovery) -------------------
+
+    def state(self):
+        """The round's full streaming state: (buffer, arrived, stats).
+        Everything ``close`` depends on — checkpointing these three
+        arrays mid-round and restoring them into a fresh builder resumes
+        the round bitwise (the incremental Gram is plain data)."""
+        return self._buffer, self._arrived, self._stats
+
+    def set_state(self, buffer, arrived, stats) -> None:
+        """Install a snapshot taken by :meth:`state` (shape-checked
+        against this builder's geometry)."""
+        template = self.executor.init_state()
+        for name, tmpl, val in zip(
+            ("buffer", "arrived", "stats"), template,
+            (buffer, arrived, stats),
+        ):
+            if tuple(np.shape(val)) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"snapshot {name} shape {np.shape(val)} != expected "
+                    f"{tuple(tmpl.shape)} for this cohort geometry"
+                )
+        self._buffer = jnp.asarray(buffer, F32)
+        self._arrived = jnp.asarray(arrived).astype(bool)
+        self._stats = jnp.asarray(stats, F32)
+
     @property
     def fill(self) -> int:
         """Distinct slots with an arrived row this round."""

@@ -22,6 +22,30 @@ The clock is injectable (``clock=``) so deadline behaviour is exactly
 testable; ``pump()`` is synchronous — a driving loop (or test) decides
 when work happens, and per-round counters (:class:`ServeMetrics`) make
 the behaviour observable without logs.
+
+Graceful degradation (the server assumes a HOSTILE world, matching the
+paper's threat model at the infrastructure level):
+
+- **ingest-time validation** — a wrong-shape or non-finite row resolves
+  its ticket with a structured :class:`RowError` instead of poisoning
+  the cohort buffer / incremental Gram;
+- **per-slot quarantine** — ``quarantine_after`` rejected rows in a row
+  quarantines the slot for ``quarantine_rounds`` rounds, doubling per
+  repeat offense up to ``quarantine_cap`` (bounded backoff);
+- **duplicate policy** — a second row for an already-arrived slot
+  follows ``duplicate_policy``: ``last_wins`` (overwrite, the
+  continuous-batching default), ``first_wins`` (ignore the retry — any
+  interleaving of duplicated wire batches then closes like the in-order
+  stream), or ``reject`` (resolve the retry's ticket with an error);
+- **underfull fallback** — a deadline close with fewer than
+  ``min_fill`` rows, an executor exception, or a non-finite aggregate
+  closes the round with the clipping-only heuristic aggregate (mean of
+  the statically clipped arrived rows — the paper's safety net: clipping
+  alone bounds the harm of any round) and ``RoundResult.degraded=True``.
+  A closed round therefore ALWAYS carries a finite aggregate.
+
+Crash safety lives in :mod:`repro.serve.recovery` (periodic atomic
+snapshots of the full round state through ``repro.checkpoint``).
 """
 from __future__ import annotations
 
@@ -39,12 +63,14 @@ from .cohort import CohortBuilder
 __all__ = [
     "AggregationServer",
     "RoundResult",
+    "RowError",
     "ServeConfig",
     "ServeMetrics",
     "Ticket",
 ]
 
 _STALE_POLICIES = ("drop", "defer")
+_DUPLICATE_POLICIES = ("first_wins", "last_wins", "reject")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +84,15 @@ class ServeConfig:
     ``stale_policy`` / ``stale_discount`` — see the module docstring.
     ``chunk_size`` — fixed ingest chunk width (jit-stability; wire
     batching does not change the traced program).
+    ``duplicate_policy`` — what a second row for an already-arrived slot
+    does to the round: ``last_wins`` / ``first_wins`` / ``reject``.
+    ``min_fill`` — a deadline close below this fill degrades to the
+    clipping-only fallback aggregate (1: any non-empty round runs the
+    full rule, the pre-fault-tolerance behaviour).
+    ``quarantine_after`` — consecutive rejected rows before a slot is
+    quarantined (0 disables quarantine); ``quarantine_rounds`` is the
+    first quarantine span in rounds, doubled per repeat offense and
+    capped at ``quarantine_cap`` (bounded backoff).
     """
 
     n_slots: int
@@ -68,6 +103,11 @@ class ServeConfig:
     stale_discount: float = 0.5
     chunk_size: int = 8
     seed: int = 0
+    duplicate_policy: str = "last_wins"
+    min_fill: int = 1
+    quarantine_after: int = 3
+    quarantine_rounds: int = 1
+    quarantine_cap: int = 8
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -96,6 +136,31 @@ class ServeConfig:
             raise ValueError(
                 f"chunk_size must be >= 1; got {self.chunk_size}"
             )
+        if self.duplicate_policy not in _DUPLICATE_POLICIES:
+            raise ValueError(
+                f"unknown duplicate_policy {self.duplicate_policy!r}; "
+                f"have {_DUPLICATE_POLICIES}"
+            )
+        if not 1 <= self.min_fill <= self.n_slots:
+            raise ValueError(
+                f"min_fill must lie in [1, n_slots={self.n_slots}]; got "
+                f"{self.min_fill}"
+            )
+        if self.quarantine_after < 0:
+            raise ValueError(
+                f"quarantine_after must be >= 0 (0 disables quarantine); "
+                f"got {self.quarantine_after}"
+            )
+        if self.quarantine_rounds < 1:
+            raise ValueError(
+                f"quarantine_rounds must be >= 1; got "
+                f"{self.quarantine_rounds}"
+            )
+        if self.quarantine_cap < self.quarantine_rounds:
+            raise ValueError(
+                f"quarantine_cap must be >= quarantine_rounds="
+                f"{self.quarantine_rounds}; got {self.quarantine_cap}"
+            )
 
     @property
     def resolved_cohort_size(self) -> int:
@@ -103,20 +168,48 @@ class ServeConfig:
 
 
 @dataclasses.dataclass
+class RowError:
+    """Structured rejection attached to a ticket that never made it into
+    a cohort.  ``code`` is machine-checkable:
+
+      wrong_shape      row is not a finite-width (dim,) float vector
+      non_finite       row carries NaN/Inf coordinates
+      bad_slot         slot id outside [0, n_slots)
+      duplicate        slot already arrived this round (policy 'reject')
+      quarantined      slot is serving a quarantine backoff
+      stale_underflow  defer weight underflowed to zero (row too stale
+                       to carry any signal)
+    """
+
+    code: str
+    detail: str
+    slot: int
+    round_id: Optional[int] = None
+
+
+@dataclasses.dataclass
 class RoundResult:
-    """What every ticket of a closed round resolves to."""
+    """What every ticket of a closed round resolves to.
+
+    ``degraded=True`` marks a round closed by the clipping-only fallback
+    (underfull deadline close, executor fault, or a non-finite full-rule
+    aggregate); ``fallback_reason`` says which.  The aggregate of a
+    closed round is always finite."""
 
     round_id: int
     aggregate: np.ndarray
     cohort_fill: int
     close_reason: str  # "fill" | "deadline"
     latency: float  # seconds from round open to close
+    degraded: bool = False
+    fallback_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
 class Ticket:
     """A submitted row's handle.  ``status`` moves queued -> ingested ->
-    done (round closed), or to dropped_stale / deferred for late rows."""
+    done (round closed), or to dropped_stale / deferred for late rows,
+    duplicate for a first-wins retry, or rejected (see ``error``)."""
 
     round_id: int  # the round the row was INGESTED into (or targeted)
     slot: int
@@ -124,6 +217,7 @@ class Ticket:
     result: Optional[RoundResult] = None
     submitted_at: float = 0.0
     resolved_at: float = 0.0
+    error: Optional[RowError] = None
 
     @property
     def done(self) -> bool:
@@ -132,7 +226,8 @@ class Ticket:
     @property
     def latency(self) -> Optional[float]:
         """Submit-to-resolution seconds (None while pending)."""
-        if self.result is None and self.status != "dropped_stale":
+        if (self.result is None
+                and self.status not in ("dropped_stale", "rejected")):
             return None
         return self.resolved_at - self.submitted_at
 
@@ -151,6 +246,11 @@ class ServeMetrics:
     last_round_latency: float = 0.0
     max_queue_depth: int = 0
     queue_depth: int = 0
+    rows_rejected: int = 0
+    rows_quarantined: int = 0
+    quarantines: int = 0
+    rounds_degraded: int = 0
+    executor_faults: int = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -185,12 +285,51 @@ class AggregationServer:
         # the cohort trigger roll into the NEXT round) without a device
         # round-trip per row
         self._arrived_slots: set[int] = set()
+        # per-slot quarantine bookkeeping: consecutive rejects, current
+        # backoff exponent, and the first round the slot is heard again
+        self._strikes: dict[int, int] = {}
+        self._quarantine_level: dict[int, int] = {}
+        self._quarantine_until: dict[int, int] = {}
 
     # -- request side --------------------------------------------------------
 
     @property
     def round_id(self) -> int:
         return self._round_id
+
+    def quarantined_until(self, slot: int) -> Optional[int]:
+        """First round id that will hear ``slot`` again (None: not
+        quarantined)."""
+        until = self._quarantine_until.get(int(slot))
+        return until if until is not None and until > self._round_id else None
+
+    def _reject(self, t: Ticket, code: str, detail: str, *,
+                quarantined: bool = False) -> Ticket:
+        t.status = "rejected"
+        t.error = RowError(code=code, detail=detail, slot=t.slot,
+                           round_id=t.round_id)
+        t.resolved_at = self._clock()
+        self.metrics.rows_rejected += 1
+        if quarantined:
+            self.metrics.rows_quarantined += 1
+        return t
+
+    def _strike(self, slot: int) -> None:
+        """One more bad submission from ``slot``; quarantine with bounded
+        exponential backoff once the strike budget is spent."""
+        cfg = self.config
+        if cfg.quarantine_after <= 0:
+            return
+        strikes = self._strikes.get(slot, 0) + 1
+        self._strikes[slot] = strikes
+        if strikes < cfg.quarantine_after:
+            return
+        level = self._quarantine_level.get(slot, 0)
+        span = min(cfg.quarantine_rounds * (2 ** level), cfg.quarantine_cap)
+        self._quarantine_until[slot] = self._round_id + span
+        self._quarantine_level[slot] = level + 1
+        self._strikes[slot] = 0
+        self.metrics.quarantines += 1
 
     def submit(self, slot: int, row, round_id: Optional[int] = None) -> Ticket:
         """Enqueue one client row.  Returns the ticket the round's result
@@ -200,7 +339,22 @@ class AggregationServer:
         "whichever round ingests it": a backlogged row rolls into a
         later round instead of going stale.  An explicit ``round_id``
         pins the row to that round — arriving after it closed makes the
-        row STALE and subject to the configured stale policy."""
+        row STALE and subject to the configured stale policy.
+
+        Malformed input never raises past this point: a wrong-shape /
+        non-finite row (or one from a quarantined or out-of-range slot)
+        returns a ``rejected`` ticket with a structured ``error`` and is
+        never ingested — the cohort buffer and the incremental Gram only
+        ever see validated rows."""
+        cfg = self.config
+        try:
+            slot = int(slot)
+        except (TypeError, ValueError):
+            return self._reject(
+                Ticket(round_id=self._round_id, slot=-1,
+                       submitted_at=self._clock()),
+                "bad_slot", f"slot id {slot!r} is not an integer",
+            )
         target = round_id if round_id is None else int(round_id)
         if target is not None and target > self._round_id:
             raise ValueError(
@@ -208,10 +362,40 @@ class AggregationServer:
                 f"{self._round_id})"
             )
         t = Ticket(round_id=self._round_id if target is None else target,
-                   slot=int(slot), submitted_at=self._clock())
-        self._queue.append(
-            _Pending(int(slot), np.asarray(row, np.float32), target, t)
-        )
+                   slot=slot, submitted_at=self._clock())
+        if not 0 <= slot < cfg.n_slots:
+            return self._reject(
+                t, "bad_slot",
+                f"slot {slot} outside [0, {cfg.n_slots})",
+            )
+        until = self.quarantined_until(slot)
+        if until is not None:
+            return self._reject(
+                t, "quarantined",
+                f"slot {slot} is quarantined until round {until}",
+                quarantined=True,
+            )
+        try:
+            arr = np.asarray(row, dtype=np.float32)
+        except (TypeError, ValueError) as e:
+            self._strike(slot)
+            return self._reject(
+                t, "wrong_shape", f"row does not coerce to float32 ({e})"
+            )
+        if arr.shape != (cfg.dim,):
+            self._strike(slot)
+            return self._reject(
+                t, "wrong_shape",
+                f"row shape {arr.shape} != ({cfg.dim},)",
+            )
+        if not np.all(np.isfinite(arr)):
+            self._strike(slot)
+            return self._reject(
+                t, "non_finite",
+                "row carries NaN/Inf coordinates",
+            )
+        self._strikes[slot] = 0  # an accepted row clears the strike count
+        self._queue.append(_Pending(slot, arr, target, t))
         self.metrics.queue_depth = len(self._queue)
         self.metrics.max_queue_depth = max(
             self.metrics.max_queue_depth, len(self._queue)
@@ -241,10 +425,52 @@ class AggregationServer:
                         p.ticket.resolved_at = self._clock()
                         continue
                     # defer: fold into the CURRENT round, geometrically
-                    # discounted by how many rounds the row missed
-                    p.row = p.row * (cfg.stale_discount ** staleness)
+                    # discounted by how many rounds the row missed.  The
+                    # weight can underflow to exactly 0.0 for extreme
+                    # staleness / tiny discounts — folding a zero row in
+                    # would mark the slot arrived while contributing
+                    # nothing, distorting coordinate-wise rules, so a
+                    # vanished weight degrades to a drop instead.
+                    weight = cfg.stale_discount ** staleness
+                    if not np.isfinite(weight) or weight <= 0.0:
+                        self.metrics.rows_dropped_stale += 1
+                        p.ticket.status = "dropped_stale"
+                        p.ticket.error = RowError(
+                            code="stale_underflow",
+                            detail=(
+                                f"defer weight {cfg.stale_discount}**"
+                                f"{staleness} underflowed to zero"
+                            ),
+                            slot=p.slot, round_id=p.round_id,
+                        )
+                        p.ticket.resolved_at = self._clock()
+                        continue
+                    p.row = p.row * weight
                     self.metrics.rows_deferred += 1
                     p.ticket.status = "deferred"
+                if p.slot in self._arrived_slots:
+                    # a second row for an already-arrived slot: the
+                    # duplicate policy decides whether the retry
+                    # overwrites, is ignored, or is an error
+                    if cfg.duplicate_policy == "reject":
+                        self.metrics.rows_rejected += 1
+                        p.ticket.status = "rejected"
+                        p.ticket.error = RowError(
+                            code="duplicate",
+                            detail=(
+                                f"slot {p.slot} already arrived in round "
+                                f"{self._round_id}"
+                            ),
+                            slot=p.slot, round_id=self._round_id,
+                        )
+                        p.ticket.resolved_at = self._clock()
+                        continue
+                    if cfg.duplicate_policy == "first_wins":
+                        # ignore the retry's payload; the ticket still
+                        # resolves with the round its slot is part of
+                        p.ticket.status = "duplicate"
+                        self._round_tickets.append(p.ticket)
+                        continue
                 batch_rows.append(p.row)
                 batch_ids.append(p.slot)
                 self._round_tickets.append(p.ticket)
@@ -284,18 +510,65 @@ class AggregationServer:
             return None
         return self._close_round("deadline")
 
+    def _fallback_aggregate(self) -> np.ndarray:
+        """The clipping-only heuristic aggregate — the paper's safety
+        net: clip every arrived row to the plan's static radius (rows
+        pass through unclipped for plans without one) and average.
+        Host-side numpy on validated-finite rows, so it is deterministic,
+        always finite, and independent of the (possibly faulted)
+        compiled executor."""
+        buf = np.asarray(self._builder.buffer, dtype=np.float32)
+        mask = np.asarray(self._builder.arrived)
+        rows = buf[mask]
+        if rows.shape[0] == 0:
+            return np.zeros((self.config.dim,), np.float32)
+        clip = self.plan.clip
+        if clip is not None and clip.radius is not None:
+            norms = np.sqrt(
+                np.sum(rows.astype(np.float32) ** 2, axis=1)
+            ).astype(np.float32)
+            radius = np.float32(clip.radius)
+            factors = np.where(
+                norms > radius,
+                radius / np.maximum(norms, np.float32(1e-45)),
+                np.float32(1.0),
+            ).astype(np.float32)
+            rows = rows * factors[:, None]
+        return rows.mean(axis=0, dtype=np.float32)
+
     def _close_round(self, reason: str) -> RoundResult:
         now = self._clock()
+        cfg = self.config
+        fill = len(self._arrived_slots)
         key = jax.random.fold_in(
-            jax.random.PRNGKey(self.config.seed), self._round_id
+            jax.random.PRNGKey(cfg.seed), self._round_id
         )
-        aggregate = np.asarray(self._builder.close(key))
+        aggregate, degraded, fallback_reason = None, False, None
+        if reason == "deadline" and fill < cfg.min_fill:
+            # starved round: the full rule has too few rows to offer its
+            # robustness guarantee — close with the clipping-only
+            # heuristic instead of fanning out a fragile aggregate
+            degraded, fallback_reason = True, "underfull"
+        else:
+            try:
+                aggregate = np.asarray(self._builder.close(key))
+                if not np.all(np.isfinite(aggregate)):
+                    aggregate = None
+                    degraded, fallback_reason = True, "non_finite"
+            except Exception as e:  # noqa: BLE001 — degrade, don't die
+                self.metrics.executor_faults += 1
+                degraded = True
+                fallback_reason = f"executor_error:{type(e).__name__}"
+        if aggregate is None:
+            aggregate = self._fallback_aggregate()
         result = RoundResult(
             round_id=self._round_id,
             aggregate=aggregate,
-            cohort_fill=self._builder.fill,
+            cohort_fill=fill,
             close_reason=reason,
-            latency=now - self._round_opened_at,
+            latency=max(0.0, now - self._round_opened_at),
+            degraded=degraded,
+            fallback_reason=fallback_reason,
         )
         for t in self._round_tickets:
             t.result = result
@@ -306,6 +579,7 @@ class AggregationServer:
         m.rounds_closed += 1
         m.closes_by_fill += reason == "fill"
         m.closes_by_deadline += reason == "deadline"
+        m.rounds_degraded += degraded
         m.last_cohort_fill = result.cohort_fill
         m.last_round_latency = result.latency
         self._round_tickets = []

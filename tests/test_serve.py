@@ -366,3 +366,56 @@ def test_scoring_step_does_not_retrace_on_default_args():
     # a genuinely new shape is of course a new trace
     scoring(jnp.asarray(rng.randn(3, 6, 16).astype(np.float32)))
     assert scoring.jitted._cache_size() == 2
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_any_interleaving_of_retried_wire_batches_closes_like_in_order(seed):
+    """Under ``duplicate_policy='first_wins'`` ANY interleaving of
+    delayed / duplicated wire batches — each slot's retries resend the
+    same payload, arbitrarily reordered and split across pumps — closes
+    the round bitwise-identical to the in-order, no-retry oracle.  This
+    is the idempotence contract resumed clients rely on (they resubmit
+    blindly after a crash), exercised through the incremental Gram of a
+    selection rule."""
+    n, d = 5, 12
+    chaos = np.random.RandomState(seed)
+    rng = np.random.RandomState(42)
+    rows = rng.randn(n, d).astype(np.float32)
+    plan = _plan("krum", radius=5.0)
+
+    def fresh(policy):
+        return AggregationServer(plan, ServeConfig(
+            n_slots=n, dim=d, seed=6, duplicate_policy=policy,
+        ))
+
+    oracle = fresh("last_wins")
+    for slot in range(n):
+        oracle.submit(slot, rows[slot])
+    want = oracle.pump()[0].aggregate
+
+    # every slot once + up to 4 identical retries, arbitrarily reordered
+    # and cut into wire batches of random sizes (pump between batches)
+    dups = list(chaos.randint(0, n, size=chaos.randint(0, 5)))
+    events = list(range(n)) + dups
+    chaos.shuffle(events)
+    srv = fresh("first_wins")
+    tickets, closed, i = [], [], 0
+    while i < len(events):
+        size = int(chaos.randint(1, 4))
+        for slot in events[i:i + size]:
+            tickets.append(srv.submit(slot, rows[slot]))
+        i += size
+        closed.extend(srv.pump())
+    assert len(closed) == 1 and srv.metrics.rounds_closed == 1
+    np.testing.assert_array_equal(closed[0].aggregate, want)
+    # tickets ingested into round 0 — originals and retries alike —
+    # resolve to its result; retries delivered AFTER the close roll into
+    # the (still-open) next round instead
+    round0 = [t for t in tickets if t.round_id == 0]
+    spilled = [t for t in tickets if t.round_id == 1]
+    assert len(round0) + len(spilled) == len(events)
+    assert all(t.done and t.result is closed[0] for t in round0)
+    assert all(not t.done for t in spilled)
+    assert sum(t.status == "duplicate" for t in round0) \
+        == len(events) - n - len(spilled)

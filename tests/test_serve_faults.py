@@ -1,0 +1,459 @@
+"""Fault injection (repro.serve.faults) + graceful degradation.
+
+Two layers under test:
+
+- the :class:`FaultPlan` / :class:`FaultInjector` harness itself — the
+  replayable-config contract (JSON round-trip, strict field validation,
+  bitwise replay determinism) and each fault's observable effect;
+- the server's degradation behaviour the harness exercises — malformed
+  rows never poison the incremental Gram (bitwise oracle compare),
+  per-slot quarantine with bounded exponential backoff, the three
+  duplicate policies, the underfull/executor-fault fallback close, and
+  the no-NaN-out contract: under the canonical chaos plan the server
+  closes EVERY round with a finite aggregate.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AggregatorSpec,
+    ClipSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
+from repro.serve import (
+    AggregationServer,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    ServeConfig,
+    canonical_fault_plan,
+    load_fault_plan,
+)
+
+
+def _plan(rule="cm", *, radius=None, backend="jnp"):
+    return ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=1),
+        clip=ClipSpec(radius=radius) if radius is not None else None,
+        schedule=ScheduleSpec(placement="naive", backend=backend),
+    )
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: the replayable-config contract
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_json_round_trip():
+    p = canonical_fault_plan(seed=3)
+    assert FaultPlan.from_json(p.to_json()) == p
+    # the document is canonical JSON: stable key order, versioned
+    d = json.loads(p.to_json())
+    assert d["version"] == 1 and d["seed"] == 3
+
+
+def test_fault_plan_rejects_unknown_fields_and_bad_values():
+    with pytest.raises(ValueError, match="unknown fault-plan fields"):
+        FaultPlan.from_dict({"dropout": 0.1, "typo_field": 1})
+    with pytest.raises(ValueError, match="version"):
+        FaultPlan.from_dict({"version": 99})
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(dropout=1.5)
+    with pytest.raises(ValueError, match="max_delay_pumps"):
+        FaultPlan(max_delay_pumps=0)
+    with pytest.raises(ValueError, match="clock_skew"):
+        FaultPlan(clock_skew=-1.0)
+    with pytest.raises(ValueError, match="not a fault-plan JSON"):
+        FaultPlan.from_json("{not json")
+
+
+def test_load_fault_plan_inline_and_path(tmp_path):
+    assert load_fault_plan("") is None
+    p = canonical_fault_plan()
+    assert load_fault_plan(p.to_json()) == p
+    f = tmp_path / "plan.json"
+    f.write_text(p.to_json())
+    assert load_fault_plan(str(f)) == p
+
+
+def test_committed_canonical_plan_file_matches_the_function():
+    import os
+
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "fault_canonical.json"
+    )
+    assert load_fault_plan(path) == canonical_fault_plan()
+
+
+def test_inactive_plan_reports_inactive():
+    assert not FaultPlan().active
+    assert FaultPlan(dropout=0.1).active
+    assert FaultPlan(clock_skew=0.5).active
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: deterministic chaos
+# ---------------------------------------------------------------------------
+
+def _drive_chaos(plan, fault_plan, *, rounds=4, n=8, d=16, seed=0):
+    """Drive a deadline-backstopped server through ``rounds`` closed
+    rounds under ``fault_plan``; returns the list of RoundResults."""
+    clock = _Clock()
+    cfg = ServeConfig(n_slots=n, dim=d, cohort_size=n - 2, deadline=5.0,
+                      seed=seed)
+    server = AggregationServer(plan, cfg, clock=clock)
+    inj = FaultInjector(fault_plan, server)
+    rng = np.random.RandomState(seed)
+    results = []
+    submissions = 0
+    while len(results) < rounds:
+        slot = submissions % n
+        inj.submit(slot, rng.randn(d).astype(np.float32))
+        submissions += 1
+        clock.t += 0.1  # the deadline backstop closes starved rounds
+        results.extend(inj.pump())
+        assert submissions < 10_000, "chaos drive failed to close rounds"
+    return results, server, inj
+
+
+def test_canonical_chaos_closes_every_round_finite():
+    plan = _plan("krum", radius=5.0)
+    results, server, inj = _drive_chaos(plan, canonical_fault_plan())
+    assert len(results) >= 4
+    assert [r.round_id for r in results] == list(range(len(results)))
+    for r in results:
+        assert np.all(np.isfinite(np.asarray(r.aggregate)))
+    # the plan actually did something: wire faults fired and malformed
+    # rows were rejected rather than ingested
+    s = inj.stats.snapshot()
+    assert s["dropped"] > 0 or s["delayed"] > 0 or s["duplicated"] > 0
+    assert server.metrics.rows_ingested > 0
+
+
+def test_chaos_replay_is_bitwise_deterministic():
+    plan = _plan("krum", radius=5.0)
+    fp = canonical_fault_plan(seed=11)
+    res_a, _, inj_a = _drive_chaos(plan, fp, seed=2)
+    res_b, _, inj_b = _drive_chaos(plan, fp, seed=2)
+    assert inj_a.stats.snapshot() == inj_b.stats.snapshot()
+    assert len(res_a) == len(res_b)
+    for a, b in zip(res_a, res_b):
+        assert a.round_id == b.round_id
+        assert a.close_reason == b.close_reason
+        np.testing.assert_array_equal(a.aggregate, b.aggregate)
+
+
+def test_certain_executor_crash_degrades_every_round():
+    plan = _plan("krum", radius=2.0)
+    fp = FaultPlan(executor_crash=1.0)
+    results, server, inj = _drive_chaos(plan, fp, rounds=3)
+    assert inj.stats.executor_crashes == len(results)
+    assert server.metrics.executor_faults == len(results)
+    for r in results:
+        assert r.degraded
+        assert r.fallback_reason == "executor_error:InjectedFault"
+        assert np.all(np.isfinite(np.asarray(r.aggregate)))
+
+
+def test_injected_fault_is_a_runtime_error():
+    assert issubclass(InjectedFault, RuntimeError)
+
+
+def test_dropout_one_drops_everything():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8)
+    inj = FaultInjector(FaultPlan(dropout=1.0), AggregationServer(plan, cfg))
+    assert inj.submit(0, np.ones(8)) == []
+    assert inj.stats.dropped == 1
+    assert inj.pump() == []
+    assert inj.metrics.rows_ingested == 0
+
+
+def test_delayed_rows_release_within_max_delay_pumps():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8, cohort_size=4)
+    inj = FaultInjector(
+        FaultPlan(delay=1.0, max_delay_pumps=2),
+        AggregationServer(plan, cfg),
+    )
+    for slot in range(4):
+        assert inj.submit(slot, np.ones(8)) == []  # all held back
+    assert inj.stats.delayed == 4
+    closed = []
+    for _ in range(3):  # every held row is due within max_delay_pumps
+        closed.extend(inj.pump())
+    assert inj.stats.released == 4
+    assert len(closed) == 1 and closed[0].cohort_fill == 4
+
+
+def test_flush_force_delivers_held_rows():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8, cohort_size=2)
+    inj = FaultInjector(
+        FaultPlan(delay=1.0, max_delay_pumps=3),
+        AggregationServer(plan, cfg),
+    )
+    inj.submit(0, np.ones(8))
+    inj.submit(1, np.ones(8))
+    tickets = inj.flush()
+    assert len(tickets) == 2 and inj.stats.released == 2
+    assert len(inj.pump()) == 1
+
+
+def test_clock_skew_hook_replaces_the_server_clock():
+    plan = _plan("cm")
+    clock = _Clock()
+    server = AggregationServer(
+        plan, ServeConfig(n_slots=4, dim=8), clock=clock
+    )
+    base = server._clock
+    FaultInjector(FaultPlan(clock_skew=0.5), server)
+    assert server._clock is not base
+    reading = server._clock()
+    assert abs(reading - clock.t) <= 0.5
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: validation, quarantine, duplicates, fallback
+# ---------------------------------------------------------------------------
+
+def test_malformed_rows_never_poison_the_round():
+    """NaN / wrong-shape submissions resolve with structured errors and
+    the round closes bitwise-equal to a server that never saw them —
+    the incremental Gram only ever ingests validated rows."""
+    plan = _plan("krum", radius=5.0)
+    cfg = ServeConfig(n_slots=6, dim=8, cohort_size=4, seed=9)
+    rng = np.random.RandomState(0)
+    rows = rng.randn(4, 8).astype(np.float32)
+
+    victim = AggregationServer(plan, cfg)
+    bad_nan = rows[0].copy()
+    bad_nan[3] = np.nan
+    t_nan = victim.submit(0, bad_nan)
+    t_shape = victim.submit(1, rows[0][:5])
+    t_inf = victim.submit(2, np.full(8, np.inf, np.float32))
+    t_slot = victim.submit(99, rows[0])
+    for t, code in ((t_nan, "non_finite"), (t_shape, "wrong_shape"),
+                    (t_inf, "non_finite"), (t_slot, "bad_slot")):
+        assert t.status == "rejected" and t.error.code == code
+        assert t.latency is not None  # rejected tickets resolve
+    for slot in range(4):
+        victim.submit(slot, rows[slot])
+    closed_victim = victim.pump()
+
+    oracle = AggregationServer(plan, cfg)
+    for slot in range(4):
+        oracle.submit(slot, rows[slot])
+    closed_oracle = oracle.pump()
+
+    assert len(closed_victim) == len(closed_oracle) == 1
+    np.testing.assert_array_equal(
+        closed_victim[0].aggregate, closed_oracle[0].aggregate
+    )
+    assert victim.metrics.rows_rejected == 4
+    assert victim.metrics.rows_ingested == 4
+
+
+def test_quarantine_backoff_doubles_and_caps():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8, cohort_size=1,
+                      quarantine_after=2, quarantine_rounds=1,
+                      quarantine_cap=2)
+    srv = AggregationServer(plan, cfg)
+    bad = np.full(8, np.nan, np.float32)
+
+    def offend():
+        srv.submit(0, bad)
+        srv.submit(0, bad)
+
+    def close_one_round():
+        srv.submit(1, np.ones(8, np.float32))
+        assert len(srv.pump()) == 1
+
+    # first offense: 1-round quarantine
+    offend()
+    assert srv.quarantined_until(0) == srv.round_id + 1
+    t = srv.submit(0, np.ones(8, np.float32))
+    assert t.status == "rejected" and t.error.code == "quarantined"
+    assert srv.metrics.quarantines == 1
+    assert srv.metrics.rows_quarantined == 1
+    close_one_round()
+    assert srv.quarantined_until(0) is None  # served its span
+
+    # second offense doubles the span... to the cap (2 rounds)
+    offend()
+    assert srv.quarantined_until(0) == srv.round_id + 2
+    close_one_round()
+    assert srv.quarantined_until(0) is not None
+    close_one_round()
+    assert srv.quarantined_until(0) is None
+
+    # third offense: still capped at 2
+    offend()
+    assert srv.quarantined_until(0) == srv.round_id + 2
+
+
+def test_accepted_row_resets_the_strike_count():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8, cohort_size=4, quarantine_after=2)
+    srv = AggregationServer(plan, cfg)
+    bad = np.full(8, np.nan, np.float32)
+    srv.submit(0, bad)
+    srv.submit(0, np.ones(8, np.float32))  # clears the strike
+    srv.submit(0, bad)
+    assert srv.quarantined_until(0) is None
+    assert srv.metrics.quarantines == 0
+
+
+def test_quarantine_zero_disables_it():
+    plan = _plan("cm")
+    cfg = ServeConfig(n_slots=4, dim=8, quarantine_after=0)
+    srv = AggregationServer(plan, cfg)
+    bad = np.full(8, np.nan, np.float32)
+    for _ in range(10):
+        srv.submit(0, bad)
+    assert srv.quarantined_until(0) is None
+
+
+@pytest.mark.parametrize("policy", ["first_wins", "last_wins", "reject"])
+def test_duplicate_policies_against_the_oracle(policy):
+    """Each policy's close equals the one-server oracle fed the payload
+    the policy promises (first submission, retry, or first + error)."""
+    plan = _plan("mean")
+    cfg = ServeConfig(n_slots=4, dim=8, cohort_size=2, seed=5,
+                      duplicate_policy=policy)
+    rng = np.random.RandomState(3)
+    first = rng.randn(8).astype(np.float32)
+    retry = rng.randn(8).astype(np.float32)
+    other = rng.randn(8).astype(np.float32)
+
+    srv = AggregationServer(plan, cfg)
+    t_first = srv.submit(0, first)
+    srv.pump()  # ingest so slot 0 is ARRIVED before the retry
+    t_retry = srv.submit(0, retry)
+    srv.submit(1, other)
+    closed = srv.pump()
+    assert len(closed) == 1
+
+    kept = {"first_wins": first, "last_wins": retry, "reject": first}[policy]
+    oracle = AggregationServer(
+        plan, ServeConfig(n_slots=4, dim=8, cohort_size=2, seed=5)
+    )
+    oracle.submit(0, kept)
+    oracle.submit(1, other)
+    want = oracle.pump()[0].aggregate
+    np.testing.assert_array_equal(closed[0].aggregate, want)
+
+    assert t_first.done and t_first.result is closed[0]
+    if policy == "reject":
+        assert t_retry.status == "rejected"
+        assert t_retry.error.code == "duplicate"
+        assert not t_retry.done
+    elif policy == "first_wins":
+        assert t_retry.status == "duplicate"
+        assert t_retry.done and t_retry.result is closed[0]
+    else:
+        assert t_retry.done and t_retry.result is closed[0]
+
+
+def test_underfull_deadline_close_degrades_to_clipped_mean():
+    plan = _plan("krum", radius=2.0)
+    clock = _Clock()
+    cfg = ServeConfig(n_slots=6, dim=8, cohort_size=5, deadline=1.0,
+                      min_fill=3)
+    srv = AggregationServer(plan, cfg, clock=clock)
+    rng = np.random.RandomState(7)
+    rows = [rng.randn(8).astype(np.float32) * 10.0 for _ in range(2)]
+    tickets = [srv.submit(i, r) for i, r in enumerate(rows)]
+    assert srv.pump() == []
+    clock.t = 1.5
+    closed = srv.pump()
+    assert len(closed) == 1
+    r = closed[0]
+    assert r.degraded and r.fallback_reason == "underfull"
+    assert r.close_reason == "deadline" and r.cohort_fill == 2
+    assert all(t.done and t.result is r for t in tickets)
+    assert srv.metrics.rounds_degraded == 1
+    # exactly the clipping-only heuristic: clip each row to the plan's
+    # static radius, then average
+    want = np.zeros(8, np.float32)
+    for row in rows:
+        norm = np.sqrt(np.sum(row.astype(np.float32) ** 2))
+        scale = np.float32(2.0) / np.float32(norm) if norm > 2.0 else 1.0
+        want += row * np.float32(scale)
+    want /= np.float32(2.0)
+    np.testing.assert_allclose(np.asarray(r.aggregate), want, rtol=1e-6)
+    norms = np.sqrt(np.sum(np.asarray(r.aggregate) ** 2))
+    assert norms <= 2.0 + 1e-5  # a mean of clipped rows stays in the ball
+
+
+def test_filled_round_at_min_fill_runs_the_full_rule():
+    plan = _plan("krum", radius=2.0)
+    clock = _Clock()
+    cfg = ServeConfig(n_slots=6, dim=8, cohort_size=5, deadline=1.0,
+                      min_fill=3, seed=2)
+    srv = AggregationServer(plan, cfg, clock=clock)
+    rng = np.random.RandomState(8)
+    for i in range(3):
+        srv.submit(i, rng.randn(8).astype(np.float32))
+    clock.t = 1.5
+    closed = srv.pump()
+    assert len(closed) == 1
+    assert not closed[0].degraded and closed[0].fallback_reason is None
+
+
+def test_stale_underflow_guard_drops_instead_of_zero_row():
+    plan = _plan("mean")
+    cfg = ServeConfig(n_slots=3, dim=8, cohort_size=2,
+                      stale_policy="defer", stale_discount=1e-300)
+    srv = AggregationServer(plan, cfg)
+    srv.submit(0, np.ones(8, np.float32))
+    srv.submit(1, np.ones(8, np.float32))
+    assert len(srv.pump()) == 1
+    srv.submit(0, np.ones(8, np.float32))
+    srv.submit(1, np.ones(8, np.float32))
+    assert len(srv.pump()) == 1
+    # two rounds stale: 1e-300 ** 2 underflows to exactly 0.0
+    late = srv.submit(2, np.ones(8, np.float32), round_id=0)
+    srv.pump()
+    assert late.status == "dropped_stale"
+    assert late.error is not None
+    assert late.error.code == "stale_underflow"
+    assert srv.metrics.rows_dropped_stale == 1
+    assert 2 not in srv._arrived_slots  # the zero row was NOT folded in
+
+
+def test_non_integer_slot_is_rejected_not_raised():
+    srv = AggregationServer(_plan("cm"), ServeConfig(n_slots=4, dim=8))
+    t = srv.submit("not-a-slot", np.ones(8))
+    assert t.status == "rejected" and t.error.code == "bad_slot"
+
+
+def test_serve_config_validates_degradation_knobs():
+    ok = dict(n_slots=4, dim=8)
+    with pytest.raises(ValueError, match="duplicate_policy"):
+        ServeConfig(duplicate_policy="latest", **ok)
+    with pytest.raises(ValueError, match="min_fill"):
+        ServeConfig(min_fill=0, **ok)
+    with pytest.raises(ValueError, match="min_fill"):
+        ServeConfig(min_fill=5, **ok)
+    with pytest.raises(ValueError, match="quarantine_after"):
+        ServeConfig(quarantine_after=-1, **ok)
+    with pytest.raises(ValueError, match="quarantine_rounds"):
+        ServeConfig(quarantine_rounds=0, **ok)
+    with pytest.raises(ValueError, match="quarantine_cap"):
+        ServeConfig(quarantine_rounds=4, quarantine_cap=2, **ok)
+    with pytest.raises(ValueError, match="stale_discount"):
+        ServeConfig(stale_discount=0.0, **ok)
+    with pytest.raises(ValueError, match="stale_discount"):
+        ServeConfig(stale_discount=1.5, **ok)

@@ -110,6 +110,51 @@ def test_checkpoint_roundtrip_with_bf16():
     assert latest_step("/nonexistent/dir") is None
 
 
+def test_truncated_checkpoint_is_skipped_not_resumed():
+    """Regression: a writer killed mid-npz used to leave a truncated
+    ``step_<k>.npz`` that ``latest_step`` happily returned and
+    ``restore`` crashed on.  Writes are now atomic AND the reader
+    verifies candidates newest-first, so resume lands on the newest
+    COMPLETE step."""
+    from repro.checkpoint import verify_step
+
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        save(d, 2, tree)
+        # simulate the pre-fix torn write: step 2's archive loses its
+        # tail (the zip central directory) after publication
+        npz2 = os.path.join(d, "step_2.npz")
+        blob = open(npz2, "rb").read()
+        with open(npz2, "wb") as f:
+            f.write(blob[: len(blob) // 2])
+        assert not verify_step(d, 2) and verify_step(d, 1)
+        assert latest_step(d) == 1  # damaged newest is skipped
+        back = restore(d, 1, template)
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(tree["w"]))
+        # unverified listing still sees the damaged step (debugging)
+        assert latest_step(d, verify=False) == 2
+        # leftover .tmp files from a kill mid-write never count as steps
+        open(os.path.join(d, "step_9.npz.tmp.npz"), "wb").close()
+        assert latest_step(d) == 1
+
+
+def test_checkpoint_save_publishes_atomically():
+    """No partially-written step is ever visible under the final name:
+    after save() the directory holds exactly the step files, no temps,
+    and the manifest lands before the npz (the npz IS the publication
+    marker latest_step keys on)."""
+    tree = {"w": jnp.ones((3,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 4, tree)
+        names = sorted(os.listdir(d))
+        assert names == ["step_4.json", "step_4.npz"]
+        assert os.path.getmtime(os.path.join(d, "step_4.json")) <= \
+            os.path.getmtime(os.path.join(d, "step_4.npz"))
+
+
 # ---------------------------------------------------------------------------
 # sharding rules
 # ---------------------------------------------------------------------------
