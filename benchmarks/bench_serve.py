@@ -2,8 +2,9 @@
 
 Drives :class:`repro.serve.AggregationServer` with synthetic clients —
 a configurable arrival process (how rows batch on the wire), a
-Byzantine fraction (trailing slots submit 100x payloads) and a stale
-policy — and reports the serve-loop's throughput and latency:
+Byzantine fraction (trailing slots run a registry attack over the
+round's honest rows via ``repro.scenarios.SyntheticCohort``) and a
+stale policy — and reports the serve-loop's throughput and latency:
 
   requests_per_sec   rows ingested per wall-clock second
   p50_ms / p99_ms    submit-to-resolution latency percentiles (a row's
@@ -32,6 +33,7 @@ import time
 import numpy as np
 
 from repro.api import AggregatorSpec, ClipSpec, ScheduleSpec, ServerPlan
+from repro.scenarios import SyntheticCohort
 from repro.serve import (
     AggregationServer,
     FaultInjector,
@@ -67,6 +69,7 @@ def _batch_sizes(arrival: str, cohort: int, rng) -> "list[int]":
 
 def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
              arrival: str = "steady", byz_frac: float = 0.0,
+             attack: str = "gauss", z_max: float = 1.5,
              stale_policy: str = "drop", cohort_size: int | None = None,
              seed: int = 0, warmup_rounds: int = 1,
              fault_plan: "FaultPlan | None" = None,
@@ -90,6 +93,8 @@ def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
     cohort = cfg.resolved_cohort_size
     rng = np.random.RandomState(seed)
     n_byz = int(round(byz_frac * n_slots))
+    gen = SyntheticCohort(attack, n_slots=n_slots, dim=dim, n_byz=n_byz,
+                          z_max=z_max)
     degraded = 0
 
     def submit(slot, row):
@@ -108,14 +113,15 @@ def run_load(plan: ServerPlan, *, n_slots: int, dim: int, rounds: int,
     def drive(n_rounds, collect):
         tickets = []
         while server.metrics.rounds_closed - closed_before < n_rounds:
-            slot_iter = iter(rng.permutation(n_slots)[:cohort])
+            slots = rng.permutation(n_slots)[:cohort]
+            # the round's wire rows: honest draws + the scenario attack
+            # over them (the Byzantines see this round's honest rows)
+            wire = gen.round_rows(rng, slots=slots)
+            row_iter = iter(zip(slots, wire))
             for size in _batch_sizes(arrival, cohort, rng):
                 for _ in range(size):
-                    slot = int(next(slot_iter))
-                    row = rng.randn(dim).astype(np.float32)
-                    if slot >= n_slots - n_byz:
-                        row *= 100.0
-                    tickets.extend(submit(slot, row))
+                    slot, row = next(row_iter)
+                    tickets.extend(submit(int(slot), row))
                 pump()
                 if server.metrics.rounds_closed - closed_before >= n_rounds:
                     break
@@ -229,7 +235,6 @@ def main() -> None:
     ap.add_argument("--cohort-size", type=int, default=0,
                     help="close trigger (0: clients - 4)")
     ap.add_argument("--arrival", default="steady", choices=ARRIVALS)
-    ap.add_argument("--byz-frac", type=float, default=0.25)
     ap.add_argument("--stale-policy", default="drop",
                     choices=["drop", "defer"])
     ap.add_argument("--aggregator", default="krum")
@@ -238,11 +243,14 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="",
                     help="merge the sweep rows into this bench payload")
-    from repro.launch.cli import add_fault_args, fault_plan_from_args
+    from repro.launch.cli import (add_attack_args, add_fault_args,
+                                  fault_plan_from_args)
 
+    add_attack_args(ap, attack="gauss")  # --attack/--byz-frac/--z-max
     add_fault_args(ap)
     args = ap.parse_args()
     fault_plan = fault_plan_from_args(args)
+    byz_frac = 0.25 if args.byz_frac is None else args.byz_frac
 
     print("name,us_per_call,derived")
     if args.smoke or args.quick:
@@ -253,7 +261,8 @@ def main() -> None:
             _serve_plan(args.aggregator,
                         args.clip_radius if args.clip_radius > 0 else None),
             n_slots=args.clients, dim=args.dim, rounds=args.rounds,
-            arrival=args.arrival, byz_frac=args.byz_frac,
+            arrival=args.arrival, byz_frac=byz_frac,
+            attack=args.attack, z_max=args.z_max,
             stale_policy=args.stale_policy,
             cohort_size=args.cohort_size or max(1, args.clients - 4),
             seed=args.seed, fault_plan=fault_plan,
@@ -267,7 +276,8 @@ def main() -> None:
             "p99_ms": round(r["p99_ms"], 3),
             "derived": (
                 f"n={args.clients};d={args.dim};rounds={r['rounds']};"
-                f"byz={args.byz_frac};clip={args.clip_radius > 0}"
+                f"byz={byz_frac};attack={args.attack};"
+                f"clip={args.clip_radius > 0}"
                 + (f";chaos=1;degraded={r['rounds_degraded']}" if chaos
                    else "")
             ),

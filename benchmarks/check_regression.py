@@ -17,6 +17,16 @@ a PR that adds a bench row must not need a chicken-and-egg baseline
 update to go green.  They start being gated once the baseline is
 regenerated with them in it.
 
+- **resilience** (deterministic): the committed ``"resilience"``
+  block's breakdown map (repro.scenarios.matrix: smallest Byzantine
+  fraction that breaks convergence per attack x rule x clip curve,
+  fixed seeds, jnp backend) is diffed against the fresh run's.  A
+  breakdown point SHRINKING — the system now breaks at a smaller
+  Byzantine fraction — or a committed curve vanishing hard-fails like
+  lost kernel fusion; robustness regressions are never timer noise, so
+  ``--timing-warn-only`` does not demote them.  Fresh curves absent
+  from the baseline are informational (first-landing convention).
+
 - **wall-clock rows**: fail on a per-kernel slowdown beyond
   ``--tolerance`` (default 20%).  Interpret-mode timings on this
   container's shared vCPU jitter up to ~2.5x between processes, so the
@@ -114,6 +124,38 @@ def _traffic_models(payload: dict) -> dict:
     return out
 
 
+def _breakdown_map(payload: dict) -> dict:
+    """The resilience block's {curve key: breakdown fraction}."""
+    block = payload.get("resilience") or {}
+    return {str(k): float(v)
+            for k, v in (block.get("breakdown") or {}).items()}
+
+
+def compare_resilience(committed: dict, fresh: dict):
+    """The deterministic resilience tier: [(curve, committed breakdown,
+    fresh breakdown)] for every curve whose breakdown point SHRANK
+    (higher is better — it is the smallest Byzantine fraction that
+    breaks convergence) or that vanished from the fresh run (fresh
+    = 0.0 marker, same convention as the other tiers).
+
+    A fresh payload with NO ``"resilience"`` key at all skips the tier
+    (returns []): the standalone kernel-only gate path never produces
+    the block, and the full ``benchmarks.run`` path fails before the
+    gate if the matrix itself crashes."""
+    if "resilience" not in fresh:
+        return []
+    old, new = _breakdown_map(committed), _breakdown_map(fresh)
+    regressions = [
+        (name, old[name], new[name])
+        for name in sorted(set(old) & set(new))
+        if new[name] < old[name]
+    ]
+    regressions += [
+        (name, old[name], 0.0) for name in sorted(set(old) - set(new))
+    ]
+    return regressions
+
+
 def compare(committed: dict, fresh: dict, *, tolerance: float,
             noise_ratio: float, min_us: float):
     """Returns (timing_regressions, traffic_regressions)."""
@@ -156,8 +198,9 @@ def compare(committed: dict, fresh: dict, *, tolerance: float,
     return timing, traffic
 
 
-def _verdict_payload(status, *, timing=(), traffic=(), timing_warn_only=False,
-                     detail="", new_rows=(), new_traffic=()):
+def _verdict_payload(status, *, timing=(), traffic=(), resilience=(),
+                     timing_warn_only=False, detail="", new_rows=(),
+                     new_traffic=(), new_resilience=()):
     """The machine-readable verdict written by --json-out."""
     return {
         "status": status,  # "ok" | "regression" | "no-baseline"
@@ -171,11 +214,16 @@ def _verdict_payload(status, *, timing=(), traffic=(), timing_warn_only=False,
             {"name": n, "committed_bytes": o, "fresh_bytes": f, "ratio": r}
             for n, o, f, r in traffic
         ],
+        "resilience_regressions": [
+            {"name": n, "committed_breakdown": o, "fresh_breakdown": f}
+            for n, o, f in resilience
+        ],
         # newly-added rows/blocks with no baseline counterpart:
         # informational only, never a failure (they become gated once
         # the baseline is regenerated with them)
         "new_rows": list(new_rows),
         "new_traffic_models": list(new_traffic),
+        "new_resilience": list(new_resilience),
     }
 
 
@@ -198,7 +246,8 @@ def _partition_timing(timing):
 
 
 def _summary_markdown(committed, fresh, slow, broken, traffic, *,
-                      tolerance, min_us, timing_warn_only, failed):
+                      tolerance, min_us, timing_warn_only, failed,
+                      resilience=()):
     """GitHub step-summary markdown: verdict line + per-row table."""
     old, new = _rows_by_name(committed), _rows_by_name(fresh)
     broken_names = {t[0] for t in broken}
@@ -211,7 +260,8 @@ def _summary_markdown(committed, fresh, slow, broken, traffic, *,
         n_timing = 0 if timing_warn_only else len(slow_names)
         lines.append(
             f"**FAIL** — {n_timing} timing + {len(broken)} broken-row + "
-            f"{len(traffic)} modeled-traffic regression(s){demoted}"
+            f"{len(traffic)} modeled-traffic + {len(resilience)} "
+            f"resilience regression(s){demoted}"
         )
     elif slow_names:
         lines.append(
@@ -251,6 +301,12 @@ def _summary_markdown(committed, fresh, slow, broken, traffic, *,
                   "ratio |", "|---|---:|---:|---:|"]
         for name, o, n, r in traffic:
             lines.append(f"| {name} | {o:.3e} | {n:.3e} | {r:.2f}x |")
+    if resilience:
+        lines += ["", "| resilience curve | committed breakdown | "
+                  "fresh breakdown |", "|---|---:|---:|"]
+        for name, o, n in resilience:
+            fresh_s = f"{n:.2f}" if n > 0 else "vanished"
+            lines.append(f"| {name} | {o:.2f} | {fresh_s} |")
     return "\n".join(lines) + "\n"
 
 
@@ -348,6 +404,7 @@ def main(argv=None) -> int:
         committed, fresh, tolerance=args.tolerance,
         noise_ratio=args.noise_ratio, min_us=args.min_us,
     )
+    resilience = compare_resilience(committed, fresh)
     old, new = _rows_by_name(committed), _rows_by_name(fresh)
     warn_ratio = 1.0 + args.tolerance
     for name in sorted(set(old) & set(new)):
@@ -369,6 +426,11 @@ def main(argv=None) -> int:
     for name, o, n, ratio in traffic:
         print(f"[check_regression] TRAFFIC {name}: {o:.3e} -> {n:.3e} "
               f"modeled bytes ({ratio:.2f}x) <-- REGRESSION")
+    for name, o, n in resilience:
+        what = f"{n:.2f}" if n > 0 else "VANISHED"
+        print(f"[check_regression] RESILIENCE {name}: breakdown point "
+              f"{o:.2f} -> {what} <-- REGRESSION (the system now breaks "
+              "at a smaller byzantine fraction)")
     for name, o, n, _ in timing:
         if name not in new or n <= 0:
             print(f"[check_regression] {name}: committed {o:.1f} us but "
@@ -384,24 +446,31 @@ def main(argv=None) -> int:
     if added_traffic:
         print("[check_regression] new traffic models (informational, not "
               f"gated): {added_traffic}")
+    added_resilience = sorted(
+        set(_breakdown_map(fresh)) - set(_breakdown_map(committed))
+    )
+    if added_resilience:
+        print("[check_regression] new resilience curves (informational, "
+              f"not gated): {added_resilience}")
 
     # vanished/zeroed rows are deterministic breakage (a kernel or bench
     # path broke) — never demotable to a warning, unlike noisy slowdowns
     slow, broken = _partition_timing(timing)
     failed = (
-        bool(traffic) or bool(broken)
+        bool(traffic) or bool(broken) or bool(resilience)
         or (bool(slow) and not args.timing_warn_only)
     )
     status = "regression" if failed else "ok"
     _write_json(args.json_out, _verdict_payload(
-        status, timing=timing, traffic=traffic,
+        status, timing=timing, traffic=traffic, resilience=resilience,
         timing_warn_only=args.timing_warn_only,
         new_rows=added, new_traffic=added_traffic,
+        new_resilience=added_resilience,
     ))
     _write_summary(args.summary_out, _summary_markdown(
         committed, fresh, slow, broken, traffic, tolerance=args.tolerance,
         min_us=args.min_us, timing_warn_only=args.timing_warn_only,
-        failed=failed,
+        failed=failed, resilience=resilience,
     ))
 
     if failed:
@@ -410,7 +479,7 @@ def main(argv=None) -> int:
                    if args.timing_warn_only and slow else "")
         print(f"[check_regression] FAIL: {n_timing} timing + "
               f"{len(broken)} broken-row + {len(traffic)} modeled-traffic "
-              f"regression(s){demoted}")
+              f"+ {len(resilience)} resilience regression(s){demoted}")
         return EXIT_REGRESSION
     if slow:
         print(f"[check_regression] OK (warn-only): {len(slow)} timing "

@@ -152,6 +152,38 @@ def kernel_table(path: str = "BENCH_kernels.json") -> str:
     return "\n".join(lines)
 
 
+def resilience_table(path: str = "BENCH_kernels.json") -> str:
+    """Breakdown-point curves from the resilience matrix (gated like the
+    traffic models: check_regression.py hard-fails when one shrinks)."""
+    if not os.path.exists(path):
+        return "(no BENCH_kernels.json — run `python -m benchmarks.run " \
+               "--smoke`)"
+    data = json.load(open(path))
+    res = data.get("resilience")
+    if not res:
+        return "(no resilience block — run `python -m repro.scenarios." \
+               "matrix --smoke --json-out BENCH_kernels.json`)"
+    grid = res.get("grid", {})
+    fracs = ", ".join(f"{f:.2f}" for f in grid.get("byz_fracs", ()))
+    lines = [
+        "| resilience curve (rule.attack.clip.cohort.compressor) | "
+        "breakdown point |",
+        "|---|---:|",
+    ]
+    for name, bp in sorted(res.get("breakdown", {}).items()):
+        shown = "survived all tested" if bp >= 1.0 else f"{bp:.2f}"
+        lines.append(f"| {name} | {shown} |")
+    lines.append("")
+    lines.append(
+        f"Breakdown point = smallest tested byzantine fraction "
+        f"(of {fracs or 'the grid'}) at which the cell fails to converge "
+        f"(final gap >= {grid.get('tol', '?')}); 'survived all tested' "
+        f"means every fraction converged.  Deterministic (fixed seeds, "
+        f"jnp backend): a shrinking breakdown point fails CI."
+    )
+    return "\n".join(lines)
+
+
 def replace_block(text: str, marker: str, content: str) -> str:
     begin = f"<!-- {marker} -->"
     end = f"<!-- /{marker} -->"
@@ -166,13 +198,16 @@ def replace_block(text: str, marker: str, content: str) -> str:
 def main():
     path = "EXPERIMENTS.md"
     if not os.path.exists(path):
-        print("EXPERIMENTS.md not present; kernel table only:")
+        print("EXPERIMENTS.md not present; kernel + resilience tables only:")
         print(kernel_table())
+        print()
+        print(resilience_table())
         return
     text = open(path).read()
     text = replace_block(text, "DRYRUN_TABLE", dryrun_table())
     text = replace_block(text, "ROOFLINE_TABLE", roofline_table())
     text = replace_block(text, "KERNEL_TABLE", kernel_table())
+    text = replace_block(text, "RESILIENCE_TABLE", resilience_table())
     open(path, "w").write(text)
     print("EXPERIMENTS.md tables refreshed")
 

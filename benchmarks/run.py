@@ -60,12 +60,17 @@ def main() -> None:
 
     def _kernels_plus_serve(quick=False, out_json=None):
         # the kernels suite also carries the serve-loop load-generator
-        # rows (latency/throughput shape) so they land in the same
-        # payload the gate diffs and promotes
+        # rows (latency/throughput shape) AND the resilience matrix's
+        # breakdown map (repro.scenarios.matrix), so they land in the
+        # same payload the gate diffs and promotes
+        from repro.scenarios.matrix import (SMOKE_GRID, append_resilience,
+                                            collect_resilience)
+
         out_json = out_json or bench_kernels.BENCH_JSON
         rows = list(bench_kernels.run(quick=quick, out_json=out_json))
         serve_rows = bench_serve.collect_rows(quick=quick)
         bench_serve.append_rows(out_json, serve_rows)
+        append_resilience(out_json, collect_resilience(SMOKE_GRID))
         return rows + [bench_serve.csv_row(r) for r in serve_rows]
 
     kernels_run = _kernels_plus_serve

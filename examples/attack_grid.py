@@ -1,49 +1,47 @@
-"""Attack x aggregator grid (the paper's Fig. 2 style experiment) with the
-clipped partial-participation heuristic (eq. 10) around robust momentum-SGD.
+"""Attack x aggregator grid — now a thin shim over the resilience
+matrix engine (``repro.scenarios.matrix``), which grew out of this
+example.
 
     PYTHONPATH=src python examples/attack_grid.py --steps 150
+
+The engine sweeps attack x rule x clip x participation x byzantine
+fraction on the Algorithm-1 engine and reduces every curve to its
+breakdown point; this example keeps the original Fig.-2 flavor (robust
+rules vs. omniscient attacks, clip vs. noclip) on a small grid.  For
+the full gated CI sweep run ``python -m repro.scenarios.matrix
+--smoke``.
 """
 import argparse
 
-import jax
-
-from repro.api import AggregatorSpec, BucketSpec, ClipSpec, ServerPlan
-from repro.core import ClippedPPConfig, ClippedPPMomentum, mlp_problem
+from repro.scenarios.matrix import MatrixGrid, collect_resilience
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--rules", default="cm,rfa")
+    ap.add_argument("--attacks", default="bf,alie,shb")
+    ap.add_argument("--byz-fracs", default="0.25")
     args = ap.parse_args()
 
-    # Note: with C=4 sampled clients and bucketing s=2 there are only TWO
-    # non-empty buckets per round, and every (delta,c)-robust aggregator of
-    # two points returns their midpoint — so the CM and RFA rows coincide
-    # exactly.  This is faithful to the paper's setting and is precisely why
-    # the aggregator alone cannot provide robustness in sampled rounds:
-    # the clipping of gradient differences has to carry it (Section 3).
-    print(f"{'agg':5s} {'attack':6s} {'clip':>8s} {'noclip':>8s}")
-    for agg in ("cm", "rfa"):
-        for attack in ("bf", "lf", "alie", "shb"):
-            prob = mlp_problem(
-                jax.random.PRNGKey(5), n_clients=20, n_good=15, m=128,
-                in_dim=32, hidden=16, heterogeneous=True,
-                label_flip_byz=(attack == "lf"),
-            )
-            finals = {}
-            for clip in (True, False):
-                plan = ServerPlan(
-                    aggregate=AggregatorSpec(agg),
-                    bucket=BucketSpec(s=2),
-                    clip=ClipSpec(alpha=1.0) if clip else None,
-                )
-                cfg = ClippedPPConfig(
-                    gamma=0.1, C=4, attack=attack, plan=plan,
-                )
-                alg = ClippedPPMomentum(prob, cfg)
-                _, m = jax.jit(lambda s: alg.run(args.steps, s))(alg.init())
-                finals[clip] = float(m["loss"][-1])
-            print(f"{agg:5s} {attack:6s} {finals[True]:8.4f} {finals[False]:8.4f}")
+    grid = MatrixGrid(
+        rules=tuple(args.rules.split(",")),
+        attacks=tuple(args.attacks.split(",")),
+        byz_fracs=tuple(float(f) for f in args.byz_fracs.split(",")),
+        steps=args.steps,
+    )
+
+    print(f"{'cell':30s} {'byz':>5s} {'gap':>12s}  verdict")
+
+    def progress(c):
+        gap = "inf" if c["gap"] == float("inf") else f"{c['gap']:.4f}"
+        verdict = "converged" if c["converged"] else "BROKEN"
+        print(f"{c['key']:30s} {c['byz_frac']:5.2f} {gap:>12s}  {verdict}")
+
+    res = collect_resilience(grid, progress=progress)
+    print("\nbreakdown points:")
+    for k, v in sorted(res["breakdown"].items()):
+        print(f"  {k:30s} {v:.2f}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ _API_EXPORTS = (
     "CompressSpec",
     "BucketSpec",
     "AggregatorSpec",
+    "ScenarioSpec",
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",

@@ -27,6 +27,7 @@ from .plan import (
     ServerPlan,
     ServerStep,
 )
+from .scenario import ScenarioSpec
 
 __all__ = [
     "AggregatorSpec",
@@ -36,6 +37,7 @@ __all__ = [
     "PLAN_VERSION",
     "PlanError",
     "PlanWarning",
+    "ScenarioSpec",
     "ScheduleSpec",
     "ServerPlan",
     "ServerStep",

@@ -1,0 +1,156 @@
+"""``ScenarioSpec`` — the declarative adversarial scenario, alongside
+``ServerPlan``.
+
+A plan says how the server aggregates; a scenario says what it is up
+against: which attack the Byzantines mount, how many of them there are,
+and the attack's tunables.  Like the plan specs it is frozen, validated
+at construction (:class:`PlanError` on nonsense), and serializes to a
+canonical JSON document:
+
+    spec = ScenarioSpec(attack="alie", byz_frac=0.3, z_max=2.0)
+    attack = spec.build()            # registry Attack, params bound
+    spec = ScenarioSpec(attack="adaptive", budget=8)
+    attack = spec.build(plan)        # gradient-ascent vs THIS plan
+
+``attack`` may be any ``repro.core.attacks`` registry name, or the
+adaptive kinds ``"adaptive"`` (deviation objective by default) /
+``"autogm"`` (min-max descent objective) — those optimize against a
+``ServerPlan`` and therefore need ``build(plan)``.
+
+``byz_frac`` is the scenario's requested Byzantine fraction.  It is
+consumed by the LAUNCHERS (train / serve / bench / matrix) when they
+construct the cohort — the simulation engines take the split from their
+``FedProblem`` — so it is optional and ``n_byz(n)`` maps it to a count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from .plan import PlanError
+
+__all__ = ["ScenarioSpec", "ADAPTIVE_ATTACKS"]
+
+ADAPTIVE_ATTACKS = ("adaptive", "autogm")
+
+_OBJECTIVES = ("deviation", "descent")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One adversarial scenario.
+
+    ``attack``     — registry name (none/bf/sf/lf/alie/ipm/shb/gauss) or
+                     "adaptive" / "autogm"
+    ``byz_frac``   — requested Byzantine fraction in [0, 1] (None: the
+                     caller owns the count, e.g. a --n-byz flag)
+    ``z_max``      — ALIE strength (also the adaptive warm start)
+    ``eps``        — IPM scale
+    ``scale``      — gauss payload scale
+    ``budget``     — adaptive inner ascent steps (the min-max budget)
+    ``lr``         — adaptive ascent stepsize (relative to ||mu_good||)
+    ``objective``  — adaptive damage objective: "deviation" | "descent"
+    """
+
+    attack: str = "none"
+    byz_frac: Optional[float] = None
+    z_max: float = 1.5
+    eps: float = 1.1
+    scale: float = 10.0
+    budget: int = 8
+    lr: float = 0.5
+    objective: str = "deviation"
+
+    def __post_init__(self):
+        from ..core.attacks import ATTACKS
+
+        known = set(ATTACKS) | set(ADAPTIVE_ATTACKS)
+        if self.attack not in known:
+            raise PlanError(
+                f"unknown scenario attack {self.attack!r}; have "
+                f"{sorted(known)}"
+            )
+        if self.byz_frac is not None and not 0.0 <= self.byz_frac <= 1.0:
+            raise PlanError(
+                f"byz_frac must be in [0, 1], got {self.byz_frac}"
+            )
+        for name in ("z_max", "eps", "scale", "lr"):
+            v = getattr(self, name)
+            if not v > 0:
+                raise PlanError(f"{name} must be > 0, got {v}")
+        if self.budget < 1:
+            raise PlanError(
+                f"adaptive budget must be >= 1, got {self.budget}"
+            )
+        if self.objective not in _OBJECTIVES:
+            raise PlanError(
+                f"unknown adaptive objective {self.objective!r}; have "
+                f"{_OBJECTIVES}"
+            )
+
+    # ------------------------------------------------------------------
+    def n_byz(self, n: int) -> Optional[int]:
+        """The Byzantine count for an ``n``-client cohort (None when the
+        scenario leaves the fraction caller-owned)."""
+        if self.byz_frac is None:
+            return None
+        return int(round(self.byz_frac * n))
+
+    def build(self, plan=None):
+        """The scenario's :class:`repro.core.attacks.Attack`.  Adaptive
+        kinds optimize against ``plan`` (required for them); registry
+        attacks get their tunables bound."""
+        from ..core.attacks import make_attack
+
+        if self.attack in ADAPTIVE_ATTACKS:
+            if plan is None:
+                raise PlanError(
+                    f"attack {self.attack!r} gradient-ascends against the "
+                    "server's aggregation rule; pass the ServerPlan: "
+                    "spec.build(plan)"
+                )
+            from ..scenarios.adaptive import make_adaptive_attack
+
+            objective = ("descent" if self.attack == "autogm"
+                         else self.objective)
+            return make_adaptive_attack(
+                plan, budget=self.budget, lr=self.lr, objective=objective,
+                name=self.attack,
+            )
+        params = {}
+        if self.attack == "alie":
+            params["z_max"] = self.z_max
+        elif self.attack == "ipm":
+            params["eps"] = self.eps
+        elif self.attack == "gauss":
+            params["scale"] = self.scale
+        return make_attack(self.attack, **params)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise PlanError(
+                f"unknown scenario fields {sorted(unknown)}; have "
+                f"{sorted(fields)}"
+            )
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, doc: str) -> "ScenarioSpec":
+        try:
+            d = json.loads(doc)
+        except ValueError as e:
+            raise PlanError(f"unparseable scenario JSON: {e}") from e
+        if not isinstance(d, dict):
+            raise PlanError("scenario JSON must be an object")
+        return cls.from_dict(d)

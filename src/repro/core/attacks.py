@@ -16,19 +16,26 @@ workers are ignored by the caller).  ``AttackContext`` carries:
   g_prev:    (d,)    server estimate g^k
   byz_majority: ()   bool — byzantines > half of the sampled cohort
   key:       PRNG key
+
+``AttackContext`` is a frozen, pytree-registered dataclass: attack stages
+jit/vmap over it directly (the in-graph omniscient stage of
+:mod:`repro.scenarios` vmaps attacks across rounds and threads per-round
+PRNG keys through ``ctx.key``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AttackContext", "Attack", "make_attack", "ATTACKS"]
+__all__ = ["AttackContext", "Attack", "make_attack", "ATTACKS",
+           "ATTACK_PARAMS"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class AttackContext:
     honest: jnp.ndarray
     good_mask: jnp.ndarray
@@ -39,6 +46,20 @@ class AttackContext:
     g_prev: jnp.ndarray
     byz_majority: jnp.ndarray
     key: jax.Array
+
+    def replace(self, **kw) -> "AttackContext":
+        return dataclasses.replace(self, **kw)
+
+
+_CTX_FIELDS = tuple(f.name for f in dataclasses.fields(AttackContext))
+
+# every field is round data (arrays), so they all flatten as children —
+# jit retraces on shape, not on value, and vmap can batch whole contexts
+jax.tree_util.register_pytree_node(
+    AttackContext,
+    lambda c: (tuple(getattr(c, f) for f in _CTX_FIELDS), None),
+    lambda _, ch: AttackContext(*ch),
+)
 
 
 def _good_sampled_stats(ctx: AttackContext):
@@ -51,7 +72,9 @@ def _good_sampled_stats(ctx: AttackContext):
 
 
 def bit_flip(ctx: AttackContext) -> jnp.ndarray:
-    """BF: send the negation of the honest message (sign-flipped grads)."""
+    """BF/SF: send the negation of the honest message (sign-flipped
+    grads).  ``"bf"`` and ``"sf"`` are registry aliases of this one
+    implementation."""
     return -ctx.honest
 
 
@@ -86,10 +109,6 @@ def shift_back(ctx: AttackContext) -> jnp.ndarray:
     return jnp.where(ctx.byz_majority, rows, ctx.honest)
 
 
-def sign_flip(ctx: AttackContext) -> jnp.ndarray:
-    return -ctx.honest
-
-
 def random_gauss(ctx: AttackContext, scale: float = 10.0) -> jnp.ndarray:
     noise = jax.random.normal(ctx.key, ctx.honest.shape, jnp.float32)
     return (scale * noise).astype(ctx.honest.dtype)
@@ -104,6 +123,9 @@ class Attack:
     name: str
     fn: Callable[[AttackContext], jnp.ndarray]
     data_level: bool = False  # LF flips labels in the pipeline instead
+    omniscient: bool = False  # payload reads the sampled good cohort
+    needs_iterates: bool = False  # payload reads x0/x_now (SHB)
+    adaptive: bool = False  # inner optimization loop vs the aggregator
 
     def __call__(self, ctx: AttackContext) -> jnp.ndarray:
         return self.fn(ctx)
@@ -113,15 +135,39 @@ ATTACKS = {
     "none": Attack("none", no_attack),
     "bf": Attack("bf", bit_flip),
     "lf": Attack("lf", label_flip_proxy, data_level=True),
-    "alie": Attack("alie", a_little_is_enough),
-    "ipm": Attack("ipm", inner_product_manipulation),
-    "shb": Attack("shb", shift_back),
-    "sf": Attack("sf", sign_flip),
+    "alie": Attack("alie", a_little_is_enough, omniscient=True),
+    "ipm": Attack("ipm", inner_product_manipulation, omniscient=True),
+    "shb": Attack("shb", shift_back, omniscient=True, needs_iterates=True),
+    # "sf" is an alias of the single negate-the-message implementation
+    "sf": Attack("sf", bit_flip),
     "gauss": Attack("gauss", random_gauss),
 }
 
+# per-attack tunables accepted by make_attack(name, **params)
+ATTACK_PARAMS = {
+    "alie": ("z_max",),
+    "ipm": ("eps",),
+    "gauss": ("scale",),
+}
 
-def make_attack(name: str) -> Attack:
+
+def make_attack(name: str, **params) -> Attack:
+    """Registry lookup; ``params`` (see ``ATTACK_PARAMS``) bind attack
+    tunables, e.g. ``make_attack("alie", z_max=2.0)``."""
+    if isinstance(name, Attack):  # pass-through for pre-built attacks
+        return name
     if name not in ATTACKS:
         raise ValueError(f"unknown attack {name!r}; have {sorted(ATTACKS)}")
-    return ATTACKS[name]
+    base = ATTACKS[name]
+    if not params:
+        return base
+    allowed = ATTACK_PARAMS.get(name, ())
+    bad = sorted(set(params) - set(allowed))
+    if bad:
+        raise ValueError(
+            f"attack {name!r} takes no parameter(s) {bad}; "
+            f"allowed: {sorted(allowed)}"
+        )
+    return dataclasses.replace(
+        base, fn=functools.partial(base.fn, **params)
+    )

@@ -21,11 +21,11 @@ import jax.numpy as jnp
 
 from typing import TYPE_CHECKING
 
-from .attacks import AttackContext, make_attack
+from .attacks import make_attack
 from .problems import FedProblem
 
 if TYPE_CHECKING:  # runtime import is lazy: repro.api imports repro.core
-    from ..api import ServerPlan
+    from ..api import ScenarioSpec, ServerPlan
 
 __all__ = ["ClippedPPConfig", "ClippedPPState", "ClippedPPMomentum"]
 
@@ -41,6 +41,9 @@ class ClippedPPConfig:
     # clipping at lambda_k = 1.0 * ||x^k - x^{k-1}||
     plan: Optional[ServerPlan] = None
     attack: str = "none"
+    # a repro.api.ScenarioSpec overrides ``attack`` (tunables + the
+    # adaptive-adversary budget; adaptive kinds target the resolved plan)
+    scenario: Optional[ScenarioSpec] = None
     seed: int = 0
 
     def resolve_plan(self) -> "ServerPlan":
@@ -75,7 +78,13 @@ class ClippedPPMomentum:
         self.plan = cfg.resolve_plan()
         self.server = self.plan.build()
         self.agg = self.server.aggregator
-        self.attack = make_attack(cfg.attack)
+        from ..scenarios.stage import AttackStage
+
+        self.attack = (
+            cfg.scenario.build(self.plan) if cfg.scenario is not None
+            else make_attack(cfg.attack)
+        )
+        self.attack_stage = AttackStage(self.attack)
 
     def init(self, x0: Optional[jnp.ndarray] = None) -> ClippedPPState:
         x = self.problem.x0 if x0 is None else x0
@@ -129,20 +138,13 @@ class ClippedPPMomentum:
             # is user-chosen and applies from step 0.
             lam = jnp.where(state.step == 0, jnp.float32(3.4e37), lam)
 
-        ctx = AttackContext(
-            honest=momenta,
-            good_mask=good,
-            sampled=sampled,
-            x_now=state.x,
-            x_prev=state.x_prev,
-            x0=state.x0,
-            g_prev=state.g,
-            byz_majority=jnp.sum((~good & sampled).astype(jnp.int32))
-            > jnp.sum((good & sampled).astype(jnp.int32)),
-            key=k_att,
+        from ..scenarios.stage import make_context
+
+        ctx = make_context(
+            momenta, good_mask=good, sampled=sampled, x_now=state.x,
+            x_prev=state.x_prev, x0=state.x0, g_prev=state.g, key=k_att,
         )
-        payload = self.attack(ctx)
-        msgs = jnp.where(good[:, None], momenta, payload)
+        msgs = self.attack_stage.corrupt(ctx)
 
         # eq. (10): aggregate clipped differences to the previous estimate
         # (fused clip->aggregate on the pallas backend); plans without a

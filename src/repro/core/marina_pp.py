@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from typing import TYPE_CHECKING
 
 from .aggregators import Aggregator
-from .attacks import Attack, AttackContext, make_attack
+from .attacks import Attack, make_attack
 from .compressors import (
     Compressor,
     identity as _identity_compressor,
@@ -39,7 +39,7 @@ from .compressors import (
 from .problems import FedProblem
 
 if TYPE_CHECKING:  # runtime import is lazy: repro.api imports repro.core
-    from ..api import ServerPlan
+    from ..api import ScenarioSpec, ServerPlan
 
 __all__ = ["MarinaPPConfig", "MarinaPPState", "ByzVRMarinaPP"]
 
@@ -57,6 +57,10 @@ class MarinaPPConfig:
     # lambda_k = 1.0 * ||x^{k+1} - x^k||, no compression.
     plan: Optional[ServerPlan] = None
     attack: str = "none"
+    # a repro.api.ScenarioSpec overrides ``attack`` and carries the
+    # attack tunables (z_max/eps/scale) and the adaptive-adversary
+    # budget; adaptive kinds optimize against the resolved plan
+    scenario: Optional[ScenarioSpec] = None
     seed: int = 0
 
     def resolve_plan(self) -> "ServerPlan":
@@ -93,7 +97,15 @@ class ByzVRMarinaPP:
         self.compressor: Compressor = (
             self.server.compressor or _identity_compressor()
         )
-        self.attack: Attack = make_attack(cfg.attack)
+        # the in-graph attack stage (repro.scenarios): a ScenarioSpec
+        # wins over the plain ``attack`` registry name
+        from ..scenarios.stage import AttackStage
+
+        self.attack: Attack = (
+            cfg.scenario.build(self.plan) if cfg.scenario is not None
+            else make_attack(cfg.attack)
+        )
+        self.attack_stage = AttackStage(self.attack)
         if not (1 <= cfg.C <= cfg.C_hat <= problem.n_clients):
             raise ValueError("need 1 <= C <= C_hat <= n")
 
@@ -169,20 +181,13 @@ class ByzVRMarinaPP:
         return rank < size  # (n,) sampled mask
 
     def _attack_ctx(self, honest, sampled, x_new, x_old, g_prev, x0, key):
+        from ..scenarios.stage import make_context
+
         n = self.problem.n_clients
         good = jnp.arange(n) < self.problem.n_good
-        n_good_s = jnp.sum((good & sampled).astype(jnp.int32))
-        n_byz_s = jnp.sum((~good & sampled).astype(jnp.int32))
-        return AttackContext(
-            honest=honest,
-            good_mask=good,
-            sampled=sampled,
-            x_now=x_new,
-            x_prev=x_old,
-            x0=x0,
-            g_prev=g_prev,
-            byz_majority=n_byz_s > n_good_s,
-            key=key,
+        return make_context(
+            honest, good_mask=good, sampled=sampled, x_now=x_new,
+            x_prev=x_old, x0=x0, g_prev=g_prev, key=key,
         )
 
     # ------------------------------------------------------------------
@@ -190,7 +195,6 @@ class ByzVRMarinaPP:
         cfg = self.cfg
         prob = self.problem
         n = prob.n_clients
-        good = jnp.arange(n) < prob.n_good
 
         key, k_bern, k_cohort, k_q, k_att, k_agg = jax.random.split(state.key, 6)
         c_k = jax.random.bernoulli(k_bern, cfg.p)
@@ -206,8 +210,7 @@ class ByzVRMarinaPP:
             ctx = self._attack_ctx(
                 grads, sampled, x_new, state.x, state.g, state.x0, k_att
             )
-            payload = self.attack(ctx)
-            msgs = jnp.where(good[:, None], grads, payload)
+            msgs = self.attack_stage.corrupt(ctx)
             return self.server.aggregate(msgs, mask=sampled, key=k_agg)
 
         def diff_branch(_):
@@ -217,8 +220,7 @@ class ByzVRMarinaPP:
             ctx = self._attack_ctx(
                 qdiffs, sampled, x_new, state.x, state.g, state.x0, k_att
             )
-            payload = self.attack(ctx)
-            msgs = jnp.where(good[:, None], qdiffs, payload)
+            msgs = self.attack_stage.corrupt(ctx)
             if lam is None:  # no clip stage: skip the norm pass entirely
                 return state.g + self.server.aggregate(
                     msgs, mask=sampled, key=k_agg

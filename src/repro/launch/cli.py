@@ -29,8 +29,8 @@ from repro.api import (
     ServerPlan,
 )
 
-__all__ = ["add_fault_args", "add_plan_args", "fault_plan_from_args",
-           "plan_from_args"]
+__all__ = ["add_attack_args", "add_fault_args", "add_plan_args",
+           "fault_plan_from_args", "plan_from_args", "scenario_from_args"]
 
 
 def add_plan_args(ap, *, aggregator: str = "cm", placement: str = "sharded",
@@ -89,6 +89,38 @@ def add_fault_args(ap):
                    help="inline FaultPlan JSON or a path to one; empty "
                         "disables fault injection")
     return g
+
+
+def add_attack_args(ap, *, attack: str = "none"):
+    """Register the adversarial-scenario flags shared by train, serve
+    ``--mode stream`` and the load-generator benchmark: which attack the
+    byzantine rows run and its tunables (repro.api.ScenarioSpec)."""
+    g = ap.add_argument_group(
+        "adversarial scenario",
+        "the byzantine payload (repro.core.attacks registry, plus the "
+        "adaptive gradient-ascent adversary) and its tunables",
+    )
+    g.add_argument("--attack", default=attack,
+                   help="registry attack (none, bf, sf, lf, ipm, alie, "
+                        "shb, gauss) or an adaptive kind "
+                        "(adaptive, autogm)")
+    g.add_argument("--byz-frac", type=float, default=None, dest="byz_frac",
+                   help="byzantine fraction in [0, 1]; overrides "
+                        "launcher-specific --n-byz when set")
+    g.add_argument("--z-max", type=float, default=1.5, dest="z_max",
+                   help="ALIE deviation multiple (mu - z_max * sigma)")
+    return g
+
+
+def scenario_from_args(args):
+    """The ScenarioSpec an ``add_attack_args`` parser describes."""
+    from repro.api import ScenarioSpec
+
+    return ScenarioSpec(
+        attack=args.attack,
+        byz_frac=args.byz_frac,
+        z_max=args.z_max,
+    )
 
 
 def fault_plan_from_args(args):

@@ -253,60 +253,41 @@ def _main_score(args):
     print(f"[serve] outliers flagged per request: {flagged.tolist()}")
 
 
-def _rng_state_tree(rng):
-    """numpy MT19937 state as a checkpointable pytree of arrays."""
-    import numpy as np
-
-    name, keys, pos, has_gauss, cached = rng.get_state()
-    assert name == "MT19937"
-    return {
-        "keys": np.asarray(keys, np.uint32),
-        "pos": np.int64(pos),
-        "has_gauss": np.int64(has_gauss),
-        "cached_gaussian": np.float64(cached),
-    }
-
-
-def _set_rng_state(rng, tree):
-    import numpy as np
-
-    rng.set_state((
-        "MT19937",
-        np.asarray(tree["keys"], np.uint32),
-        int(np.asarray(tree["pos"])),
-        int(np.asarray(tree["has_gauss"])),
-        float(np.asarray(tree["cached_gaussian"])),
-    ))
-
-
 def _main_stream(args):
     """The stream-mode server loop: synthetic open-loop byzantine
-    clients, optional fault injection (``--fault-json``), per-round
-    result emission (``--emit-rounds``), and crash-safe
-    checkpoint/resume (``--ckpt-dir`` / ``--resume``).
+    clients mounting real registry attacks
+    (``repro.scenarios.SyntheticCohort``), optional fault injection
+    (``--fault-json``), per-round result emission (``--emit-rounds``),
+    and crash-safe checkpoint/resume (``--ckpt-dir`` / ``--resume``).
 
-    Determinism contract: the client stream is a seeded RNG advanced one
-    row per submission, and every checkpoint stores (server state, RNG
-    state, submission cursor) at a pump boundary — so a run SIGKILLed at
-    any instant and restarted with ``--resume`` replays the lost
-    submissions exactly and closes every round with an aggregate
-    bitwise-identical to the uninterrupted run's."""
+    Determinism contract: the client stream is STATELESS — block b of n
+    submissions is drawn from ``RandomState([seed, b])``, so any cursor
+    position regenerates its row without replaying the stream — and
+    every checkpoint stores (server state, submission cursor) at a pump
+    boundary.  A run SIGKILLed at any instant and restarted with
+    ``--resume`` therefore replays the lost submissions exactly and
+    closes every round with an aggregate bitwise-identical to the
+    uninterrupted run's."""
     import json as _json
     import os
     import time
 
     import numpy as np
 
+    from repro.scenarios import SyntheticCohort
     from repro.serve import AggregationServer, FaultInjector, ServeConfig
     from repro.serve import recovery
 
-    from .cli import fault_plan_from_args, plan_from_args
+    from .cli import fault_plan_from_args, plan_from_args, scenario_from_args
 
+    n, d = args.clients, args.dim
+    scenario = scenario_from_args(args)
+    n_byz = (scenario.n_byz(n) if scenario.byz_frac is not None
+             else args.n_byz)
     plan = plan_from_args(
-        args, byz_bound=args.n_byz,
+        args, byz_bound=n_byz,
         clip_radius=args.clip_radius if args.clip_radius > 0 else None,
     )
-    n, d = args.clients, args.dim
     cfg = ServeConfig(
         n_slots=n, dim=d,
         cohort_size=args.cohort_size or None,
@@ -324,16 +305,18 @@ def _main_stream(args):
         front = FaultInjector(fault_plan, server)
         print(f"[serve] fault injection ON: {fault_plan.to_json()}")
 
-    rng = np.random.RandomState(args.seed)
+    cohort = SyntheticCohort(
+        scenario.build(), n_slots=n, dim=d, n_byz=n_byz,
+        z_max=scenario.z_max,
+    )
     cursor = 0  # total synthetic submissions so far (slot = cursor % n)
-    extra_template = {"rng": _rng_state_tree(rng), "cursor": np.int64(0)}
+    extra_template = {"cursor": np.int64(0)}
     if args.ckpt_dir and args.resume:
         restored = recovery.restore_server(
             server, args.ckpt_dir, extra_template=extra_template
         )
         if restored is not None:
             step, extra = restored
-            _set_rng_state(rng, extra["rng"])
             cursor = int(np.asarray(extra["cursor"]))
             print(f"[serve] resumed from checkpoint step {step} "
                   f"(round {server.round_id}, cursor {cursor})")
@@ -367,22 +350,25 @@ def _main_stream(args):
         emit.flush()
         os.fsync(emit.fileno())
 
+    block, block_rows = -1, None
     while server.metrics.rounds_closed < args.rounds:
         # synthetic open-loop clients: slots submit round-robin, the
-        # trailing n_byz of them with 100x payloads
-        slot = cursor % n
-        row = rng.randn(d).astype(np.float32)
-        if slot >= n - args.n_byz:
-            row *= 100.0
-        front.submit(slot, row)
+        # trailing n_byz running the scenario's attack over this block's
+        # honest rows; block b is a pure function of (seed, b), so resume
+        # at any cursor regenerates the stream without replaying it
+        b, slot = divmod(cursor, n)
+        if b != block:
+            block_rows = cohort.round_rows(
+                np.random.RandomState([args.seed, b])
+            )
+            block = b
+        front.submit(slot, block_rows[slot])
         cursor += 1
         closed = front.pump()
         for r in closed:
             emit_round(r)
         if ckpt is not None and closed:
-            ckpt.observe(len(closed), extra={
-                "rng": _rng_state_tree(rng), "cursor": np.int64(cursor),
-            })
+            ckpt.observe(len(closed), extra={"cursor": np.int64(cursor)})
         if args.pump_sleep_ms > 0:
             time.sleep(args.pump_sleep_ms / 1e3)
     if emit is not None:
@@ -392,6 +378,7 @@ def _main_stream(args):
     print(f"[serve] streamed {m['rows_ingested']} rows -> "
           f"{m['rounds_closed']} rounds "
           f"({m['rounds_degraded']} degraded, rule={plan.aggregate.rule}, "
+          f"attack={cohort.attack.name} x{n_byz}, "
           f"cohort_size={cfg.resolved_cohort_size}/{n})")
     for k, v in sorted(m.items()):
         print(f"[serve]   {k} = {v}")
@@ -403,7 +390,7 @@ def _main_stream(args):
 def main():
     import argparse
 
-    from .cli import add_fault_args, add_plan_args
+    from .cli import add_attack_args, add_fault_args, add_plan_args
 
     ap = argparse.ArgumentParser(description="serving driver")
     ap.add_argument("--mode", default="decode",
@@ -464,6 +451,7 @@ def main():
                          "knob: widens the kill window for the "
                          "kill-and-resume test)")
     add_plan_args(ap, placement="naive")
+    add_attack_args(ap, attack="gauss")  # stream mode's synthetic byz rows
     add_fault_args(ap)
     args = ap.parse_args()
     if args.mode == "score":

@@ -160,20 +160,24 @@ def _leafwise_randk(key, tree, frac):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def _attack_payload(cfg: ByzTrainConfig, key, honest_tree):
-    if cfg.attack == "bf":
-        return jax.tree_util.tree_map(lambda l: -l, honest_tree)
-    if cfg.attack == "gauss":
-        leaves, treedef = jax.tree_util.tree_flatten(honest_tree)
-        keys = jax.random.split(key, len(leaves))
-        return jax.tree_util.tree_unflatten(
-            treedef,
-            [
-                (10.0 * jax.random.normal(k, l.shape, F32)).astype(l.dtype)
-                for k, l in zip(keys, leaves)
-            ],
+def _attack_stage(cfg: ByzTrainConfig):
+    """The worker-stacked attack stage (repro.scenarios.TreeAttackStage)
+    for the config's attack — the full registry (bf/sf/lf/alie/ipm/gauss)
+    runs leafwise at mesh scale; ``cfg.attack`` may be a registry name or
+    a pre-built ``repro.core.attacks.Attack`` (e.g. from a ScenarioSpec).
+    Iterate-reading (shb) and adaptive attacks are simulation-engine
+    features and rejected here with a pointed error."""
+    from repro.scenarios.stage import TreeAttackStage
+
+    stage = TreeAttackStage(cfg.attack)
+    if stage.attack.needs_iterates:
+        raise PlanError(
+            f"attack {stage.attack.name!r} reads the iterates (x0, x_now); "
+            "the mesh trainer does not track x0 — pick a message-level "
+            "attack (bf/sf/lf/alie/ipm/gauss) or run shb through the "
+            "simulation engines (repro.core)"
         )
-    return honest_tree  # "none"
+    return stage
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +194,7 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
     """
     plan = resolve_plan(cfg)
     server = plan.build(mesh)
+    attack_stage = _attack_stage(cfg)
     # cohort and worker axes are trainer-owned knobs when the plan leaves
     # them unset; an explicit plan.cohort / plan.schedule.worker_axes wins
     waxes = (tuple(plan.schedule.worker_axes)
@@ -309,16 +314,20 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
                 lambda a, b: a - b, grads_new, grads_old
             )
 
-            def message(i, d_i):
-                mk = jax.random.fold_in(k_q, i)
+            def compress(i, d_i):
                 if compress_frac > 0.0:
-                    d_i = _leafwise_randk(mk, d_i, compress_frac)
-                payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), d_i)
-                return jax.tree_util.tree_map(
-                    lambda h, a: jnp.where(byz[i], a, h), d_i, payload
-                )
+                    d_i = _leafwise_randk(
+                        jax.random.fold_in(k_q, i), d_i, compress_frac
+                    )
+                return d_i
 
-            msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), diff)
+            honest = jax.vmap(compress, in_axes=(0, 0))(jnp.arange(W), diff)
+            # the in-graph omniscient attack stage: byzantine rows see the
+            # sampled honest messages of THIS round (ALIE/IPM statistics
+            # computed per leaf == per coordinate of the full message)
+            msgs = attack_stage.corrupt_tree(
+                honest, good_mask=~byz, sampled=sampled, key=k_att
+            )
             msgs = grad_constraint(msgs)
             # server-side clip (Alg.1 l.10) fused into the aggregation:
             # one batched norm pass + factors applied in-register by the
@@ -334,13 +343,9 @@ def make_train_step(model_cfg: ModelConfig, mesh, cfg: ByzTrainConfig):
             )
 
         def full_branch(_):
-            def message(i, g_i):
-                payload = _attack_payload(cfg, jax.random.fold_in(k_att, i), g_i)
-                return jax.tree_util.tree_map(
-                    lambda h, a: jnp.where(byz[i], a, h), g_i, payload
-                )
-
-            msgs = jax.vmap(message, in_axes=(0, 0))(jnp.arange(W), grads_new)
+            msgs = attack_stage.corrupt_tree(
+                grads_new, good_mask=~byz, sampled=sampled, key=k_att
+            )
             msgs = grad_constraint(msgs)
             # full-gradient rounds aggregate RAW gradients (Alg. 1): no
             # clip even under a static-radius plan
@@ -393,7 +398,8 @@ def main():
 
     from repro.configs.registry import get_config, get_smoke_config
     from repro.data.pipeline import make_batch_iterator
-    from .cli import add_plan_args, plan_from_args
+    from .cli import (add_attack_args, add_plan_args, plan_from_args,
+                      scenario_from_args)
     from .mesh import make_debug_mesh, make_production_mesh
 
     ap = argparse.ArgumentParser(description="Byz-VR-MARINA-PP mesh trainer")
@@ -405,11 +411,11 @@ def main():
     ap.add_argument("--per-worker-batch", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.1)
     ap.add_argument("--n-byz", type=int, default=1)
-    ap.add_argument("--attack", default="bf")
     ap.add_argument("--shard-mode", default="tp")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     add_plan_args(ap)  # --aggregator/--agg-schedule/--schedule/... (shared)
+    add_attack_args(ap, attack="bf")  # --attack/--byz-frac/--z-max (shared)
     args = ap.parse_args()
 
     if args.smoke:
@@ -422,12 +428,14 @@ def main():
         model_cfg = get_config(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)
 
-    plan = plan_from_args(args, byz_bound=args.n_byz, clip_alpha=2.0)
+    W = num_workers(mesh)
+    scenario = scenario_from_args(args)
+    n_byz = scenario.n_byz(W) if scenario.byz_frac is not None else args.n_byz
+    plan = plan_from_args(args, byz_bound=n_byz, clip_alpha=2.0)
     tc = ByzTrainConfig.from_plan(
-        plan, gamma=args.gamma, n_byz=args.n_byz, attack=args.attack,
+        plan, gamma=args.gamma, n_byz=n_byz, attack=scenario.build(),
         shard_mode=args.shard_mode,
     )
-    W = num_workers(mesh)
     print(f"[train] {model_cfg.name} on mesh {dict(mesh.shape)} "
           f"({W} workers, {tc.n_byz} byzantine, "
           f"agg={plan.aggregate.rule})")

@@ -1,0 +1,57 @@
+"""Adversarial scenario engine: omniscient + adaptive attacks and the
+gated resilience matrix.
+
+Three layers (see ISSUE/ROADMAP "Adversarial scenario engine"):
+
+- :mod:`repro.scenarios.stage` — the in-graph attack stage.  Attacks
+  are functions of a frozen pytree :class:`repro.core.attacks.AttackContext`;
+  the stage runs inside the jitted training step so omniscient attacks
+  (ALIE, IPM, shift-back) see the sampled honest rows of the current
+  round, in matrix form for the simulation engines, leafwise pytree form
+  for the mesh trainer, and host-side form for the streaming server's
+  synthetic clients.
+- :mod:`repro.scenarios.adaptive` — a gradient-ascent adversary that
+  optimizes its payload against the differentiable aggregators (jnp
+  rules directly, fused Pallas rules through a ``custom_vjp`` jnp-shadow
+  backward), with a min-max inner loop under a step budget.
+- :mod:`repro.scenarios.matrix` — the resilience matrix: attack x rule
+  x compressor x participation x byzantine-fraction sweeps reduced to
+  breakdown-point curves, emitted into ``BENCH_kernels.json`` and gated
+  by ``benchmarks/check_regression.py``.
+
+Scenarios are declared with :class:`repro.api.ScenarioSpec` (alongside
+``ServerPlan``) and consumed by both engines, the mesh trainer, the
+serve loop, and the load-generator benchmark.
+"""
+from .adaptive import (
+    ADAPTIVE_OBJECTIVES,
+    differentiable_aggregate,
+    jnp_shadow_plan,
+    make_adaptive_attack,
+)
+from .matrix import (
+    MatrixGrid,
+    SMOKE_GRID,
+    append_resilience,
+    breakdown_points,
+    collect_resilience,
+    run_cell,
+)
+from .stage import AttackStage, SyntheticCohort, TreeAttackStage, make_context
+
+__all__ = [
+    "ADAPTIVE_OBJECTIVES",
+    "AttackStage",
+    "MatrixGrid",
+    "SMOKE_GRID",
+    "SyntheticCohort",
+    "TreeAttackStage",
+    "append_resilience",
+    "breakdown_points",
+    "collect_resilience",
+    "differentiable_aggregate",
+    "jnp_shadow_plan",
+    "make_adaptive_attack",
+    "make_context",
+    "run_cell",
+]

@@ -1,0 +1,162 @@
+"""Adaptive (optimization-based) attacks.
+
+The strongest adversary class the paper's theory targets: instead of a
+fixed payload recipe, the Byzantines run gradient ASCENT on the server's
+own aggregation rule.  Two pieces:
+
+- :func:`differentiable_aggregate` — a differentiable view of a
+  ``ServerPlan``'s clip -> bucket -> aggregate composition.  The jnp
+  backend rules (cm / trimmed_mean / mean / rfa / centered_clip) are
+  pure ``jnp`` and differentiate directly (the iterative rules are
+  static-trip-count ``fori_loop``s, i.e. reverse-mode-safe scans).  The
+  fused Pallas kernels are not differentiable, so a pallas-backed plan
+  is wrapped in ``jax.custom_vjp``: the forward pass runs the real
+  fused kernels, the backward pass differentiates the plan's jnp shadow
+  — sound because the backends are bitwise trajectory-equivalent
+  (tests/test_backend_trajectory.py).
+
+- :func:`make_adaptive_attack` — the min-max inner loop ("autogm"
+  style: the server minimizes through its robust rule, the adversary
+  maximizes its damage objective within a step BUDGET).  Each round the
+  Byzantines pick one shared payload vector z, model the server's
+  response ``Agg(clip(messages(z)))`` including the round's clip radius
+  lambda_k = alpha * ||x^k - x^{k-1}||, and run ``budget`` normalized
+  ascent steps on
+
+      deviation:  || Agg(...) - mean(sampled good) ||^2
+      descent:   - < Agg(...),  mean(sampled good) >
+
+  entirely in-graph (``lax.fori_loop``), so the attack jits into the
+  engines' training step like any registry attack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregators import resolve_backend
+from repro.core.attacks import Attack, AttackContext, _good_sampled_stats
+
+__all__ = ["differentiable_aggregate", "jnp_shadow_plan",
+           "make_adaptive_attack", "ADAPTIVE_OBJECTIVES"]
+
+ADAPTIVE_OBJECTIVES = ("deviation", "descent")
+
+
+def jnp_shadow_plan(plan):
+    """The plan's differentiable twin: same clip/bucket/aggregate
+    stages, jnp backend, naive placement (the engine form the adversary
+    differentiates through)."""
+    sched = dataclasses.replace(
+        plan.schedule, backend="jnp", placement="naive",
+        blocks="sequential",
+    )
+    return dataclasses.replace(plan, schedule=sched, compress=None)
+
+
+def differentiable_aggregate(plan):
+    """``fn(msgs, *, mask, key, radius=None) -> (d,)``, differentiable
+    in ``msgs``.  jnp-backed plans run as-is; pallas-backed plans get a
+    ``custom_vjp`` pairing the fused forward with the jnp-shadow
+    backward."""
+    shadow_step = jnp_shadow_plan(plan).build()
+
+    def shadow_call(msgs, mask, key, radius):
+        if radius is None:
+            return shadow_step.aggregate(msgs, mask=mask, key=key)
+        return shadow_step(msgs, mask=mask, key=key, radius=radius)
+
+    if resolve_backend(plan.schedule.backend) == "jnp":
+        def call(msgs, *, mask, key, radius=None):
+            return shadow_call(msgs, mask, key, radius)
+        return call
+
+    # the adversary models the server in engine (naive) form; a sharded
+    # plan keeps its fused pallas kernels but drops the mesh placement
+    primal_step = dataclasses.replace(
+        plan,
+        schedule=dataclasses.replace(plan.schedule, placement="naive",
+                                     blocks="sequential"),
+        compress=None,
+    ).build()
+
+    def call(msgs, *, mask, key, radius=None):
+        def primal(m):
+            if radius is None:
+                return primal_step.aggregate(m, mask=mask, key=key)
+            return primal_step(m, mask=mask, key=key, radius=radius)
+
+        @jax.custom_vjp
+        def f(m):
+            return primal(m)
+
+        def fwd(m):
+            return primal(m), m
+
+        def bwd(m, ct):
+            return jax.vjp(
+                lambda mm: shadow_call(mm, mask, key, radius), m
+            )[1](ct)
+
+        f.defvjp(fwd, bwd)
+        return f(msgs)
+
+    return call
+
+
+def _round_radius(plan, ctx: AttackContext):
+    """The clip radius the server will apply this round, as the
+    (protocol-aware) adversary models it."""
+    if plan.clip is None:
+        return None
+    if plan.clip.radius is not None:
+        return jnp.float32(plan.clip.radius)
+    return jnp.float32(plan.clip.alpha) * jnp.linalg.norm(
+        ctx.x_now - ctx.x_prev
+    )
+
+
+def make_adaptive_attack(plan, *, budget: int = 8, lr: float = 0.5,
+                         objective: str = "deviation",
+                         name: str = "adaptive") -> Attack:
+    """Budgeted gradient-ascent adversary against ``plan``'s
+    (differentiable view of the) server step.  Returns a registry-shaped
+    :class:`Attack` usable anywhere a static attack is."""
+    if objective not in ADAPTIVE_OBJECTIVES:
+        raise ValueError(
+            f"unknown adaptive objective {objective!r}; have "
+            f"{ADAPTIVE_OBJECTIVES}"
+        )
+    if budget < 1:
+        raise ValueError(f"adaptive budget must be >= 1, got {budget}")
+    agg = differentiable_aggregate(plan)
+
+    def fn(ctx: AttackContext) -> jnp.ndarray:
+        mu, sigma = _good_sampled_stats(ctx)
+        radius = _round_radius(plan, ctx)
+        scale = jnp.linalg.norm(mu) + 1e-8
+
+        def damage(z):
+            rows = jnp.broadcast_to(z[None], ctx.honest.shape)
+            msgs = jnp.where(ctx.good_mask[:, None],
+                             ctx.honest.astype(jnp.float32), rows)
+            out = agg(msgs, mask=ctx.sampled, key=ctx.key, radius=radius)
+            if objective == "deviation":
+                return jnp.sum((out - mu) ** 2)
+            return -jnp.vdot(out, mu)
+
+        grad = jax.grad(damage)
+
+        def ascend(_, z):
+            g = grad(z)
+            return z + lr * scale * g / (jnp.linalg.norm(g) + 1e-12)
+
+        # warm start from ALIE's statistically-plausible shift, then
+        # spend the budget climbing the aggregator's own response
+        z0 = mu - 1.5 * sigma
+        z = jax.lax.fori_loop(0, budget, ascend, z0)
+        return jnp.broadcast_to(z[None], ctx.honest.shape)
+
+    return Attack(name, fn, omniscient=True, adaptive=True)

@@ -1,0 +1,260 @@
+"""Resilience matrix engine: breakdown-point curves, gated like perf.
+
+Grown from ``examples/attack_grid.py`` into the third layer of the
+scenario subsystem: sweep attack x rule x compressor x
+participation-rate x byzantine-fraction over the Algorithm-1 engine
+(``ByzVRMarinaPP`` on a seeded logistic problem), call each cell
+CONVERGED when its final optimality gap clears a fixed tolerance, and
+reduce every (rule, attack, participation, compressor) curve to its
+**breakdown point** — the smallest Byzantine fraction that breaks
+convergence (1.0 = survived every tested fraction).
+
+Determinism: fixed PRNG seeds, jnp backend, fixed grid — the same
+container produces bitwise-identical losses, so the breakdown map is a
+DETERMINISTIC robustness signature.  It lands in ``BENCH_kernels.json``
+under ``"resilience"`` (see ``collect_resilience`` /
+``append_resilience``) and ``benchmarks/check_regression.py`` hard-fails
+when a committed breakdown point shrinks — a robustness regression
+fails CI exactly like a lost kernel fusion.  Newly added cells are
+informational until the baseline is regenerated with them
+(first-landing convention).
+
+  PYTHONPATH=src python -m repro.scenarios.matrix --smoke
+  PYTHONPATH=src python -m repro.scenarios.matrix \
+      --rules cm,krum --attacks alie,shb,adaptive --byz-fracs 0.1,0.3
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MatrixGrid", "run_cell", "collect_resilience",
+           "append_resilience", "breakdown_points", "SMOKE_GRID"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixGrid:
+    """One resilience sweep: the axes plus the (fixed) cell economy."""
+    rules: tuple = ("mean", "cm")
+    attacks: tuple = ("gauss", "shb")
+    clips: tuple = ("clip", "noclip")  # the paper's central ablation
+    byz_fracs: tuple = (0.1, 0.25, 0.45)
+    participations: tuple = (0.2,)  # sampled cohort C = round(part * n)
+    compressors: tuple = ("none",)  # "none" | "randf<percent>"
+    clip_alpha: float = 1.0  # alpha of the "clip" cells
+    steps: int = 250
+    n_clients: int = 20
+    dim: int = 30
+    m: int = 200
+    gamma: float = 0.5
+    p: float = 0.2
+    batch: int = 32
+    bucket_s: int = 2
+    tol: float = 2e-2  # converged iff final gap < tol
+    seed: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# the CI smoke grid — small, deterministic, and the paper's Figure-1
+# story end to end: at C = 4 of n = 20 the unclipped cells break under
+# SHB the moment the sampled cohort can go byzantine-majority (0.45),
+# plain mean breaks under gauss at every fraction, and ONLY the clipped
+# robust composition (cm + clip) survives both families
+SMOKE_GRID = MatrixGrid()
+
+
+def _compress_spec(name: str):
+    from repro.api import CompressSpec
+
+    if name in ("none", ""):
+        return None
+    if name.startswith("randf"):
+        return CompressSpec(kind="rand_fraction",
+                            frac=int(name[len("randf"):]) / 100.0)
+    raise ValueError(f"unknown matrix compressor {name!r}; use 'none' or "
+                     "'randf<percent>' (e.g. randf50)")
+
+
+def _cell_key(rule: str, attack: str, clip: str, C: int,
+              compressor: str) -> str:
+    return f"{rule}.{attack}.{clip}.C{C}.{compressor}"
+
+
+def _fstar_cache():
+    cache = {}
+
+    def fstar(prob):
+        key = (prob.n_clients, prob.n_good)
+        if key not in cache:
+            lr = 1.0 / prob.smoothness()
+            g = prob.grad
+
+            def body(x, _):
+                return x - lr * g(x), None
+
+            x, _ = jax.lax.scan(body, prob.x0, None, length=2000)
+            cache[key] = float(prob.loss(x))
+        return cache[key]
+
+    return fstar
+
+
+def run_cell(grid: MatrixGrid, *, rule: str, attack: str, byz_frac: float,
+             participation: float, clip: str = "clip",
+             compressor: str = "none", fstar=None) -> dict:
+    """One (rule, attack, clip, byz_frac, participation, compressor)
+    cell: run the Algorithm-1 engine and report the final optimality
+    gap."""
+    from repro.api import (AggregatorSpec, BucketSpec, ClipSpec,
+                           ScenarioSpec, ScheduleSpec, ServerPlan)
+    from repro.core import ByzVRMarinaPP, MarinaPPConfig, logistic_problem
+
+    if clip not in ("clip", "noclip"):
+        raise ValueError(f"clip axis is 'clip' | 'noclip', got {clip!r}")
+    n = grid.n_clients
+    n_byz = int(round(byz_frac * n))
+    n_good = n - n_byz
+    C = max(1, int(round(participation * n)))
+    prob = logistic_problem(
+        jax.random.PRNGKey(grid.seed), n_clients=n, n_good=n_good,
+        m=grid.m, dim=grid.dim, homogeneous=True,
+    )
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=max(1, n_byz)),
+        clip=ClipSpec(alpha=grid.clip_alpha) if clip == "clip" else None,
+        compress=_compress_spec(compressor),
+        bucket=BucketSpec(s=grid.bucket_s) if grid.bucket_s >= 2 else None,
+        schedule=ScheduleSpec(backend="jnp"),
+    )
+    cfg = MarinaPPConfig(
+        gamma=grid.gamma, p=grid.p, C=C, C_hat=n, batch=grid.batch,
+        plan=plan, scenario=ScenarioSpec(attack=attack), seed=grid.seed + 1,
+    )
+    alg = ByzVRMarinaPP(prob, cfg)
+    _, metrics = jax.jit(lambda s: alg.run(grid.steps, s))(alg.init())
+    tail = jnp.asarray(metrics["loss"][-10:])
+    final = float(jnp.mean(tail))
+    fs = fstar(prob) if fstar is not None else 0.0
+    gap = final - fs
+    finite = bool(jnp.all(jnp.isfinite(tail)))
+    return {
+        "key": _cell_key(rule, attack, clip, C, compressor),
+        "byz_frac": byz_frac,
+        "n_byz": n_byz,
+        "gap": gap if finite else float("inf"),
+        "converged": finite and gap < grid.tol,
+    }
+
+
+def breakdown_points(cells: "list[dict]") -> dict:
+    """Reduce cells to {curve key: smallest byz_frac that broke
+    convergence} (1.0 when every tested fraction converged)."""
+    out = {}
+    for c in sorted(cells, key=lambda c: (c["key"], c["byz_frac"])):
+        k = c["key"]
+        if k not in out:
+            out[k] = 1.0
+        if out[k] == 1.0 and not c["converged"]:
+            out[k] = c["byz_frac"]
+    return out
+
+
+def collect_resilience(grid: MatrixGrid = SMOKE_GRID,
+                       progress=None) -> dict:
+    """Run the full sweep; returns the ``"resilience"`` payload block:
+    ``{"grid": ..., "breakdown": {curve: frac}, "gap": {cell: gap}}``."""
+    fstar = _fstar_cache()
+    cells = []
+    for rule in grid.rules:
+        for attack in grid.attacks:
+            for clip in grid.clips:
+                for part in grid.participations:
+                    for comp in grid.compressors:
+                        for frac in grid.byz_fracs:
+                            c = run_cell(
+                                grid, rule=rule, attack=attack,
+                                byz_frac=frac, participation=part,
+                                clip=clip, compressor=comp, fstar=fstar,
+                            )
+                            cells.append(c)
+                            if progress is not None:
+                                progress(c)
+    return {
+        "grid": grid.to_dict(),
+        "breakdown": breakdown_points(cells),
+        "gap": {
+            f"{c['key']}@{c['byz_frac']:.2f}": round(c["gap"], 6)
+            if c["gap"] != float("inf") else "inf"
+            for c in cells
+        },
+    }
+
+
+def append_resilience(json_path: str, res: dict) -> None:
+    """Merge the resilience block into an existing bench payload."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    payload["resilience"] = res
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def _parse_tuple(s: str, cast=str) -> tuple:
+    return tuple(cast(x) for x in s.split(",") if x)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="the CI grid (SMOKE_GRID): deterministic seeds, "
+                        "~a dozen cells")
+    ap.add_argument("--rules", default="mean,cm")
+    ap.add_argument("--attacks", default="gauss,shb",
+                    help="registry names plus 'adaptive'/'autogm'")
+    ap.add_argument("--clips", default="clip,noclip",
+                    help="the clip axis (the paper's central ablation)")
+    ap.add_argument("--byz-fracs", default="0.1,0.25,0.45")
+    ap.add_argument("--participations", default="0.2")
+    ap.add_argument("--compressors", default="none",
+                    help="'none' or 'randf<percent>' (e.g. randf50)")
+    ap.add_argument("--steps", type=int, default=SMOKE_GRID.steps)
+    ap.add_argument("--json-out", default="",
+                    help="merge the resilience block into this bench "
+                        "payload (BENCH_kernels.json)")
+    args = ap.parse_args()
+
+    grid = SMOKE_GRID if args.smoke else MatrixGrid(
+        rules=_parse_tuple(args.rules),
+        attacks=_parse_tuple(args.attacks),
+        clips=_parse_tuple(args.clips),
+        byz_fracs=_parse_tuple(args.byz_fracs, float),
+        participations=_parse_tuple(args.participations, float),
+        compressors=_parse_tuple(args.compressors),
+        steps=args.steps,
+    )
+
+    print(f"{'cell':30s} {'byz':>5s} {'gap':>12s}  verdict")
+
+    def progress(c):
+        gap = "inf" if c["gap"] == float("inf") else f"{c['gap']:.4f}"
+        verdict = "converged" if c["converged"] else "BROKEN"
+        print(f"{c['key']:30s} {c['byz_frac']:5.2f} {gap:>12s}  {verdict}")
+
+    res = collect_resilience(grid, progress=progress)
+    print("\nbreakdown points (smallest byz fraction that breaks "
+          "convergence; 1.0 = survived all tested):")
+    for k, v in sorted(res["breakdown"].items()):
+        print(f"  {k:30s} {v:.2f}")
+    if args.json_out:
+        append_resilience(args.json_out, res)
+        print(f"\n[matrix] resilience block merged into {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""The in-graph attack stage.
+
+Attacks in :mod:`repro.core.attacks` are functions of an
+:class:`AttackContext` — a frozen pytree, so the stage composes with
+``jit``/``vmap``/``lax.scan`` like any other piece of the training step.
+This module provides the three forms the rest of the system consumes:
+
+- :func:`make_context` builds the context (one place computes the
+  sampled-cohort byz-majority bit both engines need);
+- :class:`AttackStage` corrupts an (n, d) message MATRIX in-graph — the
+  simulation engines (``ByzVRMarinaPP``, ``ClippedPPMomentum``) run it
+  inside their jitted step;
+- :class:`TreeAttackStage` corrupts a worker-stacked message PYTREE
+  leafwise — the mesh trainer's form.  Omniscient statistics (ALIE's
+  mu/sigma, IPM's mean) are per-coordinate, so computing them per leaf
+  is exactly equal to computing them on the flattened message while
+  never materializing a (W, d_total) buffer; per-round PRNG keys are
+  folded per leaf;
+- :class:`SyntheticCohort` is the host-side form for the streaming
+  server's synthetic clients (``launch/serve.py --mode stream`` and
+  ``benchmarks/bench_serve.py``): it draws one round's honest rows,
+  runs the same registry attack over them, and hands back the wire
+  rows — so the load generator's Byzantine clients mount real
+  omniscient attacks instead of a hardcoded 100x payload.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import Attack, AttackContext, make_attack
+
+__all__ = ["AttackStage", "TreeAttackStage", "SyntheticCohort",
+           "make_context"]
+
+
+def make_context(honest, *, good_mask, sampled, x_now=None, x_prev=None,
+                 x0=None, g_prev=None, key=None) -> AttackContext:
+    """Build an :class:`AttackContext` for one round.  Iterate fields
+    default to zeros of the message width (attacks that never read them
+    — everything but SHB — cost nothing for the placeholders)."""
+    d = honest.shape[-1]
+    zeros = jnp.zeros((d,), jnp.float32)
+    n_good_s = jnp.sum((good_mask & sampled).astype(jnp.int32))
+    n_byz_s = jnp.sum((~good_mask & sampled).astype(jnp.int32))
+    return AttackContext(
+        honest=honest,
+        good_mask=good_mask,
+        sampled=sampled,
+        x_now=zeros if x_now is None else x_now,
+        x_prev=zeros if x_prev is None else x_prev,
+        x0=zeros if x0 is None else x0,
+        g_prev=zeros if g_prev is None else g_prev,
+        byz_majority=n_byz_s > n_good_s,
+        key=jax.random.PRNGKey(0) if key is None else key,
+    )
+
+
+class AttackStage:
+    """Matrix-form stage: ``corrupt(ctx)`` returns the wire message —
+    honest rows untouched, Byzantine rows replaced by the attack
+    payload.  Runs inside the engines' jitted step."""
+
+    def __init__(self, attack):
+        self.attack: Attack = make_attack(attack)
+
+    def corrupt(self, ctx: AttackContext) -> jnp.ndarray:
+        payload = self.attack(ctx)
+        return jnp.where(ctx.good_mask[:, None], ctx.honest,
+                         payload.astype(ctx.honest.dtype))
+
+
+class TreeAttackStage:
+    """Pytree-form stage for the mesh trainer: leaves are (W, ...)
+    worker-stacked messages; the attack runs per leaf on the (W,
+    leaf_size) view with the shared cohort masks and a per-leaf folded
+    key.  Adaptive attacks optimize one whole-message payload and do not
+    decompose leafwise — they are an engine-level feature and rejected
+    here; iterate-reading attacks (SHB) need the optional iterate trees.
+    """
+
+    def __init__(self, attack):
+        self.attack: Attack = make_attack(attack)
+        if self.attack.adaptive:
+            raise ValueError(
+                f"attack {self.attack.name!r} is adaptive (whole-message "
+                "inner optimization); the mesh stage applies attacks "
+                "leafwise — run adaptive attacks through the simulation "
+                "engines (repro.core) or a ScenarioSpec there"
+            )
+
+    def corrupt_tree(self, honest_tree, *, good_mask, sampled, key,
+                     x_now=None, x0=None, x_prev=None, g_prev=None):
+        if self.attack.name == "none":
+            return honest_tree
+        if self.attack.needs_iterates and (x_now is None or x0 is None):
+            raise ValueError(
+                f"attack {self.attack.name!r} reads the iterates (x0, "
+                "x_now); pass the parameter trees (the mesh trainer does "
+                "not track x0 — pick a message-level attack there)"
+            )
+        leaves, treedef = jax.tree_util.tree_flatten(honest_tree)
+
+        def leaf_of(tree, i, width):
+            if tree is None:
+                return None
+            return jax.tree_util.tree_leaves(tree)[i].reshape(-1)[:width] \
+                .astype(jnp.float32)
+
+        out = []
+        for i, leaf in enumerate(leaves):
+            n = leaf.shape[0]
+            flat = leaf.reshape(n, -1).astype(jnp.float32)
+            ctx = make_context(
+                flat, good_mask=good_mask, sampled=sampled,
+                x_now=leaf_of(x_now, i, flat.shape[1]),
+                x_prev=leaf_of(x_prev, i, flat.shape[1]),
+                x0=leaf_of(x0, i, flat.shape[1]),
+                g_prev=leaf_of(g_prev, i, flat.shape[1]),
+                key=jax.random.fold_in(key, i),
+            )
+            payload = self.attack(ctx)
+            wire = jnp.where(good_mask[:, None], flat,
+                             payload.astype(flat.dtype))
+            out.append(wire.reshape(leaf.shape).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class SyntheticCohort:
+    """Host-side synthetic client cohort for the streaming server.
+
+    One call = one round: draw the honest rows for the given slots from
+    the caller's RNG (one ``randn`` block, so the consumption pattern is
+    deterministic), run the registry attack with the trailing
+    ``n_byz``-of-``n_slots`` slots as the colluding Byzantines, and
+    return the rows each slot puts on the wire.  Omniscient attacks see
+    exactly the sampled honest rows of the round, like in the engines.
+    """
+
+    def __init__(self, attack, *, n_slots: int, dim: int, n_byz: int,
+                 z_max: Optional[float] = None):
+        kw = {}
+        if z_max is not None and (
+                attack == "alie" or getattr(attack, "name", "") == "alie"):
+            kw["z_max"] = float(z_max)
+        self.attack: Attack = make_attack(attack, **kw)
+        self.n_slots = int(n_slots)
+        self.dim = int(dim)
+        self.n_byz = int(n_byz)
+
+    def round_rows(self, rng, slots=None) -> np.ndarray:
+        """Wire rows (k, dim) f32 for ``slots`` (default: all slots in
+        order).  ``rng`` is a ``np.random.RandomState``; it is advanced
+        by exactly one (k, dim) normal block plus one int draw."""
+        slots = np.arange(self.n_slots) if slots is None \
+            else np.asarray(slots)
+        honest = rng.randn(len(slots), self.dim).astype(np.float32)
+        seed = int(rng.randint(0, 2**31 - 1))
+        good = np.asarray(slots) < (self.n_slots - self.n_byz)
+        if self.n_byz == 0 or self.attack.name == "none" or not (~good).any():
+            return honest
+        ctx = make_context(
+            jnp.asarray(honest), good_mask=jnp.asarray(good),
+            sampled=jnp.ones((len(slots),), bool),
+            key=jax.random.PRNGKey(seed),
+        )
+        payload = np.asarray(self.attack(ctx), np.float32)
+        return np.where(good[:, None], honest, payload)

@@ -20,6 +20,7 @@ REPRO_SURFACE = {
     "CompressSpec",
     "BucketSpec",
     "AggregatorSpec",
+    "ScenarioSpec",
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",
@@ -33,6 +34,7 @@ API_SURFACE = {
     "CompressSpec",
     "BucketSpec",
     "AggregatorSpec",
+    "ScenarioSpec",
     "ScheduleSpec",
     "PlanError",
     "PlanWarning",
@@ -45,6 +47,8 @@ AGGREGATOR_SPEC_FIELDS = {"rule", "trim_ratio", "byz_bound", "m_select",
                           "tau", "iters"}
 SCHEDULE_SPEC_FIELDS = {"placement", "blocks", "superleaf_elems", "backend",
                         "worker_axes"}
+SCENARIO_SPEC_FIELDS = {"attack", "byz_frac", "z_max", "eps", "scale",
+                        "budget", "lr", "objective"}
 
 
 def test_repro_all_matches_snapshot():
@@ -84,6 +88,9 @@ def test_spec_field_snapshots():
         "kind", "k", "frac"
     }
     assert {f.name for f in dataclasses.fields(api.BucketSpec)} == {"s"}
+    assert {
+        f.name for f in dataclasses.fields(api.ScenarioSpec)
+    } == SCENARIO_SPEC_FIELDS
 
 
 def test_plan_json_version_pinned_round_trip():

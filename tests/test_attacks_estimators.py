@@ -57,6 +57,37 @@ def test_shift_back_conditional_on_majority():
     np.testing.assert_allclose(out[0], expected)
 
 
+def test_no_attack_is_identity():
+    ctx = _ctx()
+    np.testing.assert_array_equal(np.asarray(make_attack("none")(ctx)),
+                                  np.asarray(ctx.honest))
+
+
+def test_omniscient_stats_use_only_sampled_good_rows():
+    """The adversary's oracle is the SAMPLED good cohort of the round:
+    un-sampled good workers' messages must not leak into ALIE/IPM
+    statistics, and byzantine rows never contribute."""
+    ctx = _ctx()
+    # drop good worker 0 from the cohort; byz rows (4, 5) stay sampled
+    sampled = jnp.asarray([False] + [True] * 5)
+    ctx_sub = ctx.replace(sampled=sampled)
+    good_sampled = np.asarray(ctx.honest)[1:4]
+    mu = good_sampled.mean(0)
+    np.testing.assert_allclose(
+        np.asarray(make_attack("ipm")(ctx_sub))[0], -1.1 * mu,
+        rtol=1e-4, atol=1e-6)
+    sd = good_sampled.std(0)
+    np.testing.assert_allclose(
+        np.asarray(make_attack("alie")(ctx_sub))[0], mu - 1.5 * sd,
+        rtol=1e-3, atol=1e-5)
+    # perturbing the un-sampled row leaves the payload untouched
+    honest2 = ctx.honest.at[0].set(1e6)
+    out_a = np.asarray(make_attack("alie")(ctx_sub))
+    out_b = np.asarray(make_attack("alie")(
+        ctx_sub.replace(honest=honest2)))
+    np.testing.assert_array_equal(out_a[4:], out_b[4:])
+
+
 def test_lf_is_data_level():
     assert ATTACKS["lf"].data_level
     assert not ATTACKS["bf"].data_level

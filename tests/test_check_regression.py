@@ -15,6 +15,7 @@ from benchmarks.check_regression import (  # noqa: E402
     EXIT_OK,
     EXIT_REGRESSION,
     compare,
+    compare_resilience,
     main,
 )
 
@@ -156,6 +157,89 @@ def test_traffic_tier_walks_nested_blocks():
     assert [t[0] for t in traffic] == [
         "traffic_model_iterative.gm8.fused_resident_bytes"
     ]
+
+
+# ---------------------------------------------------------------------------
+# resilience tier: breakdown-point curves gate like modeled traffic
+# ---------------------------------------------------------------------------
+
+def _res(breakdown):
+    return {"grid": {"tol": 0.02}, "breakdown": breakdown}
+
+
+def test_resilience_shrinking_breakdown_point_fails(tmp_path):
+    """A breakdown point moving to a SMALLER byzantine fraction means
+    the system now breaks earlier — a robustness regression, hard-fail
+    even under --timing-warn-only (it is deterministic, not timer
+    noise)."""
+    committed = _payload(resilience=_res({"cm.shb.clip.C4.none": 1.0}))
+    fresh = _payload(resilience=_res({"cm.shb.clip.C4.none": 0.25}))
+    assert compare_resilience(committed, fresh) == [
+        ("cm.shb.clip.C4.none", 1.0, 0.25)
+    ]
+    base = _write(tmp_path, "base.json", committed)
+    fr = _write(tmp_path, "fresh.json", fresh)
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fr, "--timing-warn-only",
+               "--json-out", str(verdict)])
+    assert rc == EXIT_REGRESSION
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "regression"
+    assert v["resilience_regressions"] == [{
+        "name": "cm.shb.clip.C4.none",
+        "committed_breakdown": 1.0,
+        "fresh_breakdown": 0.25,
+    }]
+
+
+def test_resilience_growth_and_equality_pass():
+    committed = _payload(resilience=_res({"cm.gauss.clip.C4.none": 0.25}))
+    same = _payload(resilience=_res({"cm.gauss.clip.C4.none": 0.25}))
+    better = _payload(resilience=_res({"cm.gauss.clip.C4.none": 0.45}))
+    assert compare_resilience(committed, same) == []
+    assert compare_resilience(committed, better) == []
+
+
+def test_resilience_vanished_curve_fails():
+    """A committed curve missing from a fresh resilience block means a
+    robustness guarantee silently evaporated — gated like a vanished
+    traffic-model key."""
+    committed = _payload(resilience=_res({"cm.shb.clip.C4.none": 1.0,
+                                          "mean.gauss.clip.C4.none": 0.1}))
+    fresh = _payload(resilience=_res({"mean.gauss.clip.C4.none": 0.1}))
+    assert compare_resilience(committed, fresh) == [
+        ("cm.shb.clip.C4.none", 1.0, 0.0)
+    ]
+
+
+def test_resilience_tier_skips_when_fresh_has_no_block(tmp_path):
+    """The standalone kernel-only gate path writes no resilience block
+    at all; the tier must skip entirely rather than treat every
+    committed curve as vanished."""
+    committed = _payload(rows=[("kernel_a", 1000.0)],
+                         resilience=_res({"cm.shb.clip.C4.none": 1.0}))
+    fresh = _payload(rows=[("kernel_a", 1000.0)])
+    assert compare_resilience(committed, fresh) == []
+    base = _write(tmp_path, "base.json", committed)
+    fr = _write(tmp_path, "fresh.json", fresh)
+    assert main(["--baseline", base, "--fresh", fr]) == EXIT_OK
+
+
+def test_new_resilience_curves_are_informational(tmp_path):
+    """First landing of a new curve: no baseline counterpart, so it
+    surfaces in the verdict without failing the gate."""
+    base = _write(tmp_path, "base.json",
+                  _payload(resilience=_res({"cm.shb.clip.C4.none": 1.0})))
+    fresh = _write(tmp_path, "fresh.json",
+                   _payload(resilience=_res({"cm.shb.clip.C4.none": 1.0,
+                                             "rfa.alie.clip.C4.none": 0.45})))
+    verdict = tmp_path / "verdict.json"
+    rc = main(["--baseline", base, "--fresh", fresh,
+               "--json-out", str(verdict)])
+    assert rc == EXIT_OK
+    v = json.loads(verdict.read_text())
+    assert v["status"] == "ok"
+    assert v["new_resilience"] == ["rfa.alie.clip.C4.none"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,350 @@
+"""Scenario-subsystem tests: the in-graph attack stage (matrix, pytree
+and host-side forms), the adaptive gradient-ascent adversary, the
+``ScenarioSpec`` declarative surface, and the resilience matrix engine.
+
+Includes the PINNED acceptance test of the scenario engine: the adaptive
+adversary measurably degrades plain ``mean`` while every robust rule
+composed with clipping survives the same ascent budget."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    AggregatorSpec,
+    ClipSpec,
+    PlanError,
+    ScenarioSpec,
+    ScheduleSpec,
+    ServerPlan,
+)
+from repro.core.attacks import ATTACKS, Attack, AttackContext, make_attack
+from repro.scenarios import (
+    AttackStage,
+    MatrixGrid,
+    SyntheticCohort,
+    TreeAttackStage,
+    breakdown_points,
+    differentiable_aggregate,
+    make_context,
+    run_cell,
+)
+
+
+# ---------------------------------------------------------------------------
+# AttackContext: frozen + pytree (the contract the in-graph stage rides on)
+# ---------------------------------------------------------------------------
+
+def _ctx(n=12, n_byz=4, d=8, seed=3, key=1):
+    rng = np.random.RandomState(seed)
+    mu = (0.1 * rng.randn(d)).astype(np.float32)
+    honest = jnp.asarray(mu[None] + 0.05 * rng.randn(n, d).astype(np.float32))
+    good = jnp.asarray(np.arange(n) < n - n_byz)
+    return make_context(honest, good_mask=good,
+                        sampled=jnp.ones((n,), bool),
+                        key=jax.random.PRNGKey(key))
+
+
+def test_attack_context_is_frozen():
+    ctx = _ctx()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ctx.honest = jnp.zeros_like(ctx.honest)
+    # the functional update path stays open
+    ctx2 = ctx.replace(key=jax.random.PRNGKey(7))
+    assert ctx2 is not ctx and ctx2.honest is ctx.honest
+
+
+def test_attack_context_is_a_pytree():
+    ctx = _ctx()
+    n_fields = len(dataclasses.fields(AttackContext))
+    leaves, treedef = jax.tree_util.tree_flatten(ctx)
+    assert len(leaves) == n_fields  # every field is round data
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(back.honest),
+                                  np.asarray(ctx.honest))
+    # and it crosses a jit boundary whole
+    out = jax.jit(lambda c: c.honest.sum())(ctx)
+    assert np.isfinite(float(out))
+
+
+def test_bf_and_sf_are_one_implementation():
+    """Satellite: the bf/sf duplicates are deduped — both registry names
+    stay but point at the single negate-the-message function."""
+    assert ATTACKS["bf"].fn is ATTACKS["sf"].fn
+    ctx = _ctx()
+    np.testing.assert_array_equal(np.asarray(make_attack("bf")(ctx)),
+                                  np.asarray(make_attack("sf")(ctx)))
+
+
+def test_make_attack_param_binding_and_validation():
+    ctx = _ctx()
+    mild = np.asarray(make_attack("alie", z_max=0.5)(ctx))
+    harsh = np.asarray(make_attack("alie", z_max=3.0)(ctx))
+    assert not np.allclose(mild, harsh)
+    with pytest.raises(ValueError, match="takes no parameter"):
+        make_attack("bf", z_max=1.0)
+    # pre-built Attack instances pass through untouched
+    a = make_attack("gauss", scale=2.0)
+    assert make_attack(a) is a
+
+
+def test_attack_stage_leaves_good_rows_untouched():
+    ctx = _ctx()
+    wire = np.asarray(AttackStage("gauss").corrupt(ctx))
+    good = np.asarray(ctx.good_mask)
+    np.testing.assert_array_equal(wire[good], np.asarray(ctx.honest)[good])
+    assert not np.allclose(wire[~good], np.asarray(ctx.honest)[~good])
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec: validation, serialization, build
+# ---------------------------------------------------------------------------
+
+def test_scenario_spec_validates():
+    with pytest.raises(PlanError, match="unknown scenario attack"):
+        ScenarioSpec(attack="zzz")
+    with pytest.raises(PlanError, match="byz_frac"):
+        ScenarioSpec(attack="bf", byz_frac=1.5)
+    with pytest.raises(PlanError, match="budget"):
+        ScenarioSpec(attack="adaptive", budget=0)
+    with pytest.raises(PlanError, match="objective"):
+        ScenarioSpec(attack="adaptive", objective="chaos")
+
+
+def test_scenario_spec_json_roundtrip():
+    spec = ScenarioSpec(attack="alie", byz_frac=0.3, z_max=2.0)
+    back = ScenarioSpec.from_json(spec.to_json())
+    assert back == spec
+    with pytest.raises(PlanError, match="unknown scenario fields"):
+        ScenarioSpec.from_dict({"attack": "bf", "zmax": 2.0})
+
+
+def test_scenario_spec_n_byz_mapping():
+    assert ScenarioSpec(attack="bf", byz_frac=0.25).n_byz(20) == 5
+    assert ScenarioSpec(attack="bf").n_byz(20) is None
+
+
+def test_scenario_spec_build_binds_params():
+    ctx = _ctx()
+    spec = ScenarioSpec(attack="alie", z_max=3.0)
+    np.testing.assert_array_equal(
+        np.asarray(spec.build()(ctx)),
+        np.asarray(make_attack("alie", z_max=3.0)(ctx)))
+
+
+def test_adaptive_spec_requires_a_plan():
+    with pytest.raises(PlanError, match="pass the ServerPlan"):
+        ScenarioSpec(attack="adaptive").build()
+    plan = ServerPlan(aggregate=AggregatorSpec("cm", byz_bound=2))
+    attack = ScenarioSpec(attack="adaptive", budget=2).build(plan)
+    assert isinstance(attack, Attack) and attack.adaptive
+    # autogm forces the min-max descent objective
+    assert ScenarioSpec(attack="autogm").build(plan).name == "autogm"
+
+
+# ---------------------------------------------------------------------------
+# adaptive adversary: gradients flow through both backend paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_gradients_flow_through_differentiable_aggregate(backend):
+    """jnp plans differentiate directly; pallas plans pair the fused
+    forward with the jnp-shadow backward through custom_vjp — both must
+    yield finite, non-zero payload gradients."""
+    ctx = _ctx()
+    plan = ServerPlan(
+        aggregate=AggregatorSpec("cm", byz_bound=4),
+        clip=ClipSpec(radius=0.5),
+        schedule=ScheduleSpec(backend=backend),
+    )
+    agg = differentiable_aggregate(plan)
+
+    def damage(msgs):
+        out = agg(msgs, mask=ctx.sampled, key=ctx.key,
+                  radius=jnp.float32(0.5))
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(damage)(ctx.honest.astype(jnp.float32))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.linalg.norm(g)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# PINNED acceptance: adaptive degrades mean; robust + clip survives
+# ---------------------------------------------------------------------------
+
+def _adaptive_deviation(ctx, rule, *, clip, budget=16, radius=0.5):
+    """Aggregate deviation from the good mean under the adaptive
+    adversary optimized against THIS plan with the given budget."""
+    n_byz = int(np.sum(~np.asarray(ctx.good_mask)))
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule, byz_bound=n_byz),
+        clip=ClipSpec(radius=radius) if clip else None,
+        schedule=ScheduleSpec(backend="jnp"),
+    )
+    attack = ScenarioSpec(attack="adaptive", budget=budget).build(plan)
+    msgs = AttackStage(attack).corrupt(ctx)
+    out = plan.build()(msgs, mask=ctx.sampled, key=ctx.key)
+    mu_good = jnp.mean(ctx.honest[np.asarray(ctx.good_mask)], axis=0)
+    return float(jnp.linalg.norm(out - mu_good))
+
+
+def test_adaptive_degrades_mean_but_not_robust_plus_clip():
+    """The scenario engine's acceptance pin: under the SAME ascent
+    budget the gradient-ascent adversary drags a plain-mean server far
+    off the good mean, while every differentiable robust rule composed
+    with clipping keeps the aggregate close."""
+    ctx = _ctx()
+    dev_mean = _adaptive_deviation(ctx, "mean", clip=False)
+    assert dev_mean > 0.6  # measurably degraded (good rows have norm ~0.3)
+    for rule in ("cm", "rfa", "centered_clip"):
+        dev = _adaptive_deviation(ctx, rule, clip=True)
+        assert dev < 0.3, (rule, dev)
+        assert dev_mean > 2.5 * dev, (rule, dev_mean, dev)
+
+
+# ---------------------------------------------------------------------------
+# omniscient attacks: bitwise trajectory equality across backends
+# ---------------------------------------------------------------------------
+
+def _attacked_trace(prob, rule, backend, *, steps=15):
+    from repro.core import ByzVRMarinaPP, MarinaPPConfig
+
+    plan = ServerPlan(
+        aggregate=AggregatorSpec(rule),
+        clip=ClipSpec(alpha=2.0),
+        schedule=ScheduleSpec(backend=backend),
+    )
+    cfg = MarinaPPConfig(gamma=0.05, p=0.25, C=4, C_hat=12, batch=16,
+                         plan=plan, scenario=ScenarioSpec(attack="alie"))
+    alg = ByzVRMarinaPP(prob, cfg)
+    _, metrics = jax.jit(lambda s: alg.run(steps, s))(alg.init())
+    return np.asarray(metrics["loss"])
+
+
+@pytest.mark.parametrize("rule", ["cm", "krum"])
+def test_omniscient_trajectories_bitwise_across_backends(rule):
+    """An omniscient-attack (ALIE) training trajectory must be BITWISE
+    identical between the jnp and pallas backends for the non-iterative
+    selection rules — the attack stage adds no backend-dependent ops."""
+    from repro.core import logistic_problem
+
+    prob = logistic_problem(jax.random.PRNGKey(0), n_clients=12, n_good=9,
+                            m=60, dim=20, homogeneous=False)
+    tj = _attacked_trace(prob, rule, "jnp")
+    tp = _attacked_trace(prob, rule, "pallas")
+    np.testing.assert_array_equal(tj, tp)
+    assert np.isfinite(tj).all()
+
+
+# ---------------------------------------------------------------------------
+# TreeAttackStage: leafwise == whole-message for per-coordinate attacks
+# ---------------------------------------------------------------------------
+
+def test_tree_stage_matches_flat_matrix_for_alie():
+    """ALIE's mu/sigma are per-coordinate, so corrupting the stacked
+    pytree leaf-by-leaf equals corrupting the flattened (W, d_total)
+    message — the identity the mesh trainer's stage relies on to avoid
+    materializing the concatenated buffer."""
+    n = 10
+    rng = np.random.RandomState(0)
+    tree = {
+        "w": jnp.asarray(rng.randn(n, 3, 2).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(n, 4).astype(np.float32)),
+    }
+    good = jnp.asarray(np.arange(n) < 7)
+    sampled = jnp.ones((n,), bool)
+    key = jax.random.PRNGKey(5)
+
+    out = TreeAttackStage("alie").corrupt_tree(
+        tree, good_mask=good, sampled=sampled, key=key)
+
+    flat = jnp.concatenate(
+        [jax.tree_util.tree_leaves(tree)[i].reshape(n, -1)
+         for i in range(2)], axis=1)
+    ctx = make_context(flat, good_mask=good, sampled=sampled, key=key)
+    wire = AttackStage("alie").corrupt(ctx)
+    got = jnp.concatenate(
+        [jax.tree_util.tree_leaves(out)[i].reshape(n, -1)
+         for i in range(2)], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(wire),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_tree_stage_rejects_adaptive_and_iterate_attacks():
+    plan = ServerPlan(aggregate=AggregatorSpec("cm", byz_bound=2))
+    adaptive = ScenarioSpec(attack="adaptive").build(plan)
+    with pytest.raises(ValueError, match="adaptive"):
+        TreeAttackStage(adaptive)
+    stage = TreeAttackStage("shb")
+    with pytest.raises(ValueError, match="iterates"):
+        stage.corrupt_tree({"w": jnp.ones((4, 3))},
+                           good_mask=jnp.asarray([True, True, False, False]),
+                           sampled=jnp.ones((4,), bool),
+                           key=jax.random.PRNGKey(0))
+
+
+def test_tree_stage_none_is_identity():
+    tree = {"w": jnp.ones((4, 3))}
+    out = TreeAttackStage("none").corrupt_tree(
+        tree, good_mask=jnp.zeros((4,), bool),
+        sampled=jnp.ones((4,), bool), key=jax.random.PRNGKey(0))
+    assert out["w"] is tree["w"]
+
+
+# ---------------------------------------------------------------------------
+# SyntheticCohort: the streaming server's host-side form
+# ---------------------------------------------------------------------------
+
+def test_synthetic_cohort_is_deterministic_per_rng():
+    gen = SyntheticCohort("alie", n_slots=8, dim=6, n_byz=3, z_max=2.0)
+    a = gen.round_rows(np.random.RandomState([7, 0]))
+    b = gen.round_rows(np.random.RandomState([7, 0]))
+    np.testing.assert_array_equal(a, b)
+    c = gen.round_rows(np.random.RandomState([7, 1]))
+    assert not np.allclose(a, c)
+
+
+def test_synthetic_cohort_corrupts_only_trailing_byz_slots():
+    n, n_byz = 8, 3
+    rng_a, rng_b = np.random.RandomState(1), np.random.RandomState(1)
+    wire = SyntheticCohort("gauss", n_slots=n, dim=6,
+                           n_byz=n_byz).round_rows(rng_a)
+    honest = SyntheticCohort("none", n_slots=n, dim=6,
+                             n_byz=n_byz).round_rows(rng_b)
+    np.testing.assert_array_equal(wire[: n - n_byz], honest[: n - n_byz])
+    assert not np.allclose(wire[n - n_byz:], honest[n - n_byz:])
+
+
+# ---------------------------------------------------------------------------
+# resilience matrix engine
+# ---------------------------------------------------------------------------
+
+def test_breakdown_points_reduction():
+    cells = [
+        {"key": "cm.shb.clip.C4.none", "byz_frac": f, "converged": c}
+        for f, c in ((0.1, True), (0.25, True), (0.45, True))
+    ] + [
+        {"key": "mean.gauss.noclip.C4.none", "byz_frac": f, "converged": c}
+        for f, c in ((0.1, True), (0.25, False), (0.45, False))
+    ]
+    bp = breakdown_points(cells)
+    assert bp["cm.shb.clip.C4.none"] == 1.0  # survived all tested
+    assert bp["mean.gauss.noclip.C4.none"] == 0.25  # smallest broken frac
+
+
+def test_run_cell_validates_clip_axis():
+    with pytest.raises(ValueError, match="clip"):
+        run_cell(MatrixGrid(), rule="cm", attack="gauss", byz_frac=0.1,
+                 participation=0.2, clip="sometimes")
+
+
+def test_run_cell_smoke():
+    grid = MatrixGrid(steps=5, n_clients=8, dim=10, m=40)
+    cell = run_cell(grid, rule="cm", attack="bf", byz_frac=0.25,
+                    participation=0.5)
+    assert cell["key"] == "cm.bf.clip.C4.none"
+    assert cell["n_byz"] == 2
+    assert np.isfinite(cell["gap"]) and isinstance(cell["converged"], bool)
